@@ -1,0 +1,72 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) vs jnp oracle.
+
+On CPU the interesting number is the ORACLE timing (the XLA path the models
+actually use here); kernel timings are interpret-mode and only prove the
+kernel logic — TPU-native timings require a TPU backend.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _block(out):
+    for leaf in jax.tree.leaves(out):
+        leaf.block_until_ready()
+
+
+def _time(fn: Callable, *args, reps: int = 5) -> float:
+    _block(fn(*args))  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        _block(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def bench_rows() -> List[Tuple[str, float, str]]:
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    B, H, S, D = 1, 4, 1024, 64
+    q, k, v = (jax.random.normal(jax.random.fold_in(key, i), (B, H, S, D),
+                                 jnp.float32) for i in range(3))
+    t_ref = _time(lambda: ref.flash_attention_ref(q, k, v))
+    flops = 4 * B * H * S * S * D
+    rows.append(("flash_attention_oracle_1k", t_ref,
+                 f"gflops/s={flops / t_ref / 1e3:.1f}"))
+    t_pal = _time(lambda: ops.flash_attention(q, k, v))
+    rows.append(("flash_attention_pallas_interp_1k", t_pal,
+                 f"vs_oracle={t_pal / t_ref:.1f}x"))
+
+    Bz, S2, di, ds = 1, 256, 512, 16
+    x = jax.random.normal(key, (Bz, S2, di))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (Bz, S2, di)))
+    Bm = jax.random.normal(jax.random.fold_in(key, 2), (Bz, S2, ds))
+    Cm = jax.random.normal(jax.random.fold_in(key, 3), (Bz, S2, ds))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 4), (di, ds)))
+    Dp = jnp.ones((di,))
+    t_ref = _time(lambda: ref.selective_scan_ref(x, dt, Bm, Cm, A, Dp))
+    rows.append(("selective_scan_oracle_256", t_ref,
+                 f"elems/us={Bz * S2 * di / t_ref:.0f}"))
+    t_pal = _time(lambda: ops.selective_scan(x, dt, Bm, Cm, A, Dp))
+    rows.append(("selective_scan_pallas_interp_256", t_pal,
+                 f"vs_oracle={t_pal / t_ref:.1f}x"))
+
+    N, K = 262_144, 100
+    util = jax.random.uniform(key, (N,))
+    power = jax.random.uniform(jax.random.fold_in(key, 1), (N,))
+    valid = jnp.ones((N,), bool)
+    t_ref = _time(lambda: ref.topk_reward_ref(util, power, valid, 0.25, K))
+    rows.append(("topk_select_oracle_256k", t_ref,
+                 f"clients/us={N / t_ref:.0f}"))
+    t_pal = _time(lambda: ops.topk_reward(util, power, valid, f=0.25, k=K,
+                                          block_n=65536))
+    rows.append(("topk_select_pallas_interp_256k", t_pal,
+                 f"vs_oracle={t_pal / t_ref:.1f}x"))
+    return rows

@@ -1,0 +1,44 @@
+"""EAFL selection at production scale: the Pallas top-k reward kernel
+against a one-million-client population, validated against the jnp oracle.
+
+  PYTHONPATH=src python examples/million_client_selection.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def main():
+    N, K, F = 1_048_576, 100, 0.25
+    key = jax.random.PRNGKey(0)
+    util = jax.random.uniform(key, (N,))
+    power = jax.random.uniform(jax.random.fold_in(key, 1), (N,))
+    valid = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.97, (N,))
+
+    t0 = time.time()
+    ev, ei = ref.topk_reward_ref(util, power, valid, F, K)
+    ev.block_until_ready()
+    t_ref = time.time() - t0
+
+    t0 = time.time()
+    tv, ti = ops.topk_reward(util, power, valid, f=F, k=K, block_n=65536)
+    tv.block_until_ready()
+    t_kernel = time.time() - t0
+
+    assert jnp.allclose(tv, ev, atol=1e-6), "kernel != oracle"
+    assert set(ti.tolist()) == set(ei.tolist())
+    print(f"selected {K} of {N:,} clients")
+    print(f"oracle  : {t_ref*1e3:8.1f} ms")
+    print(f"kernel  : {t_kernel*1e3:8.1f} ms (interpret mode on CPU; "
+          f"TPU-native when backend=tpu)")
+    print("top-5 rewards:", [round(float(v), 4) for v in tv[:5]])
+
+
+if __name__ == "__main__":
+    main()

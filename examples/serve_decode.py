@@ -1,0 +1,14 @@
+"""Batched serving demo: prefill + cached decode, full and sliding-window.
+
+  PYTHONPATH=src python examples/serve_decode.py --arch phi3-mini-3.8b
+"""
+import subprocess
+import sys
+
+sys.path.insert(0, "src")
+
+if __name__ == "__main__":
+    args = sys.argv[1:] or ["--arch", "phi3-mini-3.8b", "--batch", "2",
+                            "--prompt-len", "16", "--gen", "8"]
+    subprocess.run([sys.executable, "-m", "repro.launch.serve"] + args,
+                   check=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})

@@ -1,0 +1,79 @@
+"""Dump per-collective contributions for one (arch, shape): op, computation,
+trip multiplier, bytes, weighted cost. Usage:
+  PYTHONPATH=src python scripts/roofline_debug.py <arch> <shape>
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import re
+import sys
+
+from repro.launch.dryrun import lower_one
+from repro.launch.roofline import (
+    _COLLECTIVES, _COMP_RE, _CONST_RE, _GROUPS_RE, _OP_RE, _WHILE_RE,
+    shape_bytes,
+)
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    strategy = sys.argv[3] if len(sys.argv) > 3 else "baseline"
+    multi = len(sys.argv) > 4 and sys.argv[4] == "multi"
+    cfg, shp, mesh, lowered = lower_one(arch, shape, multi, strategy=strategy)
+    txt = lowered.compile().as_text()
+
+    comp_ops, cur, entry = {}, None, None
+    for raw in txt.splitlines():
+        line = raw.rstrip()
+        m = _COMP_RE.match(line.strip()) if not line.startswith(" ") else None
+        if m and (line.startswith("%") or line.startswith("ENTRY")):
+            cur = m.group(1)
+            comp_ops[cur] = []
+            if line.startswith("ENTRY"):
+                entry = cur
+            continue
+        if cur and _OP_RE.match(line):
+            comp_ops[cur].append(line.strip())
+
+    mult = {c: 0.0 for c in comp_ops}
+    mult[entry] = 1.0
+    edges = []
+    for comp, ops in comp_ops.items():
+        for op in ops:
+            wm = _WHILE_RE.search(op)
+            if wm:
+                cond, body = wm.groups()
+                consts = [int(c) for c in _CONST_RE.findall(
+                    "\n".join(comp_ops.get(cond, [])))]
+                trip = max(consts) if consts else 1
+                edges.append((comp, body, max(trip, 1), cond))
+    for _ in range(12):
+        for parent, body, trip, _c in edges:
+            mult[body] = max(mult[body], mult.get(parent, 0.0) * trip)
+
+    print("WHILE edges:")
+    for parent, body, trip, cond in edges:
+        print(f"  {parent} -> {body} trip={trip} (cond={cond}) "
+              f"mult={mult.get(body):.0f}")
+    rows = []
+    for comp, ops in comp_ops.items():
+        m = mult.get(comp, 0.0) or (1.0 if comp == entry else 0.0)
+        for op in ops:
+            for cname in _COLLECTIVES:
+                if f" {cname}(" in op or f" {cname}-start(" in op:
+                    nbytes = shape_bytes(op.split(f" {cname}")[0].split("=", 1)[-1])
+                    gm = _GROUPS_RE.search(op)
+                    g = int(gm.group(2)) if gm else 1
+                    rows.append((m * nbytes, cname, g, m, nbytes, comp,
+                                 op[:110]))
+    rows.sort(reverse=True)
+    tot = sum(r[0] for r in rows)
+    print(f"\ntotal raw weighted bytes: {tot:.3e}")
+    for w, cname, g, m, nb, comp, op in rows[:25]:
+        print(f"  {w:.3e} ({100*w/tot:4.1f}%) {cname} g={g} mult={m:.0f} "
+              f"bytes={nb:.2e} [{comp[:40]}]")
+        print(f"      {op}")
+
+
+if __name__ == "__main__":
+    main()

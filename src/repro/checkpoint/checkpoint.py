@@ -1,0 +1,61 @@
+"""Msgpack pytree checkpointing (orbax/flax unavailable offline).
+
+Arrays are serialized as (dtype, shape, raw bytes); the pytree structure is
+encoded as nested dicts/lists. Round/step metadata rides along.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_ARR = "__arr__"
+
+
+def _pack(obj):
+    if isinstance(obj, (jnp.ndarray, np.ndarray)):
+        a = np.asarray(obj)
+        return {_ARR: True, "d": a.dtype.str, "s": list(a.shape),
+                "b": a.tobytes()}
+    if isinstance(obj, dict):
+        return {k: _pack(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return {"__list__": [_pack(v) for v in obj],
+                "__tuple__": isinstance(obj, tuple)}
+    if obj is None or isinstance(obj, (int, float, str, bool)):
+        return obj
+    raise TypeError(f"cannot checkpoint {type(obj)}")
+
+
+def _unpack(obj):
+    if isinstance(obj, dict):
+        if obj.get(_ARR):
+            a = np.frombuffer(obj["b"], dtype=np.dtype(obj["d"]))
+            return jnp.asarray(a.reshape(obj["s"]))
+        if "__list__" in obj:
+            vals = [_unpack(v) for v in obj["__list__"]]
+            return tuple(vals) if obj.get("__tuple__") else vals
+        return {k: _unpack(v) for k, v in obj.items()}
+    return obj
+
+
+def save_checkpoint(path: str, params: Any, step: int = 0,
+                    extra: Optional[Dict[str, Any]] = None) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    payload = {"step": step, "params": _pack(params),
+               "extra": _pack(extra or {})}
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str) -> Tuple[Any, int, Dict[str, Any]]:
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
+    return (_unpack(payload["params"]), payload["step"],
+            _unpack(payload["extra"]))

@@ -1,0 +1,9 @@
+from repro.compression.codecs import (
+    CODECS,
+    CompressionResult,
+    compress_delta,
+    compression_ratio,
+)
+
+__all__ = ["CODECS", "CompressionResult", "compress_delta",
+           "compression_ratio"]

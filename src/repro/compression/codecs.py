@@ -1,0 +1,74 @@
+"""Model-update compression for upload-energy reduction.
+
+EAFL's comm-energy model (Table 1) charges battery per second of upload;
+compressing client deltas shrinks upload time and therefore battery spend —
+a beyond-paper extension in the spirit of the authors' own compression line
+(DC2, GRACE). Codecs are lossy-but-unbiased-ish and return BOTH the
+decompressed (approximate) delta used for aggregation and the wire-size
+ratio fed to the energy simulation.
+
+Codecs:
+  none    identity (ratio 1.0)
+  int8    per-tensor absmax int8 quantization (ratio ~0.25)
+  topk    magnitude top-k sparsification, k = sparsity*n
+          (ratio ~ sparsity * 2: values + indices)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass
+class CompressionResult:
+    delta: PyTree          # decompressed (approximate) update
+    wire_ratio: float      # uploaded bytes / raw float32 bytes
+
+
+def _identity(delta: PyTree) -> CompressionResult:
+    return CompressionResult(delta, 1.0)
+
+
+def _int8(delta: PyTree) -> CompressionResult:
+    def q(x):
+        if x.ndim == 0:
+            return x
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+        return jnp.round(x / scale).astype(jnp.int8).astype(x.dtype) * scale
+
+    return CompressionResult(jax.tree.map(q, delta), 0.25)
+
+
+def _topk(delta: PyTree, sparsity: float = 0.05) -> CompressionResult:
+    def s(x):
+        if x.ndim == 0 or x.size < 32:
+            return x
+        flat = x.ravel()
+        k = max(1, int(sparsity * flat.size))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+
+    # wire: k values (4B) + k int32 indices (4B) per float32 tensor
+    return CompressionResult(jax.tree.map(s, delta), sparsity * 2.0)
+
+
+CODECS: Dict[str, Callable[[PyTree], CompressionResult]] = {
+    "none": _identity,
+    "int8": _int8,
+    "topk": _topk,
+}
+
+
+def compress_delta(name: str, delta: PyTree) -> CompressionResult:
+    if name not in CODECS:
+        raise KeyError(f"unknown codec {name!r}; known: {sorted(CODECS)}")
+    return CODECS[name](delta)
+
+
+def compression_ratio(name: str) -> float:
+    return {"none": 1.0, "int8": 0.25, "topk": 0.1}[name]

@@ -1,0 +1,62 @@
+"""Architecture config registry.
+
+``get_config(arch_id)`` returns the exact published spec; ``get_reduced``
+returns the CPU-smoke variant. ``ARCH_IDS`` lists the 10 assigned
+architectures (the paper's own ResNet workload is separate:
+``paper_resnet_speech``).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import (
+    INPUT_SHAPES,
+    MULTI_POD,
+    SINGLE_POD,
+    TPU_V5E,
+    HardwareSpec,
+    InputShape,
+    MeshConfig,
+    ModelConfig,
+)
+
+_MODULES: Dict[str, str] = {
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "olmo-1b": "olmo_1b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "falcon-mamba-7b": "falcon_mamba_7b",
+    "internvl2-2b": "internvl2_2b",
+    "minicpm3-4b": "minicpm3_4b",
+    "musicgen-large": "musicgen_large",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_reduced(arch_id: str) -> ModelConfig:
+    return _module(arch_id).reduced()
+
+
+def get_shape(name: str) -> InputShape:
+    return INPUT_SHAPES[name]
+
+
+__all__ = [
+    "ARCH_IDS", "get_config", "get_reduced", "get_shape",
+    "ModelConfig", "InputShape", "MeshConfig", "HardwareSpec",
+    "INPUT_SHAPES", "SINGLE_POD", "MULTI_POD", "TPU_V5E",
+]

@@ -1,0 +1,29 @@
+"""musicgen-large — decoder-only over EnCodec tokens. [arXiv:2306.05284]
+
+EnCodec frontend is a stub per the brief: the decoder consumes 4 parallel
+codebook token streams (vocab 2048 each, summed embeddings in, per-codebook
+logit heads out, delay-pattern handled by the data pipeline).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    arch_type="audio",
+    source="arXiv:2306.05284",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=2048,
+    attn_kind="gqa",
+    act="gelu",
+    frontend="audio",
+    n_codebooks=4,
+    tie_embeddings=False,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.with_(n_layers=2, d_model=256, n_heads=4, n_kv_heads=4,
+                        d_ff=512, vocab_size=128, n_codebooks=2)

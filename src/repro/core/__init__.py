@@ -1,0 +1,19 @@
+"""The paper's primary contribution: energy-aware client selection (EAFL)."""
+from repro.core.clients import ClientPopulation, make_population, round_times
+from repro.core.energy import EnergyModel
+from repro.core.fairness import jains_index, participation_rate
+from repro.core.rewards import (
+    eafl_reward,
+    oort_utility,
+    projected_power,
+    stat_utility,
+    system_penalty,
+)
+from repro.core.selection import SelectorConfig, SelectorState, select
+
+__all__ = [
+    "ClientPopulation", "make_population", "round_times", "EnergyModel",
+    "jains_index", "participation_rate", "eafl_reward", "oort_utility",
+    "projected_power", "stat_utility", "system_penalty",
+    "SelectorConfig", "SelectorState", "select",
+]

@@ -1,0 +1,114 @@
+"""Client population state: struct-of-arrays over N clients.
+
+Profiles follow the paper's setup: each client is mapped to one of the three
+Table-2 device categories (high/mid/low-end) and to a network medium
+(WiFi / 3G) with MobiPerf-style heavy-tailed bandwidths.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import energy
+
+
+@dataclass
+class ClientPopulation:
+    """All per-client scalars, shape (N,)."""
+
+    category: jnp.ndarray        # int32 in {0,1,2}
+    network: jnp.ndarray         # int32 in {0 wifi, 1 3g}
+    down_mbps: jnp.ndarray       # f32
+    up_mbps: jnp.ndarray         # f32
+    battery_pct: jnp.ndarray     # f32 in [0,100]
+    stat_util: jnp.ndarray       # f32 Oort statistical utility (last observed)
+    last_duration: jnp.ndarray   # f32 seconds (last observed round time t_i)
+    explored: jnp.ndarray        # bool, participated at least once
+    last_round: jnp.ndarray      # int32, round of last participation
+    times_selected: jnp.ndarray  # int32
+    dropped: jnp.ndarray         # bool, battery ran out (unavailable)
+    n_samples: jnp.ndarray       # int32 local dataset size
+
+    @property
+    def n(self) -> int:
+        return int(self.category.shape[0])
+
+    @property
+    def alive(self) -> jnp.ndarray:
+        return (~self.dropped) & (self.battery_pct > 0.0)
+
+    def replace(self, **kw) -> "ClientPopulation":
+        return replace(self, **kw)
+
+    def tree_flatten(self):
+        return tuple(getattr(self, f) for f in _FIELDS), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+_FIELDS = ("category", "network", "down_mbps", "up_mbps", "battery_pct",
+           "stat_util", "last_duration", "explored", "last_round",
+           "times_selected", "dropped", "n_samples")
+
+jax.tree_util.register_pytree_node(
+    ClientPopulation,
+    ClientPopulation.tree_flatten,
+    ClientPopulation.tree_unflatten)
+
+
+def make_population(key, n_clients: int,
+                    category_probs=(0.25, 0.45, 0.30),
+                    wifi_prob: float = 0.6,
+                    init_battery_low: float = 60.0,
+                    init_battery_high: float = 100.0,
+                    samples_per_client: int = 128) -> ClientPopulation:
+    """Synthesize an AI-Benchmark/MobiPerf-style heterogeneous population."""
+    ks = jax.random.split(key, 6)
+    category = jax.random.choice(ks[0], 3, (n_clients,),
+                                 p=jnp.array(category_probs)).astype(jnp.int32)
+    network = (jax.random.uniform(ks[1], (n_clients,)) > wifi_prob).astype(jnp.int32)
+    # MobiPerf-like heavy-tailed throughput (log-normal), wifi faster than 3g
+    base_down = jnp.where(network == 0, 40.0, 6.0)
+    base_up = jnp.where(network == 0, 15.0, 2.0)
+    ln_d = jnp.exp(0.6 * jax.random.normal(ks[2], (n_clients,)))
+    ln_u = jnp.exp(0.6 * jax.random.normal(ks[3], (n_clients,)))
+    battery = jax.random.uniform(ks[4], (n_clients,),
+                                 minval=init_battery_low,
+                                 maxval=init_battery_high)
+    return ClientPopulation(
+        category=category,
+        network=network,
+        down_mbps=base_down * ln_d,
+        up_mbps=base_up * ln_u,
+        battery_pct=battery,
+        stat_util=jnp.zeros((n_clients,), jnp.float32),
+        last_duration=jnp.full((n_clients,), 1.0, jnp.float32),
+        explored=jnp.zeros((n_clients,), bool),
+        last_round=jnp.zeros((n_clients,), jnp.int32),
+        times_selected=jnp.zeros((n_clients,), jnp.int32),
+        dropped=jnp.zeros((n_clients,), bool),
+        n_samples=jnp.full((n_clients,), samples_per_client, jnp.int32),
+    )
+
+
+def round_times(pop: ClientPopulation, model_bytes: float,
+                local_steps: int, batch_size: int,
+                up_bytes: float = None) -> Dict[str, jnp.ndarray]:
+    """Per-client download / compute / upload seconds for one round.
+
+    ``up_bytes`` defaults to the full model (FedAvg); update compression
+    (repro.compression) shrinks it and with it the upload battery cost.
+    """
+    if up_bytes is None:
+        up_bytes = model_bytes
+    t_down = model_bytes * 8 / (pop.down_mbps * 1e6)
+    t_up = up_bytes * 8 / (pop.up_mbps * 1e6)
+    sps = energy.samples_per_sec(pop.category)
+    t_comp = local_steps * batch_size / sps
+    return {"down": t_down, "comp": t_comp, "up": t_up,
+            "total": t_down + t_comp + t_up}

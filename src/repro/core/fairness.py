@@ -1,0 +1,20 @@
+"""Fairness / participation metrics (paper Fig. 3c)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def jains_index(x: jnp.ndarray) -> jnp.ndarray:
+    """Jain's fairness index over per-client participation counts.
+
+    J = (sum x)^2 / (n * sum x^2); 1/n (unfair) .. 1 (perfectly fair).
+    """
+    x = x.astype(jnp.float32)
+    n = x.shape[0]
+    s = jnp.sum(x)
+    s2 = jnp.sum(jnp.square(x))
+    return jnp.where(s2 > 0, jnp.square(s) / (n * s2), 1.0)
+
+
+def participation_rate(success_count: int, k: int) -> float:
+    return success_count / max(k, 1)

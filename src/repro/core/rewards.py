@@ -1,0 +1,62 @@
+"""EAFL reward (Eq. 1) and Oort utility (Eq. 2).
+
+Eq. 2 (Oort):  Util(i) = |B_i| * sqrt(mean_k Loss(k)^2) * (T/t_i)^{1(T<t_i)*alpha}
+Eq. 1 (EAFL):  reward(i) = f * Util(i) + (1-f) * power(i)
+
+``power(i) = cur_battery_level(i) - battery_used(i)`` — the projected
+remaining battery after the upcoming round.
+
+The two parts of Eq. 1 live on different scales (Util is unbounded, power is
+a percentage); the paper combines them directly after weighting. To make the
+trade-off weight ``f`` meaningful across workloads we min-max normalise each
+part over the candidate set before mixing — this preserves the paper's
+ordering semantics (as f->0 the ranking degenerates to pure remaining-power
+ordering, as f->1 to pure Oort) and is recorded as an implementation choice
+in DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stat_utility(per_sample_loss: jnp.ndarray, n_samples) -> jnp.ndarray:
+    """|B_i| * sqrt(mean loss^2) over a client's local batch (Eq. 2, left)."""
+    rms = jnp.sqrt(jnp.mean(jnp.square(per_sample_loss), axis=-1))
+    return n_samples * rms
+
+
+def system_penalty(T: jnp.ndarray, t_i: jnp.ndarray, alpha: float = 2.0):
+    """(T/t_i)^{1(T<t_i)*alpha} — penalise clients slower than the pacer T."""
+    slow = t_i > T
+    pen = jnp.power(jnp.maximum(T, 1e-9) / jnp.maximum(t_i, 1e-9), alpha)
+    return jnp.where(slow, pen, 1.0)
+
+
+def oort_utility(stat_util: jnp.ndarray, t_i: jnp.ndarray, T,
+                 alpha: float = 2.0) -> jnp.ndarray:
+    return stat_util * system_penalty(T, t_i, alpha)
+
+
+def projected_power(battery_pct: jnp.ndarray,
+                    predicted_round_cost_pct: jnp.ndarray) -> jnp.ndarray:
+    """power(i): remaining battery % after the upcoming round (floored at 0)."""
+    return jnp.maximum(battery_pct - predicted_round_cost_pct, 0.0)
+
+
+def _minmax(x, valid):
+    big = jnp.where(valid, x, -jnp.inf)
+    small = jnp.where(valid, x, jnp.inf)
+    lo, hi = jnp.min(small), jnp.max(big)
+    rng = jnp.maximum(hi - lo, 1e-9)
+    return jnp.where(valid, (x - lo) / rng, 0.0)
+
+
+def eafl_reward(util: jnp.ndarray, power: jnp.ndarray, f: float,
+                valid: jnp.ndarray, normalize: bool = True) -> jnp.ndarray:
+    """Eq. 1. ``valid`` masks selectable clients (alive & available)."""
+    if normalize:
+        util = _minmax(util, valid)
+        power = _minmax(power, valid)
+    r = f * util + (1.0 - f) * power
+    return jnp.where(valid, r, -jnp.inf)

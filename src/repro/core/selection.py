@@ -1,0 +1,138 @@
+"""Client selectors: EAFL (the paper), Oort, and Random.
+
+EAFL and Oort share the exploration/exploitation skeleton (Oort OSDI'21,
+which EAFL modifies *only* in the reward definition, Eq. 1):
+
+  - an epsilon fraction of the K slots explores unexplored clients,
+    epsilon decaying per round;
+  - the rest exploits: top-reward explored clients, with a UCB-style
+    staleness bonus so long-unselected clients get re-examined;
+  - a pacer maintains the developer-preferred round duration T used by the
+    system-efficiency penalty in Eq. 2.
+
+Selection runs eagerly on host once per round (the population is small next
+to the training step); ``repro.kernels.topk_select`` provides the Pallas
+TPU kernel for million-client populations.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rewards
+from repro.core.clients import ClientPopulation
+
+
+@dataclass
+class SelectorConfig:
+    kind: str                     # eafl | oort | random | eafl-epj
+    k: int = 10
+    f: float = 0.25               # Eq. 1 mixing weight (paper uses 0.25)
+    alpha: float = 2.0            # Eq. 2 straggler penalty exponent
+    epsilon0: float = 0.9
+    epsilon_decay: float = 0.98
+    epsilon_min: float = 0.2
+    ucb_c: float = 0.1
+    pacer_t0: float = 120.0       # initial preferred round duration (s)
+    pacer_delta: float = 30.0
+    pacer_max: float = 1800.0
+    normalize_reward: bool = True
+
+
+@dataclass
+class SelectorState:
+    round: int = 0
+    epsilon: float = 0.9
+    pacer_T: float = 120.0
+    util_ema: float = 0.0
+
+    @classmethod
+    def create(cls, cfg: SelectorConfig) -> "SelectorState":
+        return cls(round=0, epsilon=cfg.epsilon0, pacer_T=cfg.pacer_t0)
+
+
+def _ucb_bonus(cfg, pop: ClientPopulation, rnd: int) -> jnp.ndarray:
+    age = jnp.maximum(rnd - pop.last_round, 1)
+    return cfg.ucb_c * jnp.sqrt(jnp.log(float(rnd) + 1.0) / age)
+
+
+def compute_scores(cfg: SelectorConfig, state: SelectorState,
+                   pop: ClientPopulation,
+                   predicted_cost_pct: jnp.ndarray) -> jnp.ndarray:
+    """Per-client selection score for the exploitation slots."""
+    util = rewards.oort_utility(pop.stat_util, pop.last_duration,
+                                state.pacer_T, cfg.alpha)
+    valid = pop.alive
+    if cfg.kind == "oort":
+        score = jnp.where(valid, util * (1.0 + _ucb_bonus(cfg, pop, state.round)),
+                          -jnp.inf)
+    elif cfg.kind == "eafl":
+        power = rewards.projected_power(pop.battery_pct, predicted_cost_pct)
+        score = rewards.eafl_reward(util, power, cfg.f, valid,
+                                    cfg.normalize_reward)
+        score = jnp.where(valid, score * (1.0 + _ucb_bonus(cfg, pop, state.round)),
+                          -jnp.inf)
+    elif cfg.kind == "eafl-epj":
+        # beyond-paper variant: utility per unit energy, gated on surviving
+        # the round — ranks by how much statistical progress each %-battery
+        # buys instead of mixing the scales linearly.
+        survives = pop.battery_pct > predicted_cost_pct
+        epj = util / jnp.maximum(predicted_cost_pct, 1e-3)
+        score = jnp.where(valid & survives,
+                          epj * (1.0 + _ucb_bonus(cfg, pop, state.round)),
+                          -jnp.inf)
+    else:
+        raise ValueError(cfg.kind)
+    return score
+
+
+def select(key, cfg: SelectorConfig, state: SelectorState,
+           pop: ClientPopulation,
+           predicted_cost_pct: Optional[jnp.ndarray] = None,
+           ) -> Tuple[np.ndarray, SelectorState]:
+    """Pick K clients. Returns (indices (<=K,), new_state)."""
+    valid = np.asarray(pop.alive)
+    n_valid = int(valid.sum())
+    k = min(cfg.k, n_valid)
+    state = SelectorState(state.round + 1, state.epsilon, state.pacer_T,
+                          state.util_ema)
+    if k == 0:
+        return np.zeros((0,), np.int64), state
+
+    if cfg.kind == "random":
+        p = valid / valid.sum()
+        idx = jax.random.choice(key, pop.n, (k,), replace=False, p=jnp.asarray(p))
+        return np.asarray(idx), state
+
+    if predicted_cost_pct is None:
+        predicted_cost_pct = jnp.zeros((pop.n,), jnp.float32)
+
+    explored = np.asarray(pop.explored) & valid
+    unexplored = valid & ~explored
+    n_explore = min(int(round(state.epsilon * k)), int(unexplored.sum()))
+    n_exploit = min(k - n_explore, int(explored.sum()))
+    n_explore = k - n_exploit  # hand leftovers back to exploration
+    n_explore = min(n_explore, int(unexplored.sum()))
+
+    picks = []
+    if n_exploit > 0:
+        score = np.array(compute_scores(cfg, state, pop, predicted_cost_pct))
+        score[~explored] = -np.inf
+        picks.append(np.argsort(-score, kind="stable")[:n_exploit])
+    if n_explore > 0:
+        g = np.array(jax.random.gumbel(key, (pop.n,)))
+        g[~unexplored] = -np.inf
+        picks.append(np.argsort(-g, kind="stable")[:n_explore])
+    idx = np.concatenate(picks) if picks else np.zeros((0,), np.int64)
+
+    # epsilon decay + pacer update on the *exploited* utility mass
+    state.epsilon = max(cfg.epsilon_min, state.epsilon * cfg.epsilon_decay)
+    sel_util = float(np.asarray(pop.stat_util)[idx].mean()) if len(idx) else 0.0
+    if state.util_ema > 0.0 and sel_util < 0.95 * state.util_ema:
+        state.pacer_T = min(cfg.pacer_max, state.pacer_T + cfg.pacer_delta)
+    state.util_ema = 0.9 * state.util_ema + 0.1 * sel_util
+    return idx.astype(np.int64), state

@@ -1,0 +1,9 @@
+from repro.data.partition import (
+    dirichlet_partition,
+    label_restricted_partition,
+    make_test_set,
+)
+from repro.data.synthetic import lm_batch, markov_lm_tokens, sample_speech_like
+
+__all__ = ["dirichlet_partition", "label_restricted_partition", "make_test_set",
+           "lm_batch", "markov_lm_tokens", "sample_speech_like"]

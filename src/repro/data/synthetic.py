@@ -1,0 +1,95 @@
+"""Deterministic synthetic datasets.
+
+1. Speech-commands-like classification (paper workload): 35 keyword classes,
+   1x32x32 mel-spectrogram-like inputs. Each class is a fixed smooth random
+   prototype; samples are prototype + noise, so a small CNN genuinely learns
+   — accuracy rises, loss falls — which keeps the selection-policy
+   comparison meaningful without the (offline-unavailable) real dataset.
+
+2. LM token streams for the assigned architectures: a deterministic
+   order-k Markov chain over the vocabulary (learnable next-token structure).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def class_prototypes(key, n_classes: int, hw: int, channels: int = 1):
+    """Smooth random prototype per class (low-frequency Fourier mix)."""
+    k1, k2 = jax.random.split(key)
+    n_freq = 6
+    coef = jax.random.normal(k1, (n_classes, n_freq, n_freq, channels))
+    phase = jax.random.uniform(k2, (n_classes, n_freq, n_freq, 2)) * 2 * jnp.pi
+    xs = jnp.linspace(0, 1, hw)
+    out = jnp.zeros((n_classes, hw, hw, channels))
+    for fx in range(n_freq):
+        for fy in range(n_freq):
+            wave = (jnp.sin(2 * jnp.pi * (fx + 1) * xs[None, :, None]
+                            + phase[:, fx, fy, 0][:, None, None])
+                    * jnp.sin(2 * jnp.pi * (fy + 1) * xs[None, None, :]
+                              + phase[:, fx, fy, 1][:, None, None]))
+            out = out + coef[:, fx, fy, None, None, :] * wave[..., None]
+    return out / n_freq
+
+
+def make_classification_set(key, labels, prototypes, noise: float = 0.8):
+    """labels: (M,) -> x: (M,H,W,C) prototype + gaussian noise."""
+    x = prototypes[labels]
+    x = x + noise * jax.random.normal(key, x.shape)
+    return x.astype(jnp.float32)
+
+
+def sample_speech_like(key, n_samples: int, n_classes: int = 35,
+                       hw: int = 32, noise: float = 0.8,
+                       prototypes=None) -> Dict[str, jnp.ndarray]:
+    kp, kl, kn = jax.random.split(key, 3)
+    if prototypes is None:
+        prototypes = class_prototypes(jax.random.PRNGKey(7), n_classes, hw)
+    y = jax.random.randint(kl, (n_samples,), 0, n_classes)
+    x = make_classification_set(kn, y, prototypes, noise)
+    return {"x": x, "y": y}
+
+
+def markov_lm_tokens(key, batch: int, seq_len: int, vocab: int,
+                     order_vocab: int = 64) -> jnp.ndarray:
+    """Learnable token stream: next token depends on prev token's bucket.
+
+    The transition table is FIXED (structure key 42) so successive batches
+    sample the same stationary process — the model can actually learn it.
+    """
+    k2 = key
+    trans = jax.random.randint(jax.random.PRNGKey(42), (order_vocab, 8), 0, vocab)
+
+    def step(tok, k):
+        bucket = tok % order_vocab
+        choice = jax.random.randint(k, tok.shape, 0, 8)
+        nxt = trans[bucket, choice]
+        return nxt, nxt
+
+    keys = jax.random.split(k2, seq_len)
+    t0 = jax.random.randint(key, (batch,), 0, vocab)
+    _, toks = jax.lax.scan(step, t0, keys)
+    return jnp.moveaxis(toks, 0, 1)  # (batch, seq)
+
+
+def lm_batch(key, cfg, batch: int, seq_len: int) -> Dict[str, jnp.ndarray]:
+    """Train batch for any assigned architecture (labels = next-token shift)."""
+    if cfg.frontend == "vision":
+        text_len = seq_len - cfg.n_patches
+        toks = markov_lm_tokens(key, batch, text_len + 1, cfg.vocab_size)
+        out = {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+               "vision_embeds": 0.02 * jax.random.normal(
+                   jax.random.fold_in(key, 1),
+                   (batch, cfg.n_patches, cfg.d_model), jnp.float32)}
+        return out
+    if cfg.n_codebooks > 1:
+        ks = jax.random.split(key, cfg.n_codebooks)
+        streams = [markov_lm_tokens(k, batch, seq_len + 1, cfg.vocab_size)
+                   for k in ks]
+        toks = jnp.stack(streams, axis=-1)  # (B, S+1, ncb)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    toks = markov_lm_tokens(key, batch, seq_len + 1, cfg.vocab_size)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}

@@ -1,0 +1,15 @@
+from repro.federated.aggregation import (
+    make_server_optimizer,
+    server_update,
+    weighted_delta,
+)
+from repro.federated.server import FLConfig, FLHistory, run_fl
+from repro.federated.simulation import (
+    RoundOutcome,
+    predicted_round_cost_pct,
+    simulate_round,
+)
+
+__all__ = ["make_server_optimizer", "server_update", "weighted_delta",
+           "FLConfig", "FLHistory", "run_fl", "RoundOutcome",
+           "predicted_round_cost_pct", "simulate_round"]

@@ -1,0 +1,40 @@
+"""Server-side aggregation: FedAvg deltas + adaptive server optimizers.
+
+The paper aggregates with YoGi (FedScale's default adaptive aggregator).
+Aggregation treats the weighted-mean client delta as a pseudo-gradient for
+the server optimizer (Reddi et al., Adaptive Federated Optimization).
+"""
+from __future__ import annotations
+
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import SERVER_OPTIMIZERS, Optimizer, apply_updates
+
+PyTree = Any
+
+
+def weighted_delta(deltas: PyTree, weights: jnp.ndarray) -> PyTree:
+    """deltas: pytree with leading client axis (C, ...); weights: (C,)."""
+    w = weights / jnp.maximum(weights.sum(), 1e-9)
+
+    def avg(d):
+        return jnp.tensordot(w.astype(d.dtype), d, axes=1)
+
+    return jax.tree.map(avg, deltas)
+
+
+def make_server_optimizer(name: str, lr: float) -> Optimizer:
+    if name not in SERVER_OPTIMIZERS:
+        raise KeyError(f"unknown server optimizer {name!r}")
+    return SERVER_OPTIMIZERS[name](lr)
+
+
+def server_update(params: PyTree, agg_delta: PyTree, opt: Optimizer,
+                  opt_state: PyTree) -> Tuple[PyTree, PyTree]:
+    """Pseudo-gradient = -delta (so +delta is the descent direction)."""
+    pseudo_grad = jax.tree.map(lambda d: -d, agg_delta)
+    updates, opt_state = opt.update(pseudo_grad, opt_state, params)
+    return apply_updates(params, updates), opt_state

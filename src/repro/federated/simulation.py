@@ -1,0 +1,97 @@
+"""Event-driven round simulation: timing, energy, battery, dropouts.
+
+Mirrors the paper's FedScale-style simulator: per-round wall time is derived
+from each selected learner's download + compute + upload latency (device and
+network profiles); battery is debited with the Sec. 4.2 energy models; a
+client whose battery hits zero mid-round DROPS OUT — it fails the round and
+becomes unavailable (the paper's central failure mode). Unselected devices
+drain at the idle/busy mix rate over the round's wall time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.clients import ClientPopulation, round_times
+from repro.core.energy import EnergyModel
+
+
+@dataclass
+class RoundOutcome:
+    selected: np.ndarray          # (K,) indices
+    succeeded: np.ndarray         # (K,) bool — finished with battery left
+    durations: np.ndarray         # (K,) seconds (per selected client)
+    round_duration: float         # wall seconds for the round
+    new_dropouts: int             # clients that ran out of battery this round
+    energy_spent_pct: float       # total battery % spent by participants
+
+
+def predicted_round_cost_pct(pop: ClientPopulation, energy_model: EnergyModel,
+                             model_bytes: float, local_steps: int,
+                             batch_size: int,
+                             up_bytes: float = None) -> jnp.ndarray:
+    """battery_used(i) for Eq. 1's power(i) — identical model to the debit."""
+    t = round_times(pop, model_bytes, local_steps, batch_size, up_bytes)
+    return energy_model.round_cost_pct(pop.category, pop.network,
+                                       t["comp"], t["down"], t["up"])
+
+
+def simulate_round(pop: ClientPopulation, selected: np.ndarray,
+                   energy_model: EnergyModel, model_bytes: float,
+                   local_steps: int, batch_size: int, rnd: int,
+                   deadline_s: Optional[float] = None,
+                   up_bytes: float = None):
+    """Returns (new_pop, RoundOutcome)."""
+    t = round_times(pop, model_bytes, local_steps, batch_size, up_bytes)
+    cost = energy_model.round_cost_pct(pop.category, pop.network,
+                                       t["comp"], t["down"], t["up"])
+    sel_mask = np.zeros((pop.n,), bool)
+    sel_mask[selected] = True
+    sel_mask = jnp.asarray(sel_mask)
+
+    battery_after = pop.battery_pct - jnp.where(sel_mask, cost, 0.0)
+    ran_out = sel_mask & (battery_after <= 0.0)
+    missed_deadline = (sel_mask & (t["total"] > deadline_s)
+                       if deadline_s else jnp.zeros_like(sel_mask))
+    succeeded_mask = sel_mask & ~ran_out & ~missed_deadline
+
+    # round wall time: slowest successful participant (or deadline)
+    t_tot = np.asarray(t["total"])
+    succ_np = np.asarray(succeeded_mask)
+    if succ_np.any():
+        round_duration = float(t_tot[succ_np].max())
+    else:
+        round_duration = float(deadline_s or t_tot[np.asarray(sel_mask)].max())
+    if deadline_s:
+        round_duration = min(round_duration, float(deadline_s))
+
+    # unselected (and dropped-out mid-round) devices drain at idle/busy rate
+    idle_cost = energy_model.idle_cost_pct(pop.category, round_duration)
+    battery_new = jnp.where(sel_mask, battery_after,
+                            pop.battery_pct - idle_cost)
+    battery_new = jnp.clip(battery_new, 0.0, 100.0)
+
+    was_dropped = pop.dropped
+    dropped_new = was_dropped | (battery_new <= 0.0)
+    new_dropouts = int(jnp.sum(dropped_new & ~was_dropped))
+
+    new_pop = pop.replace(
+        battery_pct=battery_new,
+        dropped=dropped_new,
+        explored=pop.explored | np.asarray(sel_mask),
+        last_duration=jnp.where(sel_mask, t["total"], pop.last_duration),
+        last_round=jnp.where(sel_mask, rnd, pop.last_round),
+        times_selected=pop.times_selected + sel_mask.astype(jnp.int32),
+    )
+    outcome = RoundOutcome(
+        selected=np.asarray(selected),
+        succeeded=np.asarray(succeeded_mask)[np.asarray(selected)],
+        durations=t_tot[np.asarray(selected)],
+        round_duration=round_duration,
+        new_dropouts=new_dropouts,
+        energy_spent_pct=float(jnp.sum(jnp.where(sel_mask, cost, 0.0))),
+    )
+    return new_pop, outcome

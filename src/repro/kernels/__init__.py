@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the system's compute hot-spots.
+
+flash_attention   blocked online-softmax attention (prefill hot-spot)
+selective_scan    Mamba1 recurrence, channel-tiled, state in VMEM
+ssd_chunk         Mamba2/SSD chunked scan, MXU quadratic form + VMEM state
+topk_select       EAFL Eq.1 reward + blocked top-k over huge client pools
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper,
+auto interpret on non-TPU), ref.py (pure-jnp oracle used by the tests).
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import (flash_attention, selective_scan, ssd_chunk,
+                               topk_reward)
+
+__all__ = ["ops", "ref", "flash_attention", "selective_scan", "ssd_chunk",
+           "topk_reward"]

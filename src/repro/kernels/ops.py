@@ -1,0 +1,63 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On a TPU backend the kernels compile natively; everywhere else (this CPU
+container) they run with ``interpret=True`` so the kernel *logic* is always
+exercised. ``interpret=None`` (default) auto-detects.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import selective_scan as _ss
+from repro.kernels import ssd_chunk as _sc
+from repro.kernels import topk_select as _tk
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, causal: bool = True,
+                    block_q: int = _fa.DEFAULT_BLOCK_Q,
+                    block_k: int = _fa.DEFAULT_BLOCK_K,
+                    interpret: Optional[bool] = None):
+    """q,k,v: (B, H, S, D) -> (B, H, S, D)."""
+    B, H, S, D = q.shape
+    fold = lambda t: t.reshape(B * H, S, D)
+    out = _fa.flash_attention(fold(q), fold(k), fold(v), causal=causal,
+                              block_q=block_q, block_k=block_k,
+                              interpret=_auto_interpret(interpret))
+    return out.reshape(B, H, S, D)
+
+
+@partial(jax.jit, static_argnames=("block_d", "interpret"))
+def selective_scan(x, dt, Bm, Cm, A, D,
+                   block_d: int = _ss.DEFAULT_BLOCK_D,
+                   interpret: Optional[bool] = None):
+    return _ss.selective_scan(x, dt, Bm, Cm, A, D, block_d=block_d,
+                              interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("chunk", "block_h", "interpret"))
+def ssd_chunk(x, Bm, Cm, dt, A,
+              chunk: int = _sc.DEFAULT_CHUNK,
+              block_h: int = _sc.DEFAULT_BLOCK_H,
+              interpret: Optional[bool] = None):
+    return _sc.ssd_chunk(x, Bm, Cm, dt, A, chunk=chunk, block_h=block_h,
+                         interpret=_auto_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("f", "k", "block_n", "interpret"))
+def topk_reward(util, power, valid, f: float, k: int,
+                block_n: int = _tk.DEFAULT_BLOCK_N,
+                interpret: Optional[bool] = None):
+    return _tk.topk_reward(util, power, valid, f=f, k=k, block_n=block_n,
+                           interpret=_auto_interpret(interpret))

@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q,k,v: (B, H, S, D) -> (B, H, S, D). Plain softmax attention."""
+    S = q.shape[2]
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w.astype(q.dtype), v)
+
+
+def selective_scan_ref(x, dt, Bm, Cm, A, D):
+    """Mamba1 selective scan.
+
+    x, dt: (B, S, di); Bm, Cm: (B, S, ds); A: (di, ds); D: (di,)
+    h_t = exp(dt_t A) h_{t-1} + (dt_t x_t) B_t ;  y_t = C_t . h_t + D x_t
+    """
+    Bsz, S, di = x.shape
+    ds = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp
+        da = jnp.exp(dtt[..., None] * A)                       # (B,di,ds)
+        h = da * h + (dtt * xt)[..., None] * Bt[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, Ct)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, di, ds), jnp.float32)
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (x, dt, Bm, Cm))
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + x.astype(jnp.float32) * D
+    return y.astype(x.dtype)
+
+
+def ssd_chunk_ref(x, Bm, Cm, dt, A):
+    """Mamba2/SSD sequential oracle.
+
+    x: (B,S,nh,hd); Bm,Cm: (B,S,ds); dt: (B,S,nh); A: (nh,) negative.
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t (x) x_t ;  y_t = C_t . h_t
+    """
+    Bsz, S, nh, hd = x.shape
+    ds = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, Bt, Ct, dtt = inp                            # (B,nh,hd),(B,ds),(B,ds),(B,nh)
+        da = jnp.exp(dtt * A)                            # (B,nh)
+        upd = jnp.einsum("bh,bs,bhd->bhsd", dtt, Bt, xt)
+        h = da[..., None, None] * h + upd
+        y = jnp.einsum("bhsd,bs->bhd", h, Ct)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, nh, ds, hd), jnp.float32)
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Cm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)        # (B,S,nh,hd)
+
+
+def topk_reward_ref(util, power, valid, f: float, k: int):
+    """EAFL Eq.1 reward + top-k. Returns (values (k,), indices (k,)).
+
+    util/power are pre-normalised by the caller (see rewards.eafl_reward);
+    the kernel fuses only the mix + mask + top-k, matching this oracle.
+    """
+    reward = f * util + (1.0 - f) * power
+    reward = jnp.where(valid, reward, -jnp.inf)
+    return jax.lax.top_k(reward, k)

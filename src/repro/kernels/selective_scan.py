@@ -1,0 +1,73 @@
+"""Mamba1 selective-scan Pallas kernel (TPU target, interpret-validated).
+
+TPU adaptation of the CUDA selective-scan: instead of warp-level parallel
+prefix sums, we tile the *channel* dimension over the grid (channels are
+independent) and keep the recurrent state (block_d x ds) resident in VMEM
+while streaming the sequence in VMEM-sized time chunks. The MXU is not the
+engine here — the scan is bandwidth-bound, which is exactly why it is a
+kernel: one HBM pass over x/dt/B/C instead of the O(S) small dispatches the
+XLA while-loop path issues.
+
+Grid: (batch, n_channel_blocks); the time loop is a fori_loop inside the
+kernel with the state in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_D = 256
+
+
+def _scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref, h_ref,
+                 *, seq_len: int):
+    h_ref[...] = jnp.zeros_like(h_ref)
+    A = a_ref[...]                                   # (bd, ds) f32
+    Dp = d_ref[...]                                  # (bd,)
+
+    def step(t, _):
+        xt = x_ref[0, t].astype(jnp.float32)         # (bd,)
+        dtt = dt_ref[0, t].astype(jnp.float32)       # (bd,)
+        Bt = b_ref[0, t].astype(jnp.float32)         # (ds,)
+        Ct = c_ref[0, t].astype(jnp.float32)         # (ds,)
+        da = jnp.exp(dtt[:, None] * A)               # (bd, ds)
+        h = da * h_ref[...] + (dtt * xt)[:, None] * Bt[None, :]
+        h_ref[...] = h
+        y = (h * Ct[None, :]).sum(axis=1) + Dp * xt
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, seq_len, step, 0)
+
+
+def selective_scan(x, dt, Bm, Cm, A, D, *,
+                   block_d: int = DEFAULT_BLOCK_D,
+                   interpret: bool = False):
+    """x, dt: (B,S,di); Bm,Cm: (B,S,ds); A: (di,ds); D: (di,) -> y (B,S,di)."""
+    Bsz, S, di = x.shape
+    ds = Bm.shape[-1]
+    block_d = min(block_d, di)
+    assert di % block_d == 0, (di, block_d)
+    n_d = di // block_d
+
+    kernel = functools.partial(_scan_kernel, seq_len=S)
+    return pl.pallas_call(
+        kernel,
+        grid=(Bsz, n_d),
+        in_specs=[
+            pl.BlockSpec((1, S, block_d), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((1, S, block_d), lambda b, d: (b, 0, d)),
+            pl.BlockSpec((1, S, ds), lambda b, d: (b, 0, 0)),
+            pl.BlockSpec((1, S, ds), lambda b, d: (b, 0, 0)),
+            pl.BlockSpec((block_d, ds), lambda b, d: (d, 0)),
+            pl.BlockSpec((block_d,), lambda b, d: (d,)),
+        ],
+        out_specs=pl.BlockSpec((1, S, block_d), lambda b, d: (b, 0, d)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, S, di), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_d, ds), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, Bm, Cm, A.astype(jnp.float32), D.astype(jnp.float32))

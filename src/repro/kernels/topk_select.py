@@ -1,0 +1,77 @@
+"""EAFL reward + top-k client selection Pallas kernel (TPU target).
+
+The paper's selection at production scale: for millions of registered
+clients, fuse the Eq. 1 reward (f*util + (1-f)*power, invalid clients
+masked) with a blocked top-k reduction so the million-entry reward vector is
+never materialised in HBM. Each grid step processes one VMEM-sized block of
+clients and emits that block's local top-k (values + global indices) via K
+iterations of max+mask; the host merges nblocks*k candidates with one tiny
+final top_k — an exact two-level tournament.
+
+Grid: (n_blocks,); VMEM per program: 3 input blocks + k outputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 4096
+NEG_INF = -jnp.inf
+
+
+def _topk_kernel(util_ref, power_ref, valid_ref, vals_ref, idx_ref,
+                 *, f: float, k: int, block_n: int):
+    bi = pl.program_id(0)
+    util = util_ref[...].astype(jnp.float32)
+    power = power_ref[...].astype(jnp.float32)
+    valid = valid_ref[...] != 0
+    reward = f * util + (1.0 - f) * power
+    reward = jnp.where(valid, reward, NEG_INF)
+    base = bi * block_n
+
+    def pick(i, r):
+        j = jnp.argmax(r)
+        vals_ref[0, i] = r[j]
+        idx_ref[0, i] = (base + j).astype(jnp.int32)
+        return r.at[j].set(NEG_INF)
+
+    jax.lax.fori_loop(0, k, pick, reward, unroll=True)
+
+
+def topk_reward(util, power, valid, *, f: float, k: int,
+                block_n: int = DEFAULT_BLOCK_N,
+                interpret: bool = False):
+    """util/power: (N,) f32; valid: (N,) int32/bool. Returns (vals, idx) (k,)."""
+    N = util.shape[0]
+    block_n = min(block_n, N)
+    assert N % block_n == 0, (N, block_n)
+    n_blocks = N // block_n
+
+    kernel = functools.partial(_topk_kernel, f=f, k=k, block_n=block_n)
+    vals, idx = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda b: (b,)),
+            pl.BlockSpec((block_n,), lambda b: (b,)),
+            pl.BlockSpec((block_n,), lambda b: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda b: (b, 0)),
+            pl.BlockSpec((1, k), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, k), jnp.float32),
+            jax.ShapeDtypeStruct((n_blocks, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(util, power, valid.astype(jnp.int32))
+
+    # final merge: nblocks*k candidates -> global top-k (exact)
+    flat_v = vals.reshape(-1)
+    flat_i = idx.reshape(-1)
+    top_v, pos = jax.lax.top_k(flat_v, k)
+    return top_v, flat_i[pos]

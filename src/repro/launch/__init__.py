@@ -1,0 +1,28 @@
+"""Launcher: production meshes, sharding rules, dry-run, drivers.
+
+NOTE: do NOT import repro.launch.dryrun from here — it force-sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 at import time and must
+only be imported by the dry-run entrypoint itself.
+"""
+from repro.launch.mesh import batch_axes, make_host_mesh, make_production_mesh
+from repro.launch.sharding import (
+    batch_sharding,
+    cache_sharding,
+    param_sharding,
+    replicated,
+)
+from repro.launch.specs import cache_specs, input_specs, params_specs
+from repro.launch.steps import (
+    default_optimizer,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+
+__all__ = [
+    "batch_axes", "make_host_mesh", "make_production_mesh",
+    "batch_sharding", "cache_sharding", "param_sharding", "replicated",
+    "cache_specs", "input_specs", "params_specs",
+    "default_optimizer", "make_prefill_step", "make_serve_step",
+    "make_train_step",
+]

@@ -1,0 +1,318 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step per chip:
+
+  compute    = HLO_dot_FLOPs / peak_FLOPs          (per-device HLO)
+  memory     = HLO_bytes / HBM_bw                  (cost_analysis + analytic)
+  collective = ring-cost collective bytes / ICI_bw (parsed from HLO text)
+
+IMPORTANT MEASUREMENT NOTE (validated empirically, see EXPERIMENTS §Roofline):
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE — with
+scan-over-layers that understates FLOPs/bytes by ~n_layers x. We therefore
+parse the post-optimization HLO ourselves:
+
+  - build a symbol table of op-name -> shape for every computation;
+  - walk ``while`` ops, read the trip count from the loop-condition
+    computation's compare constant, and propagate multipliers through
+    nested loops;
+  - FLOPs: every ``dot`` op = 2 * |output| * K (K from the contracting
+    dims of the lhs operand shape), scaled by its computation's multiplier;
+  - collective bytes: every all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute op, scaled by multiplier and by the
+    ring-cost factor for its replica-group size g:
+        all-gather (g-1)/g - all-reduce 2(g-1)/g - reduce-scatter (g-1)
+        all-to-all (g-1)/g - collective-permute 1.
+
+Memory bytes come from an analytic model (params + optimizer + cache +
+activation traffic) because post-fusion HBM traffic is not recoverable from
+HLO text; raw cost_analysis values are reported alongside for reference.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import (
+    TPU_V5E,
+    HardwareSpec,
+    InputShape,
+    MeshConfig,
+    ModelConfig,
+)
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8,
+                "f32": 4, "s32": 4, "u32": 4,
+                "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+                "f8e4m3fn": 1, "f8e5m2": 1,
+                "s8": 1, "u8": 1, "pred": 1}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+) \(.*\) -> .+ \{$")
+_OP_RE = re.compile(r"^\s*(?:ROOT )?%?([\w\.\-]+) = (.+)$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\), condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def shape_bytes(text: str) -> int:
+    """Sum byte sizes of every shape literal in `text`."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(text: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+@dataclass
+class HloStats:
+    dot_flops: float = 0.0
+    collective_bytes: float = 0.0          # ring-cost weighted, per device
+    collective_raw_bytes: float = 0.0      # unweighted tensor bytes
+    by_type: Dict[str, float] = field(default_factory=dict)
+    by_type_count: Dict[str, int] = field(default_factory=dict)
+    n_while: int = 0
+
+
+def parse_hlo(text: str) -> HloStats:
+    # ---- pass 1: computations, ops, symbol table --------------------------
+    comp_ops: Dict[str, List[str]] = {}
+    symbols: Dict[Tuple[str, str], str] = {}   # (comp, op_name) -> rhs text
+    current = None
+    entry = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        m = _COMP_RE.match(line.strip()) if not line.startswith(" ") else None
+        if m and (line.startswith("%") or line.startswith("ENTRY")):
+            current = m.group(1)
+            comp_ops[current] = []
+            if line.startswith("ENTRY"):
+                entry = current
+            # header params also define symbols: name: shape
+            for pm in re.finditer(r"([\w\.\-]+): ([a-z0-9]+\[[0-9,]*\])",
+                                  line):
+                symbols[(current, pm.group(1))] = pm.group(2)
+            continue
+        if current is None:
+            continue
+        om = _OP_RE.match(line)
+        if om:
+            comp_ops[current].append(line.strip())
+            symbols[(current, om.group(1))] = om.group(2)
+
+    # ---- pass 2: while edges + trip counts --------------------------------
+    # mult[comp] = how many times the computation executes per step
+    mult: Dict[str, float] = {c: 0.0 for c in comp_ops}
+    if entry:
+        mult[entry] = 1.0
+    while_edges = []                       # (parent, body, trip)
+    for comp, ops in comp_ops.items():
+        for op in ops:
+            wm = _WHILE_RE.search(op)
+            if wm:
+                cond, body = wm.groups()
+                consts = [int(c) for c in _CONST_RE.findall(
+                    "\n".join(comp_ops.get(cond, [])))]
+                trip = max(consts) if consts else 1
+                while_edges.append((comp, body, max(trip, 1)))
+
+    for _ in range(12):                    # fixpoint over nesting depth
+        changed = False
+        for parent, body, trip in while_edges:
+            new = mult.get(parent, 0.0) * trip
+            if new > mult.get(body, 0.0):
+                mult[body] = new
+                changed = True
+        if not changed:
+            break
+
+    # ---- pass 3: dots + collectives ----------------------------------------
+    stats = HloStats()
+    stats.n_while = len(while_edges)
+    for comp, ops in comp_ops.items():
+        m = mult.get(comp, 0.0)
+        if m == 0.0:
+            # computations reached via call/fusion from entry: count once if
+            # they contain dots/collectives but were never marked (fusions
+            # with dots are rare; conditionals' branches count once).
+            m = 1.0 if comp == entry else mult.get(comp, 0.0)
+        for op in ops:
+            if m == 0.0:
+                break
+            # dot flops
+            dm = re.match(
+                r"(?:ROOT )?%?[\w\.\-]+ = (\(?.+?\)?) dot\(%?([\w\.\-]+), "
+                r"%?([\w\.\-]+)\)(.*)", op)
+            if dm:
+                out_txt, lhs, rhs, tail = dm.groups()
+                out = _shape_dims(out_txt)
+                lhs_shape = _shape_dims(symbols.get((comp, lhs), ""))
+                km = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", tail)
+                if out and lhs_shape and km:
+                    out_n = 1
+                    for d in out[1]:
+                        out_n *= d
+                    k = 1
+                    for ci in km.group(1).split(","):
+                        if ci and int(ci) < len(lhs_shape[1]):
+                            k *= lhs_shape[1][int(ci)]
+                    stats.dot_flops += m * 2.0 * out_n * k
+                continue
+            # collectives
+            for cname in _COLLECTIVES:
+                if f" {cname}(" in op or f" {cname}-start(" in op:
+                    lhs_txt = op.split(f" {cname}")[0]
+                    nbytes = shape_bytes(lhs_txt.split("=", 1)[-1])
+                    g = 1
+                    gm = _GROUPS_RE.search(op)
+                    if gm:
+                        g = int(gm.group(2))
+                    else:
+                        gb = _GROUPS_BRACE_RE.search(op)
+                        if gb:
+                            g = len(gb.group(1).split(","))
+                    if g <= 1:
+                        factor = 0.0
+                    elif cname == "all-gather":
+                        factor = (g - 1) / g
+                    elif cname == "all-reduce":
+                        factor = 2 * (g - 1) / g
+                    elif cname == "reduce-scatter":
+                        factor = (g - 1)
+                    elif cname == "all-to-all":
+                        factor = (g - 1) / g
+                    else:
+                        factor = 1.0
+                    stats.collective_bytes += m * nbytes * factor
+                    stats.collective_raw_bytes += m * nbytes
+                    stats.by_type[cname] = stats.by_type.get(cname, 0.0) \
+                        + m * nbytes * factor
+                    stats.by_type_count[cname] = \
+                        stats.by_type_count.get(cname, 0) + 1
+                    break
+    return stats
+
+
+# --------------------------------------------------------------- analytics
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (fwd-only), N = active params."""
+    n_active = cfg.param_count(active_only=True)
+    tokens = shape.global_batch * (shape.seq_len if shape.mode != "decode" else 1)
+    passes = 6.0 if shape.mode == "train" else 2.0
+    return passes * n_active * tokens
+
+
+def analytic_memory_bytes(cfg: ModelConfig, shape: InputShape,
+                          n_devices: int) -> float:
+    """Per-device HBM traffic per step (analytic lower-bound model):
+    every resident param is read (+ grad/opt r/w for train), the KV/SSM
+    cache is read+written (decode), activations ~ 12*B*S*D*L bytes."""
+    import numpy as np
+
+    p_total = cfg.param_count() * 4.0            # f32 master
+    if shape.mode == "train":
+        weight_traffic = p_total * (1 + 2 + 4)   # read w, write g, opt m/v r/w
+    else:
+        weight_traffic = cfg.param_count(active_only=shape.mode == "decode") * 2.0
+    B = shape.global_batch
+    S = shape.seq_len if shape.mode != "decode" else 1
+    act = 12.0 * B * S * cfg.d_model * cfg.n_layers * 2.0
+    cache = 0.0
+    if shape.mode == "decode":
+        L = shape.sliding_window or shape.seq_len
+        if cfg.attn_kind == "mla":
+            per_tok = cfg.kv_lora_rank + cfg.qk_rope_dim
+        elif cfg.attn_kind == "gqa":
+            per_tok = 2 * cfg.n_kv_heads * cfg.resolved_head_dim
+        else:
+            per_tok = 0
+        n_attn = cfg.n_layers if cfg.arch_type != "hybrid" else \
+            cfg.n_layers // max(cfg.attn_every, 1)
+        cache = B * L * per_tok * n_attn * 2.0
+        if cfg.arch_type in ("ssm", "hybrid"):
+            cache += B * cfg.d_inner * max(cfg.ssm_state, 1) * cfg.n_layers * 4.0
+    return (weight_traffic + act + cache) / n_devices
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: Tuple[int, ...]
+    n_devices: int
+    hlo_flops_per_dev: float
+    analytic_bytes_per_dev: float
+    ca_flops: float
+    ca_bytes: float
+    collective_bytes_per_dev: float
+    collective_by_type: Dict[str, float]
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    model_flops_total: float
+    useful_ratio: float
+    peak_mem_bytes: Optional[float] = None
+
+    def row(self) -> str:
+        return (f"{self.arch},{self.shape},{'x'.join(map(str, self.mesh))},"
+                f"{self.t_compute:.6e},{self.t_memory:.6e},"
+                f"{self.t_collective:.6e},{self.dominant},"
+                f"{self.useful_ratio:.3f}")
+
+
+def analyze(cfg: ModelConfig, shape: InputShape, mesh_shape: Tuple[int, ...],
+            hlo_text: str, cost: Dict[str, float],
+            memory_analysis=None,
+            hw: HardwareSpec = TPU_V5E) -> RooflineReport:
+    n_dev = 1
+    for s in mesh_shape:
+        n_dev *= s
+    stats = parse_hlo(hlo_text)
+    # HLO text is the per-device (partitioned) program -> per-device numbers.
+    flops_dev = stats.dot_flops
+    bytes_dev = analytic_memory_bytes(cfg, shape, n_dev)
+    coll_dev = stats.collective_bytes
+
+    t_comp = flops_dev / hw.peak_flops
+    t_mem = bytes_dev / hw.hbm_bw
+    t_coll = coll_dev / hw.ici_bw
+    dominant = max((("compute", t_comp), ("memory", t_mem),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape)
+    useful = mf / max(flops_dev * n_dev, 1.0)
+    peak = None
+    if memory_analysis is not None:
+        for attr in ("temp_size_in_bytes",):
+            peak = getattr(memory_analysis, attr, None)
+    return RooflineReport(
+        arch=cfg.name, shape=shape.name, mesh=tuple(mesh_shape),
+        n_devices=n_dev,
+        hlo_flops_per_dev=flops_dev,
+        analytic_bytes_per_dev=bytes_dev,
+        ca_flops=float(cost.get("flops", -1.0)),
+        ca_bytes=float(cost.get("bytes accessed", -1.0)),
+        collective_bytes_per_dev=coll_dev,
+        collective_by_type=stats.by_type,
+        t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+        dominant=dominant, model_flops_total=mf, useful_ratio=useful,
+        peak_mem_bytes=peak,
+    )

@@ -1,0 +1,226 @@
+"""Sharding rule engine: param/batch/cache PartitionSpecs for the mesh.
+
+Scheme (baseline, see EXPERIMENTS §Perf for hillclimbed variants):
+  - TP  : attention heads / FFN hidden / MoE expert axis over ``model``;
+  - FSDP: the other large param dim over ``data`` (so a 236B-param MoE fits
+          256 x 16GB v5e chips);
+  - DP  : global batch over (``pod``, ``data``) — the pod axis is pure
+          data parallelism, giving the multi-pod dry-run its gradient
+          all-reduce over ICI+DCN.
+
+Every rule is divisibility-guarded: an axis that does not divide the dim is
+dropped (replicated) rather than erroring, so every (arch x shape x mesh)
+combination lowers.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+
+PyTree = Any
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= _axis_size(mesh, a)
+        return out
+    return mesh.shape[axis]
+
+
+def guard(mesh, shape, spec_dims) -> P:
+    """Drop spec axes that don't divide the corresponding dim."""
+    dims = []
+    for size, ax in zip(shape, spec_dims):
+        if ax is not None and size % _axis_size(mesh, ax) == 0 and size > 0:
+            dims.append(ax)
+        else:
+            dims.append(None)
+    return P(*dims)
+
+
+# --------------------------------------------------------------- parameters
+_IN_PROJ = ("wq", "wk", "wv", "w_up", "w_gate", "wuq", "wuk", "wuv",
+            "wdq", "x_proj", "dt_proj")
+_OUT_PROJ = ("wo", "w_down", "out_proj")
+# MLA latent down-projections: output dim is the (small) latent that the
+# KV cache stores — sharding it over `model` propagates an r-sharded layout
+# into the cache and forces a per-layer cache reshard at decode (measured
+# 537 MB/layer, §Perf HC3 iteration 2). Keep the latent dim replicated.
+_LATENT_PROJ = ("wdkv", "wkr")
+
+# Sharding strategies (see EXPERIMENTS §Perf):
+#   baseline   TP over `model` + FSDP over `data` (Megatron-style 2D)
+#   fsdp       no tensor parallelism: rank-2 weights fully sharded over
+#              (`data`,`model`) combined; MoE expert stacks keep their
+#              expert-parallel axis. Right regime for <=2B-per-shard dense
+#              models where TP activation all-reduces dominate.
+#   serve_tp   inference: TP over `model`, REPLICATED over `data` (no
+#              optimizer state -> no reason to FSDP; kills the per-layer
+#              weight all-gathers that dominate decode).
+#   ep_fsdp    MoE: experts stay expert-parallel over `model`; attention /
+#              dense / shared-expert weights drop TP and go FSDP over
+#              `data` — removes the per-layer activation all-reduces that
+#              dominate MoE training (§Perf HC2).
+STRATEGIES = ("baseline", "fsdp", "serve_tp", "ep_fsdp")
+
+
+def _fsdp_dims(dims):
+    out, placed = [], False
+    for ax in dims:
+        if ax is not None and not placed:
+            out.append(("data", "model"))
+            placed = True
+        else:
+            out.append(None)
+    return tuple(out)
+
+
+def _apply_strategy(dims, strategy: str):
+    if strategy == "baseline":
+        return dims
+    if strategy == "serve_tp":
+        return tuple(None if ax == "data" else ax for ax in dims)
+    if strategy == "fsdp":
+        if len(dims) > 2:           # expert stacks etc: keep expert axis
+            return dims
+        return _fsdp_dims(dims)
+    if strategy == "ep_fsdp":
+        if len(dims) > 2:           # expert stacks: keep ("model", ...) EP
+            return dims
+        # dense/attention: FSDP over data only (model axis reserved for EP)
+        out, placed = [], False
+        for ax in dims:
+            if ax is not None and not placed:
+                out.append("data")
+                placed = True
+            else:
+                out.append(None)
+        return tuple(out)
+    raise ValueError(strategy)
+
+
+def _param_dims(cfg, path_names, shape) -> Tuple[Optional[str], ...]:
+    name = path_names[-1]
+    rank = len(shape)
+    in_moe = rank == 3 and name in ("w_gate", "w_up", "w_down")
+    if in_moe:  # (E, D, F) / (E, F, D): expert-parallel over model
+        if name == "w_down":
+            return ("model", None, "data")
+        return ("model", "data", None)
+    if name == "embed":
+        # vocab over model only: data-sharding D forces a per-step reshard
+        # of the residual stream (measured, §Perf iteration 0).
+        if rank == 3:  # audio (ncb, V, D)
+            return (None, "model", None)
+        return ("model", None)
+    if name == "lm_head":
+        if rank == 3:
+            return (None, None, "model")
+        return (None, "model")
+    if name == "in_proj":
+        # mamba2's fused (z,x,B,C,dt) output has shard-unaligned split
+        # boundaries; only mamba1's (x,z) halves split cleanly.
+        if getattr(cfg, "ssm_variant", "") == "mamba2":
+            return ("data", None)
+        return ("data", "model")
+    if name in _IN_PROJ:
+        return ("data", "model")
+    if name in _LATENT_PROJ:
+        return ("data", None)
+    if name in _OUT_PROJ:
+        return ("model", "data")
+    if name in ("conv_w", "A_log"):
+        return ("model",) + (None,) * (rank - 1)
+    if name in ("dt_bias", "D", "conv_b", "gate_norm") and rank == 1:
+        return ("model",)
+    # router, norms, scalars: replicated
+    return (None,) * rank
+
+
+def param_sharding(cfg, params_shape: PyTree, mesh,
+                   strategy: str = "baseline") -> PyTree:
+    """NamedSharding tree matching ``init_params``'s structure."""
+
+    def one(path, leaf):
+        names = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+        shape = leaf.shape
+        stacked = names and names[0] == "stages" and len(shape) > 0
+        str_names = [n for n in names if isinstance(n, str)] or ["_"]
+        if stacked:
+            core = _apply_strategy(
+                _param_dims(cfg, str_names, shape[1:]), strategy)
+            dims = (None,) + core
+        else:
+            dims = _apply_strategy(_param_dims(cfg, str_names, shape), strategy)
+        return NamedSharding(mesh, guard(mesh, shape, dims))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def strategy_batch_axes(mesh, strategy: str = "baseline") -> tuple:
+    """Mesh axes the global batch (and activations) shard over."""
+    baxes = batch_axes(mesh)
+    if strategy in ("fsdp", "ep_fsdp"):  # no TP -> fold model axis into DP;
+        return baxes + ("model",)        # ep_fsdp resharsds inside the MoE
+    return baxes
+
+
+# -------------------------------------------------------------------- batch
+def batch_sharding(cfg, batch_shape: PyTree, mesh,
+                   strategy: str = "baseline") -> PyTree:
+    baxes = strategy_batch_axes(mesh, strategy)
+
+    def one(path, leaf):
+        dims = (baxes,) + (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, guard(mesh, leaf.shape, dims))
+
+    return jax.tree_util.tree_map_with_path(one, batch_shape)
+
+
+# -------------------------------------------------------------------- cache
+def cache_sharding(cfg, cache_shape: PyTree, mesh) -> PyTree:
+    """Decode caches — batch over DP, heads/channels over model where they
+    divide. Stage caches carry a leading stacked-layer dim; the Zamba2
+    shared-attention caches do not (kind known from build_stages)."""
+    from repro.models.transformer import build_stages
+
+    baxes = batch_axes(mesh)
+    kinds = [k for k, _ in build_stages(cfg)]
+    # GQA caches: KV heads over `model` (guard drops it when KH doesn't
+    # divide, e.g. internvl2 KH=8 on model=16 — the grouped-query fold then
+    # costs a g=2 partial cache gather per layer; sharding head_dim instead
+    # was tried and REFUTED: the hd-contracted score psums are 15x worse,
+    # §Perf optimized-sweep note).
+    core_by_name = {
+        "k": (baxes, None, "model", None),       # (B, S, KH, hd)
+        "v": (baxes, None, "model", None),
+        "c_kv": (baxes, None, None),             # (B, S, r)
+        "k_rope": (baxes, None, None),
+        "conv": (baxes, None, "model"),          # (B, K-1, C)
+        "ssm": (baxes, "model", None, None),     # m1 (B,di,ds) / m2 (B,nh,ds,hd)
+    }
+
+    def one(path, leaf):
+        stage_idx = path[0].idx
+        name = path[-1].key
+        core = core_by_name[name][:]
+        dims = tuple(core)[:len(leaf.shape)]
+        if kinds[stage_idx] != "shared_attn":    # stacked: prepend layer dim
+            dims = (None,) + tuple(core)
+        dims = tuple(dims)[:len(leaf.shape)]
+        return NamedSharding(mesh, guard(mesh, leaf.shape, dims))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,57 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run, no allocation).
+
+``input_specs(cfg, shape)`` returns the batch pytree for the workload shape;
+``state_specs`` adds params / optimizer state / KV cache shapes via
+``jax.eval_shape`` — nothing here allocates device memory.
+
+Modality carve-out (per the brief): for VLM/audio archs the frontend is a
+stub — vision patch embeddings / codec frame tokens arrive precomputed with
+the right shapes.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.transformer import init_cache, init_params
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.mode in ("train", "prefill"):
+        text_len = S - cfg.n_patches if cfg.frontend == "vision" else S
+        tok_shape = (B, text_len, cfg.n_codebooks) if cfg.n_codebooks > 1 \
+            else (B, text_len)
+        batch: Dict[str, Any] = {"tokens": sds(tok_shape, jnp.int32)}
+        if shape.mode == "train":
+            batch["labels"] = sds(tok_shape, jnp.int32)
+        if cfg.frontend == "vision":
+            batch["vision_embeds"] = sds((B, cfg.n_patches, cfg.d_model),
+                                         jnp.float32)
+        return batch
+    # decode: ONE new token against a seq_len-deep cache
+    tok_shape = (B, 1, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, 1)
+    return {"tokens": sds(tok_shape, jnp.int32)}
+
+
+def cache_len_for(cfg: ModelConfig, shape: InputShape) -> int:
+    if shape.sliding_window and cfg.attn_kind != "none":
+        return shape.sliding_window
+    return shape.seq_len
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape):
+    L = cache_len_for(cfg, shape)
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, L, jnp.bfloat16))

@@ -1,0 +1,48 @@
+"""The distributed step functions the launcher jits onto the mesh.
+
+``train_step``: one cohort SGD/AdamW step (the inner step of a federated
+round at datacenter scale — the FedAvg sum over the cohort IS the batch-axis
+mean that the `data`/`pod` sharding all-reduces).
+
+``serve_step``: one-token decode against the KV/SSM cache.
+``prefill_step``: full-sequence forward producing logits.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import decode_step, forward_logits, loss_fn
+from repro.optim import Optimizer, adamw, apply_updates
+
+
+def make_train_step(cfg, optimizer: Optimizer, remat: bool = True) -> Callable:
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, remat=remat), has_aux=True)(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg) -> Callable:
+    def prefill_step(params, batch):
+        return forward_logits(cfg, params, batch, remat=False)
+
+    return prefill_step
+
+
+def make_serve_step(cfg, ring: bool) -> Callable:
+    def serve_step(params, batch, cache, cache_index):
+        return decode_step(cfg, params, batch, cache, cache_index, ring=ring)
+
+    return serve_step
+
+
+def default_optimizer(lr: float = 1e-4) -> Optimizer:
+    return adamw(lr, weight_decay=0.01)

@@ -1,0 +1,20 @@
+from repro.models.transformer import (
+    build_stages,
+    decode_step,
+    forward_logits,
+    init_cache,
+    init_params,
+    loss_fn,
+)
+from repro.models.resnet import (
+    init_resnet,
+    resnet_accuracy,
+    resnet_forward,
+    resnet_loss,
+)
+
+__all__ = [
+    "build_stages", "decode_step", "forward_logits", "init_cache",
+    "init_params", "loss_fn", "init_resnet", "resnet_accuracy",
+    "resnet_forward", "resnet_loss",
+]

@@ -1,0 +1,141 @@
+"""GQA / MHA attention: chunked-causal train/prefill path + KV-cache decode.
+
+The train/prefill path is *query-chunked* (flash-attention-style memory
+behaviour in pure XLA): a ``lax.scan`` over query blocks computes each
+(Qb x S) score tile against the full K/V, so peak memory is O(Qb*S) per head
+instead of O(S^2). The Pallas kernel in ``repro.kernels.flash_attention`` is
+the TPU-tiled version of the same math; ``use_pallas`` switches it in.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding_ctx import weight_cast
+
+from repro.models.common import dense_init
+from repro.models.rope import apply_rope
+
+Params = Dict[str, jnp.ndarray]
+
+Q_CHUNK = 512
+
+
+def init_gqa(key, cfg) -> Params:
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, cfg.d_model, cfg.n_heads * hd, cfg.param_dtype),
+        "wk": dense_init(kk, cfg.d_model, cfg.n_kv_heads * hd, cfg.param_dtype),
+        "wv": dense_init(kv, cfg.d_model, cfg.n_kv_heads * hd, cfg.param_dtype),
+        "wo": dense_init(ko, cfg.n_heads * hd, cfg.d_model, cfg.param_dtype),
+    }
+
+
+def _attn_chunk(qb, k, v, row0, causal: bool):
+    """qb: (B,Qb,KH,G,hd); k,v: (B,S,KH,hd); row0: first query position."""
+    hd = qb.shape[-1]
+    scale = hd ** -0.5
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qb, k).astype(jnp.float32) * scale
+    if causal:
+        S = k.shape[1]
+        Qb = qb.shape[1]
+        rows = row0 + jnp.arange(Qb)
+        cols = jnp.arange(S)
+        mask = cols[None, :] <= rows[:, None]          # (Qb, S)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(qb.dtype)
+    return jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+
+
+def multihead_attention(q, k, v, *, causal: bool = True, q_chunk: int = Q_CHUNK):
+    """q: (B,S,H,hd); k,v: (B,S,KH,hd) with H % KH == 0. Returns (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    vd = v.shape[-1]
+    qg = q.reshape(B, S, KH, G, hd)
+    if S <= q_chunk:
+        out = _attn_chunk(qg, k, v, 0, causal)
+        return out.reshape(B, S, H, vd)
+    assert S % q_chunk == 0, (S, q_chunk)
+    nc = S // q_chunk
+    qc = jnp.moveaxis(qg.reshape(B, nc, q_chunk, KH, G, hd), 1, 0)
+
+    @jax.checkpoint
+    def body(_, inp):
+        qb, idx = inp
+        return None, _attn_chunk(qb, k, v, idx * q_chunk, causal)
+
+    _, outs = jax.lax.scan(body, None, (qc, jnp.arange(nc) * 1))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, vd)
+    return out
+
+
+def gqa_forward(cfg, p: Params, x, positions,
+                return_kv: bool = False):
+    """Self-attention over a full sequence (train / prefill)."""
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    cd = cfg.compute_dtype
+    q = (x @ weight_cast(p["wq"], cd)).reshape(B, S, cfg.n_heads, hd)
+    k = (x @ weight_cast(p["wk"], cd)).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (x @ weight_cast(p["wv"], cd)).reshape(B, S, cfg.n_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = multihead_attention(q, k, v, causal=True)
+    out = out.reshape(B, S, cfg.n_heads * hd) @ weight_cast(p["wo"], cd)
+    if return_kv:
+        return out, (k, v)
+    return out, None
+
+
+def init_gqa_cache(cfg, batch: int, cache_len: int, dtype) -> Dict[str, jnp.ndarray]:
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, cache_len, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def gqa_decode(cfg, p: Params, x, cache: Dict[str, jnp.ndarray],
+               cache_index, ring: bool):
+    """One-token decode. x: (B,1,D); cache k/v: (B,L,KH,hd).
+
+    ``cache_index`` is the absolute position of the new token. With
+    ``ring=True`` the cache is a sliding-window ring buffer (all slots valid,
+    RoPE applied at write time); otherwise slot j holds position j and slots
+    > cache_index are masked.
+    """
+    B, _, _ = x.shape
+    hd = cfg.resolved_head_dim
+    cd = cfg.compute_dtype
+    L = cache["k"].shape[1]
+    q = (x @ weight_cast(p["wq"], cd)).reshape(B, 1, cfg.n_heads, hd)
+    k = (x @ weight_cast(p["wk"], cd)).reshape(B, 1, cfg.n_kv_heads, hd)
+    v = (x @ weight_cast(p["wv"], cd)).reshape(B, 1, cfg.n_kv_heads, hd)
+    pos = jnp.full((B, 1), cache_index, jnp.int32)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    slot = jnp.mod(cache_index, L)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+
+    KH = cfg.n_kv_heads
+    G = cfg.n_heads // KH
+    qg = q.reshape(B, KH, G, hd)
+    scores = jnp.einsum("bkgd,blkd->bkgl", qg, ck.astype(cd)).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    if not ring:
+        valid = jnp.arange(L) <= cache_index
+        scores = jnp.where(valid[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(cd)
+    out = jnp.einsum("bkgl,blkd->bkgd", w, cv.astype(cd))
+    out = out.reshape(B, 1, cfg.n_heads * hd) @ weight_cast(p["wo"], cd)
+    return out, {"k": ck, "v": cv}

@@ -1,0 +1,113 @@
+"""Per-layer blocks: init / forward / decode, dispatched by block kind.
+
+Block kinds:
+  dense       attention (gqa|mla per cfg) + dense FFN
+  moe         attention + MoE FFN (returns router aux loss)
+  ssm         mamba1|mamba2 per cfg.ssm_variant
+  shared_attn the Zamba2 weight-shared attention+MLP block
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba, mla, moe
+from repro.models.common import apply_norm, ffn_apply, ffn_init, init_norm
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------------ init
+def init_block(key, cfg, kind: str) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {}
+    if kind in ("dense", "moe", "shared_attn"):
+        if cfg.attn_kind == "mla":
+            p["attn"] = mla.init_mla(k1, cfg)
+        else:
+            p["attn"] = attn.init_gqa(k1, cfg)
+        n = init_norm(cfg, cfg.d_model)
+        if n is not None:
+            p["norm_attn"] = n
+            p["norm_ffn"] = init_norm(cfg, cfg.d_model)
+        if kind == "moe":
+            p["ffn"] = moe.init_moe(k2, cfg)
+        else:
+            p["ffn"] = ffn_init(k2, cfg, cfg.d_model, cfg.d_ff)
+    elif kind == "ssm":
+        n = init_norm(cfg, cfg.d_model)
+        if n is not None:
+            p["norm"] = n
+        if cfg.ssm_variant == "mamba1":
+            p["ssm"] = mamba.init_mamba1(k1, cfg)
+        else:
+            p["ssm"] = mamba.init_mamba2(k1, cfg)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+# --------------------------------------------------------------- forward
+def block_forward(cfg, kind: str, p: Params, x, positions,
+                  want_kv: bool = False):
+    """Returns (x_out, aux_loss, kv_or_None)."""
+    aux = jnp.zeros((), jnp.float32)
+    kv = None
+    if kind == "ssm":
+        h = apply_norm(cfg, p, x, "norm")
+        if cfg.ssm_variant == "mamba1":
+            x = x + mamba.mamba1_forward(cfg, p["ssm"], h)
+        else:
+            x = x + mamba.mamba2_forward(cfg, p["ssm"], h)
+        return x, aux, kv
+
+    h = apply_norm(cfg, p, x, "norm_attn")
+    if cfg.attn_kind == "mla":
+        a, kv = mla.mla_forward(cfg, p["attn"], h, positions, return_kv=want_kv)
+    else:
+        a, kv = attn.gqa_forward(cfg, p["attn"], h, positions, return_kv=want_kv)
+    x = x + a
+    h = apply_norm(cfg, p, x, "norm_ffn")
+    if kind == "moe":
+        f, aux = moe.moe_apply(cfg, p["ffn"], h)
+    else:
+        f = ffn_apply(cfg, p["ffn"], h)
+    return x + f, aux, kv
+
+
+# ---------------------------------------------------------------- decode
+def init_block_cache(cfg, kind: str, batch: int, cache_len: int, dtype):
+    if kind == "ssm":
+        if cfg.ssm_variant == "mamba1":
+            return mamba.init_mamba1_cache(cfg, batch, dtype)
+        return mamba.init_mamba2_cache(cfg, batch, dtype)
+    if cfg.attn_kind == "mla":
+        return mla.init_mla_cache(cfg, batch, cache_len, dtype)
+    return attn.init_gqa_cache(cfg, batch, cache_len, dtype)
+
+
+def block_decode(cfg, kind: str, p: Params, x, cache, cache_index, ring: bool):
+    """Returns (x_out, new_cache). x: (B,1,D)."""
+    if kind == "ssm":
+        h = apply_norm(cfg, p, x, "norm")
+        if cfg.ssm_variant == "mamba1":
+            out, new_cache = mamba.mamba1_decode(cfg, p["ssm"], h, cache)
+        else:
+            out, new_cache = mamba.mamba2_decode(cfg, p["ssm"], h, cache)
+        return x + out, new_cache
+
+    h = apply_norm(cfg, p, x, "norm_attn")
+    if cfg.attn_kind == "mla":
+        a, new_cache = mla.mla_decode(cfg, p["attn"], h, cache, cache_index, ring)
+    else:
+        a, new_cache = attn.gqa_decode(cfg, p["attn"], h, cache, cache_index, ring)
+    x = x + a
+    h = apply_norm(cfg, p, x, "norm_ffn")
+    if kind == "moe":
+        f, _ = moe.moe_apply(cfg, p["ffn"], h)
+    else:
+        f = ffn_apply(cfg, p["ffn"], h)
+    return x + f, new_cache

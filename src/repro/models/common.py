@@ -1,0 +1,88 @@
+"""Shared building blocks: norms, activations, initializers, embeddings."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding_ctx import weight_cast
+
+Params = Dict[str, Any]
+
+
+def normal_init(key, shape, scale: float, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    """Truncated-normal-ish fan-in init for a (d_in, d_out) matmul weight."""
+    scale = d_in ** -0.5
+    return normal_init(key, (d_in, d_out), scale, dtype)
+
+
+def rms_norm(x, weight=None, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    if weight is not None:
+        x = x * weight.astype(jnp.float32)
+    return x.astype(dtype)
+
+
+def np_layer_norm(x, eps: float = 1e-5):
+    """OLMo's non-parametric LayerNorm: no scale, no bias. [arXiv:2402.00838]"""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps)).astype(dtype)
+
+
+def apply_norm(cfg, params, x, name: str):
+    if cfg.norm == "np_layernorm":
+        return np_layer_norm(x)
+    return rms_norm(x, params[name])
+
+
+def init_norm(cfg, d: int):
+    if cfg.norm == "np_layernorm":
+        return None  # non-parametric; apply_norm ignores params
+    return jnp.ones((d,), jnp.float32)
+
+
+def swiglu(x_gate, x_up):
+    return jax.nn.silu(x_gate) * x_up
+
+
+def ffn_init(key, cfg, d_model: int, d_ff: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(k1, d_model, d_ff, cfg.param_dtype),
+        "w_down": dense_init(k2, d_ff, d_model, cfg.param_dtype),
+    }
+    if cfg.act == "swiglu":
+        p["w_gate"] = dense_init(k3, d_model, d_ff, cfg.param_dtype)
+    return p
+
+
+def ffn_apply(cfg, p: Params, x):
+    cd = cfg.compute_dtype
+    up = x @ weight_cast(p["w_up"], cd)
+    if cfg.act == "swiglu":
+        h = swiglu(x @ weight_cast(p["w_gate"], cd), up)
+    else:
+        h = jax.nn.gelu(up)
+    return h @ weight_cast(p["w_down"], cd)
+
+
+def cross_entropy(logits, labels, ignore_index: int = -100):
+    """Mean token cross-entropy; labels == ignore_index are masked out."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels != ignore_index)
+    labels_safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

@@ -1,0 +1,247 @@
+"""Mamba1 selective scan & Mamba2 (SSD) blocks, train + single-step decode.
+
+Mamba1 (falcon-mamba): per-(channel,state) decay -> chunking would
+materialise a (Q,Q,d_inner,d_state) tensor, so the train path is a
+``lax.scan`` recurrence over time (the TPU-tiled version is the Pallas
+kernel in repro.kernels.selective_scan).
+
+Mamba2 / SSD (zamba2): scalar-per-head decay admits the chunked
+matmul-friendly (MXU-friendly) formulation: intra-chunk quadratic attention
+with decay mask + inter-chunk state carried by a short ``lax.scan``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding_ctx import weight_cast
+
+from repro.models.common import dense_init, normal_init, rms_norm
+
+Params = Dict[str, jnp.ndarray]
+
+SSD_CHUNK = 128
+
+
+# ---------------------------------------------------------------- conv utils
+def causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,C); w: (C,K); b: (C)."""
+    K = w.shape[-1]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[:, i] for i in range(K))
+    return out + b
+
+
+def conv_step(conv_state, x_new, w, b):
+    """One decode step. conv_state: (B,K-1,C) past inputs; x_new: (B,C)."""
+    window = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # (B,K,C)
+    out = jnp.einsum("bkc,ck->bc", window, w) + b
+    return out, window[:, 1:, :]
+
+
+# ------------------------------------------------------------------- mamba1
+def init_mamba1(key, cfg) -> Params:
+    D, di, ds = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dtr = cfg.resolved_dt_rank
+    ks = jax.random.split(key, 6)
+    A = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * di, cfg.param_dtype),
+        "conv_w": normal_init(ks[1], (di, cfg.ssm_conv), 0.5, jnp.float32),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * ds, cfg.param_dtype),
+        "dt_proj": dense_init(ks[3], dtr, di, cfg.param_dtype),
+        "dt_bias": normal_init(ks[4], (di,), 0.5, jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], di, D, cfg.param_dtype),
+    }
+
+
+def _mamba1_inputs(cfg, p, x):
+    cd = cfg.compute_dtype
+    di, ds = cfg.d_inner, cfg.ssm_state
+    dtr = cfg.resolved_dt_rank
+    xz = x @ weight_cast(p["in_proj"], cd)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    return xs, z, di, ds, dtr
+
+
+def _mamba1_ssm_params(cfg, p, xs):
+    """xs: post-conv activations (..., di) -> dt (..., di), B, C (..., ds)."""
+    cd = cfg.compute_dtype
+    ds = cfg.ssm_state
+    dtr = cfg.resolved_dt_rank
+    dbc = xs @ weight_cast(p["x_proj"], cd)
+    dt, Bm, Cm = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(
+        dt @ weight_cast(p["dt_proj"], cd) + p["dt_bias"].astype(cd))
+    return dt, Bm, Cm
+
+
+def mamba1_forward(cfg, p: Params, x):
+    """x: (B,S,D) -> (B,S,D). Sequential selective scan over time."""
+    B, S, D = x.shape
+    cd = cfg.compute_dtype
+    xs, z, di, ds, _ = _mamba1_inputs(cfg, p, x)
+    xs = jax.nn.silu(causal_conv(xs, p["conv_w"].astype(cd), p["conv_b"].astype(cd)))
+    dt, Bm, Cm = _mamba1_ssm_params(cfg, p, xs)
+    A = -jnp.exp(p["A_log"])                                 # (di, ds)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp                                # (B,di),(B,di),(B,ds),(B,ds)
+        da = jnp.exp(dtt.astype(jnp.float32)[..., None] * A) # (B,di,ds)
+        h = da * h + (dtt * xt).astype(jnp.float32)[..., None] * Bt.astype(jnp.float32)[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, Ct.astype(jnp.float32))
+        return h, y.astype(cd)
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    xs_t = jnp.moveaxis(xs, 1, 0)
+    _, ys = jax.lax.scan(step, h0, (xs_t, jnp.moveaxis(dt, 1, 0),
+                                    jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1) + xs * p["D"].astype(cd)
+    y = y * jax.nn.silu(z)
+    return y @ weight_cast(p["out_proj"], cd)
+
+
+def init_mamba1_cache(cfg, batch: int, dtype) -> Params:
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba1_decode(cfg, p: Params, x, cache):
+    """x: (B,1,D) one token."""
+    cd = cfg.compute_dtype
+    xs, z, di, ds, _ = _mamba1_inputs(cfg, p, x[:, 0])
+    xs, conv_state = conv_step(cache["conv"], xs,
+                               p["conv_w"].astype(cd), p["conv_b"].astype(cd))
+    xs = jax.nn.silu(xs)
+    dt, Bm, Cm = _mamba1_ssm_params(cfg, p, xs)
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt.astype(jnp.float32)[..., None] * A)
+    h = da * cache["ssm"] + (dt * xs).astype(jnp.float32)[..., None] * Bm.astype(jnp.float32)[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, Cm.astype(jnp.float32)).astype(cd)
+    y = y + xs * p["D"].astype(cd)
+    y = y * jax.nn.silu(z)
+    out = (y @ weight_cast(p["out_proj"], cd))[:, None, :]
+    return out, {"conv": conv_state.astype(cache["conv"].dtype), "ssm": h}
+
+
+# ------------------------------------------------------------------- mamba2
+def init_mamba2(key, cfg) -> Params:
+    D, di, ds = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = cfg.ssm_n_heads
+    conv_ch = di + 2 * ds
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * di + 2 * ds + nh, cfg.param_dtype),
+        "conv_w": normal_init(ks[1], (conv_ch, cfg.ssm_conv), 0.5, jnp.float32),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "dt_bias": normal_init(ks[2], (nh,), 0.5, jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "gate_norm": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[3], di, D, cfg.param_dtype),
+    }
+
+
+def _mamba2_inputs(cfg, p, x):
+    cd = cfg.compute_dtype
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads
+    zxbcdt = x @ weight_cast(p["in_proj"], cd)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * ds], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (...,nh)
+    return z, xbc, dt
+
+
+def mamba2_forward(cfg, p: Params, x):
+    """Chunked SSD. x: (B,S,D) -> (B,S,D)."""
+    B, S, D = x.shape
+    cd = cfg.compute_dtype
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_head_dim
+    Q = min(SSD_CHUNK, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    z, xbc, dt = _mamba2_inputs(cfg, p, x)
+    xbc = jax.nn.silu(causal_conv(xbc, p["conv_w"].astype(cd), p["conv_b"].astype(cd)))
+    xs, Bm, Cm = jnp.split(xbc, [di, di + ds], axis=-1)
+    xh = xs.reshape(B, nc, Q, nh, hd)
+    Bc = Bm.reshape(B, nc, Q, ds).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, Q, ds).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, Q, nh)                                # f32
+    A = -jnp.exp(p["A_log"])                                      # (nh,)
+
+    # per-step log decay and within-chunk cumulative decay
+    la = dtc * A                                                  # (B,nc,Q,nh)
+    lcum = jnp.cumsum(la, axis=2)                                 # inclusive
+    # intra-chunk: y[t] = sum_{s<=t} (C_t.B_s) exp(lcum_t - lcum_s) dt_s x_s
+    G = jnp.einsum("bcqs,bcks->bcqk", Cc, Bc)                     # (B,nc,Q,Q)
+    delta = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]       # (B,nc,Q,Q,nh)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    M = jnp.where(mask[None, None, :, :, None], jnp.exp(delta), 0.0)
+    att = G[..., None] * M * dtc[:, :, None, :, :]                # (B,nc,Q,Q,nh)
+    y_intra = jnp.einsum("bcqkh,bckhd->bcqhd", att.astype(cd), xh)
+
+    # chunk-final states: S_c = sum_s exp(lcum_end - lcum_s) dt_s B_s (x) x_s
+    decay_to_end = jnp.exp(lcum[:, :, -1:, :] - lcum)             # (B,nc,Q,nh)
+    weighted_x = (decay_to_end * dtc)[..., None].astype(cd) * xh  # (B,nc,Q,nh,hd)
+    S_c = jnp.einsum("bcqs,bcqhd->bchsd", Bc.astype(cd), weighted_x)  # (B,nc,nh,ds,hd)
+
+    # carry states across chunks
+    chunk_decay = jnp.exp(lcum[:, :, -1, :])                      # (B,nc,nh)
+
+    def carry_step(h, inp):
+        s_c, cdk = inp                                            # (B,nh,ds,hd),(B,nh)
+        h_next = cdk[..., None, None] * h + s_c.astype(jnp.float32)
+        return h_next, h                                          # emit state BEFORE chunk
+
+    h0 = jnp.zeros((B, nh, ds, hd), jnp.float32)
+    _, h_prev = jax.lax.scan(
+        carry_step, h0,
+        (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                           # (B,nc,nh,ds,hd)
+
+    # inter-chunk contribution: y_inter[t] = exp(lcum_t) * (C_t . h_prev)
+    Ct_scaled = Cc[..., None, :] * jnp.exp(lcum)[..., :, None]    # (B,nc,Q,nh,ds)
+    y_inter = jnp.einsum("bcqhs,bchsd->bcqhd", Ct_scaled.astype(cd), h_prev.astype(cd))
+
+    y = (y_intra + y_inter).reshape(B, S, di)
+    y = y + xs * jnp.repeat(p["D"].astype(cd), hd)[None, None, :]
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"])
+    return y @ weight_cast(p["out_proj"], cd)
+
+
+def init_mamba2_cache(cfg, batch: int, dtype) -> Params:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_n_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                         jnp.float32),
+    }
+
+
+def mamba2_decode(cfg, p: Params, x, cache):
+    cd = cfg.compute_dtype
+    di, ds, nh, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_n_heads, cfg.ssm_head_dim
+    B = x.shape[0]
+    z, xbc, dt = _mamba2_inputs(cfg, p, x[:, 0])
+    xbc, conv_state = conv_step(cache["conv"], xbc,
+                                p["conv_w"].astype(cd), p["conv_b"].astype(cd))
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + ds], axis=-1)
+    xh = xs.reshape(B, nh, hd)
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * A)                                          # (B,nh)
+    upd = jnp.einsum("bh,bs,bhd->bhsd", dt,
+                     Bm.astype(jnp.float32), xh.astype(jnp.float32))
+    h = da[..., None, None] * cache["ssm"] + upd
+    y = jnp.einsum("bhsd,bs->bhd", h, Cm.astype(jnp.float32)).reshape(B, di).astype(cd)
+    y = y + xs * jnp.repeat(p["D"].astype(cd), hd)[None, :]
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"])
+    out = (y @ weight_cast(p["out_proj"], cd))[:, None, :]
+    return out, {"conv": conv_state.astype(cache["conv"].dtype), "ssm": h}

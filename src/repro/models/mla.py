@@ -1,0 +1,128 @@
+"""Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3). [arXiv:2405.04434]
+
+Train/prefill uses the decompressed form (latent -> per-head K/V, then
+standard chunked attention). Decode uses the *absorbed* form: queries are
+projected into the latent space so attention runs directly against the
+compressed (kv_lora + rope) cache — this is MLA's KV-cache saving and is the
+memory-efficient TPU decode path.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding_ctx import weight_cast
+
+from repro.models.common import dense_init, rms_norm
+from repro.models.rope import apply_rope
+from repro.models.attention import multihead_attention
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_mla(key, cfg) -> Params:
+    ks = jax.random.split(key, 8)
+    H = cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    p: Params = {}
+    if cfg.q_lora_rank:
+        p["wdq"] = dense_init(ks[0], cfg.d_model, cfg.q_lora_rank, cfg.param_dtype)
+        p["q_norm"] = jnp.ones((cfg.q_lora_rank,), jnp.float32)
+        p["wuq"] = dense_init(ks[1], cfg.q_lora_rank, H * qk, cfg.param_dtype)
+    else:
+        p["wq"] = dense_init(ks[1], cfg.d_model, H * qk, cfg.param_dtype)
+    p["wdkv"] = dense_init(ks[2], cfg.d_model, cfg.kv_lora_rank, cfg.param_dtype)
+    p["kv_norm"] = jnp.ones((cfg.kv_lora_rank,), jnp.float32)
+    p["wkr"] = dense_init(ks[3], cfg.d_model, cfg.qk_rope_dim, cfg.param_dtype)
+    p["wuk"] = dense_init(ks[4], cfg.kv_lora_rank, H * cfg.qk_nope_dim, cfg.param_dtype)
+    p["wuv"] = dense_init(ks[5], cfg.kv_lora_rank, H * cfg.v_head_dim, cfg.param_dtype)
+    p["wo"] = dense_init(ks[6], H * cfg.v_head_dim, cfg.d_model, cfg.param_dtype)
+    return p
+
+
+def _queries(cfg, p, x):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    cd = cfg.compute_dtype
+    if cfg.q_lora_rank:
+        cq = rms_norm(x @ weight_cast(p["wdq"], cd), p["q_norm"])
+        q = cq @ weight_cast(p["wuq"], cd)
+    else:
+        q = x @ weight_cast(p["wq"], cd)
+    q = q.reshape(B, S, H, qk)
+    return jnp.split(q, [cfg.qk_nope_dim], axis=-1)  # q_nope, q_rope
+
+
+def mla_forward(cfg, p: Params, x, positions, return_kv: bool = False):
+    """Decompressed-form self-attention (train / prefill)."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    cd = cfg.compute_dtype
+    q_nope, q_rope = _queries(cfg, p, x)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = rms_norm(x @ weight_cast(p["wdkv"], cd), p["kv_norm"])       # (B,S,r)
+    k_rope = apply_rope(x @ weight_cast(p["wkr"], cd), positions, cfg.rope_theta)
+    k_nope = (c_kv @ weight_cast(p["wuk"], cd)).reshape(B, S, H, cfg.qk_nope_dim)
+    v = (c_kv @ weight_cast(p["wuv"], cd)).reshape(B, S, H, cfg.v_head_dim)
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, cfg.qk_rope_dim))],
+        axis=-1)
+    out = multihead_attention(q, k, v, causal=True)
+    out = out.reshape(B, S, H * cfg.v_head_dim) @ weight_cast(p["wo"], cd)
+    if return_kv:
+        return out, (c_kv, k_rope)
+    return out, None
+
+
+def init_mla_cache(cfg, batch: int, cache_len: int, dtype) -> Dict[str, jnp.ndarray]:
+    return {
+        "c_kv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode(cfg, p: Params, x, cache, cache_index, ring: bool):
+    """Absorbed-form one-token decode against the latent cache."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    r = cfg.kv_lora_rank
+    cd = cfg.compute_dtype
+    L = cache["c_kv"].shape[1]
+    pos = jnp.full((B, 1), cache_index, jnp.int32)
+
+    q_nope, q_rope = _queries(cfg, p, x)                         # (B,1,H,*)
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+
+    c_new = rms_norm(x @ weight_cast(p["wdkv"], cd), p["kv_norm"])     # (B,1,r)
+    kr_new = apply_rope(x @ weight_cast(p["wkr"], cd), pos, cfg.rope_theta)
+
+    slot = jnp.mod(cache_index, L)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, slot, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, slot, 0))
+
+    # absorb W_UK into the query: q_lat[h] = q_nope[h] @ W_UK[:, h, :].T
+    wuk = weight_cast(p["wuk"], cd).reshape(r, H, cfg.qk_nope_dim)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], wuk)        # (B,H,r)
+
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    scores = (jnp.einsum("bhr,blr->bhl", q_lat, c_kv.astype(cd))
+              + jnp.einsum("bhd,bld->bhl", q_rope[:, 0], k_rope.astype(cd)))
+    scores = scores.astype(jnp.float32) * scale
+    if not ring:
+        valid = jnp.arange(L) <= cache_index
+        scores = jnp.where(valid[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(cd)
+
+    ctx_lat = jnp.einsum("bhl,blr->bhr", w, c_kv.astype(cd))     # (B,H,r)
+    wuv = weight_cast(p["wuv"], cd).reshape(r, H, cfg.v_head_dim)
+    ctx = jnp.einsum("bhr,rhd->bhd", ctx_lat, wuv)               # (B,H,vd)
+    out = ctx.reshape(B, 1, H * cfg.v_head_dim) @ weight_cast(p["wo"], cd)
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

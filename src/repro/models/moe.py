@@ -1,0 +1,106 @@
+"""Mixture-of-Experts FFN: top-k routing with GShard-style capacity dispatch.
+
+Dense-dispatch einsum baseline (dispatch/combine one-hots): the FLOP count
+matches capacity_factor x active-expert compute, so the roofline numbers are
+honest. Experts are sharded over the `model` mesh axis (see sharding rules);
+the einsum dispatch lowers to all-to-all-free sharded matmuls, and an
+explicit all-to-all variant is a perf hillclimb (EXPERIMENTS §Perf).
+
+Shared experts (DeepSeek-V2 / Llama-4) are a dense FFN of width
+n_shared * moe_d_ff applied to every token.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding_ctx import weight_cast
+
+from repro.models.common import dense_init, ffn_apply, ffn_init
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_moe(key, cfg) -> Params:
+    kr, ke, ks = jax.random.split(key, 3)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    ekeys = jax.random.split(ke, 3)
+    p: Params = {
+        "router": dense_init(kr, D, E, jnp.float32),
+        "w_gate": jax.vmap(lambda k: dense_init(k, D, F, cfg.param_dtype))(
+            jax.random.split(ekeys[0], E)),
+        "w_up": jax.vmap(lambda k: dense_init(k, D, F, cfg.param_dtype))(
+            jax.random.split(ekeys[1], E)),
+        "w_down": jax.vmap(lambda k: dense_init(k, F, D, cfg.param_dtype))(
+            jax.random.split(ekeys[2], E)),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = ffn_init(ks, cfg, D, cfg.n_shared_experts * F)
+    return p
+
+
+def expert_capacity(cfg, seq: int) -> int:
+    c = int(cfg.experts_per_token * seq * cfg.capacity_factor / cfg.n_experts)
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4, floor 4
+
+
+def route(cfg, router_w, x) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (dispatch (B,S,E,C), combine (B,S,E,C), aux_loss scalar)."""
+    B, S, _ = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    C = expert_capacity(cfg, S)
+    logits = (x.astype(jnp.float32) @ router_w)          # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)        # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)          # renormalise over top-k
+
+    dispatch = jnp.zeros((B, S, E, C), x.dtype)
+    combine = jnp.zeros((B, S, E, C), jnp.float32)
+    prev_count = jnp.zeros((B, 1, E), jnp.int32)
+    for r in range(K):
+        mask_r = jax.nn.one_hot(gate_idx[..., r], E, dtype=jnp.int32)   # (B,S,E)
+        pos_r = jnp.cumsum(mask_r, axis=1) - 1 + prev_count             # (B,S,E)
+        prev_count = prev_count + mask_r.sum(axis=1, keepdims=True)
+        keep = (pos_r < C) & (mask_r > 0)
+        pos_oh = jax.nn.one_hot(pos_r, C, dtype=x.dtype) * keep[..., None]
+        # routing assignments are piecewise-constant: gradients flow only
+        # through gate_vals. stop_gradient kills the (B,S,E,*) f32 routing
+        # cotangents that otherwise dominate backward collectives
+        # (EXPERIMENTS §Perf HC2 iteration 1).
+        pos_oh = jax.lax.stop_gradient(pos_oh)
+        dispatch = dispatch + pos_oh
+        combine = combine + gate_vals[..., r][..., None, None] * pos_oh.astype(jnp.float32)
+    dispatch = jax.lax.stop_gradient(dispatch)
+
+    # Switch-style load-balance loss: E * sum_e f_e * P_e
+    f = jnp.mean(
+        jax.nn.one_hot(gate_idx, E, dtype=jnp.float32).sum(-2), axis=(0, 1))
+    P = probs.mean(axis=(0, 1))
+    aux = cfg.n_experts * jnp.sum(f / K * P)
+    return dispatch, combine.astype(x.dtype), aux
+
+
+def moe_apply(cfg, p: Params, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,D) -> (out, aux_loss)."""
+    from repro.models.sharding_ctx import constrain
+
+    cd = cfg.compute_dtype
+    # NOTE (§Perf HC2 iterations 3-4, refuted): explicitly pinning the
+    # dispatch/combine one-hots or the dispatched blocks expert-sharded
+    # FORCES the (B,S,E,C) one-hots to materialise and reshard (4 GB/layer)
+    # — XLA otherwise fuses them into the expert matmuls entirely. With
+    # einsum-dispatch the right move is to leave sharding propagation
+    # alone; the strategy-level layout (ep_fsdp) does the rest.
+    dispatch, combine, aux = route(cfg, p["router"], x)
+    xin = jnp.einsum("bsec,bsd->becd", dispatch, x)          # (B,E,C,D)
+    h_gate = jnp.einsum("becd,edf->becf", xin, weight_cast(p["w_gate"], cd))
+    h_up = jnp.einsum("becd,edf->becf", xin, weight_cast(p["w_up"], cd))
+    h = jax.nn.silu(h_gate) * h_up
+    eout = jnp.einsum("becf,efd->becd", h, weight_cast(p["w_down"], cd))
+    out = jnp.einsum("bsec,becd->bsd", combine, eout)
+    if cfg.n_shared_experts:
+        out = out + ffn_apply(cfg, p["shared"], x)
+    return out, aux * cfg.router_aux_weight

@@ -1,0 +1,21 @@
+"""Rotary position embeddings (half-dim rotation convention)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, D) or (..., S, D); positions: (..., S) int32."""
+    dim = x.shape[-1]
+    inv = rope_freqs(dim, theta)                       # (D/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == positions.ndim + 2:                   # head axis present
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,217 @@
+"""The unified decoder model: stage list + scan-over-layers execution.
+
+An architecture is compiled into a list of *stages*; each stage is either a
+homogeneous stack of layers executed with ``jax.lax.scan`` over stacked
+parameters (O(1) HLO size regardless of depth) or a single application of the
+Zamba2 weight-shared attention block.
+
+Public API:
+  init_params(key, cfg)
+  loss_fn(cfg, params, batch)            train forward -> (loss, metrics)
+  forward_logits(cfg, params, batch)     prefill forward -> logits
+  init_cache(cfg, batch, cache_len, dtype)
+  decode_step(cfg, params, batch, cache, cache_index, ring) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.blocks import (
+    block_decode,
+    block_forward,
+    init_block,
+    init_block_cache,
+)
+from repro.models.common import apply_norm, cross_entropy, init_norm, normal_init
+from repro.models.sharding_ctx import constrain, precast_params
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------------ stages
+def build_stages(cfg) -> List[Tuple[str, int]]:
+    if cfg.arch_type == "hybrid":
+        stages: List[Tuple[str, int]] = []
+        groups, rem = divmod(cfg.n_layers, cfg.attn_every)
+        for _ in range(groups):
+            stages.append(("ssm", cfg.attn_every))
+            stages.append(("shared_attn", 1))
+        if rem:
+            stages.append(("ssm", rem))
+        return stages
+    if cfg.arch_type == "ssm":
+        return [("ssm", cfg.n_layers)]
+    if cfg.n_experts:
+        stages = []
+        if cfg.first_k_dense:
+            stages.append(("dense", cfg.first_k_dense))
+        stages.append(("moe", cfg.n_layers - cfg.first_k_dense))
+        return stages
+    return [("dense", cfg.n_layers)]
+
+
+# ------------------------------------------------------------------- init
+def init_params(key, cfg) -> Params:
+    keys = jax.random.split(key, 8)
+    D = cfg.d_model
+    scale = D ** -0.5
+    p: Params = {}
+    if cfg.n_codebooks > 1:
+        p["embed"] = normal_init(keys[0], (cfg.n_codebooks, cfg.vocab_size, D),
+                                 scale, cfg.param_dtype)
+    else:
+        p["embed"] = normal_init(keys[0], (cfg.vocab_size, D), scale,
+                                 cfg.param_dtype)
+    stage_params: List[Any] = []
+    skey = keys[1]
+    for kind, n in build_stages(cfg):
+        skey, sub = jax.random.split(skey)
+        if kind == "shared_attn":
+            stage_params.append(None)  # weights live in p["shared_attn"]
+        else:
+            lkeys = jax.random.split(sub, n)
+            stage_params.append(
+                jax.vmap(lambda k: init_block(k, cfg, kind))(lkeys))
+    p["stages"] = stage_params
+    if cfg.arch_type == "hybrid":
+        p["shared_attn"] = init_block(keys[2], cfg, "shared_attn")
+    fn = init_norm(cfg, D)
+    if fn is not None:
+        p["final_norm"] = fn
+    if not cfg.tie_embeddings:
+        if cfg.n_codebooks > 1:
+            p["lm_head"] = normal_init(keys[3], (cfg.n_codebooks, D, cfg.vocab_size),
+                                       scale, cfg.param_dtype)
+        else:
+            p["lm_head"] = normal_init(keys[3], (D, cfg.vocab_size), scale,
+                                       cfg.param_dtype)
+    return p
+
+
+# ------------------------------------------------------------------ embed
+def embed_tokens(cfg, params, tokens):
+    cd = cfg.compute_dtype
+    if cfg.n_codebooks > 1:  # tokens: (B,S,ncb)
+        embs = [jnp.take(params["embed"][c], tokens[..., c], axis=0)
+                for c in range(cfg.n_codebooks)]
+        return sum(embs).astype(cd)
+    return jnp.take(params["embed"], tokens, axis=0).astype(cd)
+
+
+def output_logits(cfg, params, h):
+    cd = cfg.compute_dtype
+    if cfg.n_codebooks > 1:
+        if cfg.tie_embeddings:
+            return jnp.einsum("bsd,cvd->bscv", h, params["embed"].astype(cd))
+        return jnp.einsum("bsd,cdv->bscv", h, params["lm_head"].astype(cd))
+    if cfg.tie_embeddings:
+        return h @ params["embed"].astype(cd).T
+    return h @ params["lm_head"].astype(cd)
+
+
+# ---------------------------------------------------------------- forward
+def _run_stages(cfg, params, h, positions, remat: bool):
+    aux_total = jnp.zeros((), jnp.float32)
+    for (kind, n), sp in zip(build_stages(cfg), params["stages"]):
+        if kind == "shared_attn":
+            h, aux, _ = block_forward(cfg, kind, params["shared_attn"], h, positions)
+            aux_total = aux_total + aux
+            continue
+
+        def body(carry, layer_p, _kind=kind):
+            x, aux = carry
+            x = constrain(x, "batch", None, None)
+            out, a, _ = block_forward(cfg, _kind, layer_p, x, positions)
+            out = constrain(out, "batch", None, None)
+            return (out, aux + a), None
+
+        if remat:
+            body = jax.checkpoint(body)
+        (h, aux_total), _ = jax.lax.scan(body, (h, aux_total), sp)
+    return h, aux_total
+
+
+def _embed_batch(cfg, params, batch):
+    """Returns (h, positions, label_pad) handling VLM patch prepending."""
+    h = embed_tokens(cfg, params, batch["tokens"])
+    B = h.shape[0]
+    if cfg.frontend == "vision":
+        ve = batch["vision_embeds"].astype(cfg.compute_dtype)  # (B,P,D)
+        h = jnp.concatenate([ve, h], axis=1)
+    h = constrain(h, "batch", None, None)
+    S = h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return h, positions
+
+
+def forward_logits(cfg, params, batch, remat: bool = False):
+    """Prefill / eval forward: logits for every position."""
+    params = precast_params(params, cfg.compute_dtype)
+    h, positions = _embed_batch(cfg, params, batch)
+    h, _ = _run_stages(cfg, params, h, positions, remat)
+    h = apply_norm(cfg, params, h, "final_norm")
+    return output_logits(cfg, params, h)
+
+
+def loss_fn(cfg, params, batch, remat: bool = True):
+    """Train forward. batch: tokens, labels (+vision_embeds for VLM).
+
+    Labels use -100 as ignore; VLM patch positions are ignored automatically.
+    """
+    params = precast_params(params, cfg.compute_dtype)
+    h, positions = _embed_batch(cfg, params, batch)
+    h, aux = _run_stages(cfg, params, h, positions, remat)
+    h = apply_norm(cfg, params, h, "final_norm")
+    logits = output_logits(cfg, params, h)
+    logits = constrain(logits, "batch", None, "model")
+    labels = batch["labels"]
+    if cfg.frontend == "vision":
+        B, P = labels.shape[0], cfg.n_patches
+        pad = jnp.full((B, P) + labels.shape[2:], -100, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    ce = cross_entropy(logits, labels)
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ----------------------------------------------------------------- decode
+def init_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    caches: List[Any] = []
+    for kind, n in build_stages(cfg):
+        single = init_block_cache(cfg, kind, batch, cache_len, dtype)
+        if kind == "shared_attn":
+            caches.append(single)
+        else:
+            caches.append(jax.tree.map(
+                lambda x: jnp.zeros((n,) + x.shape, x.dtype), single))
+    return caches
+
+
+def decode_step(cfg, params, batch, cache, cache_index, ring: bool = False):
+    """One-token decode. batch["tokens"]: (B,1) or (B,1,ncb)."""
+    params = precast_params(params, cfg.compute_dtype)
+    h = embed_tokens(cfg, params, batch["tokens"])
+    h = constrain(h, "batch", None, None)
+    new_caches: List[Any] = []
+    for (kind, n), sp, sc in zip(build_stages(cfg), params["stages"], cache):
+        if kind == "shared_attn":
+            h, nc = block_decode(cfg, kind, params["shared_attn"], h, sc,
+                                 cache_index, ring)
+            new_caches.append(nc)
+            continue
+
+        def body(x, inp, _kind=kind):
+            layer_p, layer_c = inp
+            out, nc = block_decode(cfg, _kind, layer_p, x, layer_c,
+                                   cache_index, ring)
+            return out, nc
+
+        h, nc = jax.lax.scan(body, h, (sp, sc))
+        h = constrain(h, "batch", None, None)
+        new_caches.append(nc)
+    h = apply_norm(cfg, params, h, "final_norm")
+    logits = output_logits(cfg, params, h)
+    return logits, new_caches

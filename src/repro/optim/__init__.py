@@ -1,0 +1,13 @@
+from repro.optim.optimizers import (
+    SERVER_OPTIMIZERS,
+    Optimizer,
+    adagrad,
+    adam,
+    adamw,
+    apply_updates,
+    sgd,
+    yogi,
+)
+
+__all__ = ["SERVER_OPTIMIZERS", "Optimizer", "adagrad", "adam", "adamw",
+           "apply_updates", "sgd", "yogi"]

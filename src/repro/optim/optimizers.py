@@ -1,0 +1,121 @@
+"""From-scratch optimizers (optax is not available offline).
+
+Each optimizer is an (init, update) pair over arbitrary pytrees:
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+``yogi`` is the paper's server aggregation optimizer (Reddi et al. /
+Ramaswamy et al.); ``fedadam`` / ``fedadagrad`` are the adaptive-FL
+baselines; ``sgd`` (+momentum) is the client-side local optimizer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, Optional[PyTree]], Tuple[PyTree, PyTree]]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def _zeros_like_f32(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"mu": _zeros_like_f32(params)} if momentum else {}
+
+    def update(grads, state, params=None):
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                              state["mu"], grads)
+            return jax.tree.map(lambda m: -lr * m, mu), {"mu": mu}
+        return jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads), state
+
+    return Optimizer(init, update)
+
+
+def _adaptive(lr, b1, b2, eps, variant: str) -> Optimizer:
+    def init(params):
+        return {"m": _zeros_like_f32(params), "v": _zeros_like_f32(params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+
+        def upd_v(v_, g):
+            g2 = jnp.square(g.astype(jnp.float32))
+            if variant == "adam":
+                return b2 * v_ + (1 - b2) * g2
+            if variant == "yogi":
+                return v_ - (1 - b2) * jnp.sign(v_ - g2) * g2
+            if variant == "adagrad":
+                return v_ + g2
+            raise ValueError(variant)
+
+        v = jax.tree.map(upd_v, state["v"], grads)
+        if variant == "adagrad":
+            def step(m_, v_):
+                return -lr * m_ / (jnp.sqrt(v_) + eps)
+        else:
+            bc1 = 1 - b1 ** t.astype(jnp.float32)
+            bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+            def step(m_, v_):
+                mhat = m_ / bc1
+                vhat = v_ / bc2
+                return -lr * mhat / (jnp.sqrt(vhat) + eps)
+
+        return jax.tree.map(step, m, v), {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    return _adaptive(lr, b1, b2, eps, "adam")
+
+
+def yogi(lr: float, b1: float = 0.9, b2: float = 0.99, eps: float = 1e-3):
+    """YoGi — the paper's server optimizer (additive quadratic control)."""
+    return _adaptive(lr, b1, b2, eps, "yogi")
+
+
+def adagrad(lr: float, eps: float = 1e-8):
+    return _adaptive(lr, 0.9, 0.0, eps, "adagrad")
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    base = adam(lr, b1, b2, eps)
+
+    def update(grads, state, params):
+        updates, state2 = base.update(grads, state, params)
+        if weight_decay:
+            updates = jax.tree.map(
+                lambda u, p: u - lr * weight_decay * p.astype(jnp.float32),
+                updates, params)
+        return updates, state2
+
+    return Optimizer(base.init, update)
+
+
+SERVER_OPTIMIZERS = {
+    "yogi": yogi,
+    "fedadam": adam,
+    "fedadagrad": adagrad,
+    "fedavg": lambda lr=1.0: sgd(lr),
+}

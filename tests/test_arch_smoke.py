@@ -1,0 +1,89 @@
+"""Per-architecture smoke: REDUCED variant of each assigned arch family runs
+one forward/train step on CPU — output shapes + no NaNs (brief deliverable f).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.models import decode_step, init_cache, init_params, loss_fn
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    if cfg.n_codebooks > 1:
+        toks = jax.random.randint(key, (B, S, cfg.n_codebooks), 0, cfg.vocab_size)
+    else:
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.frontend == "vision":
+        batch["vision_embeds"] = 0.02 * jax.random.normal(
+            jax.random.fold_in(key, 1), (B, cfg.n_patches, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_train_step(arch, rng):
+    cfg = get_reduced(arch)
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512 and cfg.n_experts <= 4
+    params = init_params(jax.random.fold_in(rng, 1), cfg)
+    batch = _batch(cfg, jax.random.fold_in(rng, 2))
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss)
+    gnorm = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_decode_step(arch, rng):
+    cfg = get_reduced(arch)
+    params = init_params(jax.random.fold_in(rng, 1), cfg)
+    cache = init_cache(cfg, B, cache_len=16)
+    tok_shape = (B, 1, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, 1)
+    tok = jax.random.randint(jax.random.fold_in(rng, 3), tok_shape, 0,
+                             cfg.vocab_size)
+    logits, new_cache = decode_step(cfg, params, {"tokens": tok}, cache,
+                                    jnp.int32(5), ring=False)
+    want = (B, 1, cfg.n_codebooks, cfg.vocab_size) if cfg.n_codebooks > 1 \
+        else (B, 1, cfg.vocab_size)
+    assert logits.shape == want
+    assert jnp.all(jnp.isfinite(logits.astype(jnp.float32)))
+    # cache structurally unchanged
+    assert jax.tree.structure(cache) == jax.tree.structure(new_cache)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_spec(arch):
+    """The full (published) config matches the assignment table."""
+    cfg = get_config(arch)
+    assert cfg.source
+    table = {
+        "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "deepseek-v2-236b": (60, 5120, 128, 128, 1536, 102400),
+        "olmo-1b": (16, 2048, 16, 16, 8192, 50304),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "falcon-mamba-7b": (64, 4096, 0, 0, 0, 65024),
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+        "minicpm3-4b": (62, 2560, 40, 40, 6400, 73448),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+    }
+    L, D, H, KV, FF, V = table[arch]
+    assert cfg.n_layers == L and cfg.d_model == D and cfg.vocab_size == V
+    assert cfg.n_heads == H and cfg.n_kv_heads == KV
+    ff = cfg.moe_d_ff if arch == "deepseek-v2-236b" else cfg.d_ff
+    assert ff == FF
+    if arch == "deepseek-v2-236b":
+        assert cfg.n_experts == 160 and cfg.experts_per_token == 6
+        assert cfg.kv_lora_rank == 512 and cfg.n_shared_experts == 2
+    if arch == "llama4-scout-17b-a16e":
+        assert cfg.n_experts == 16 and cfg.experts_per_token == 1
+    if arch == "zamba2-1.2b":
+        assert cfg.ssm_state == 64 and cfg.ssm_variant == "mamba2"
+    if arch == "falcon-mamba-7b":
+        assert cfg.ssm_state == 16 and cfg.ssm_variant == "mamba1"

@@ -1,0 +1,80 @@
+"""Update compression + FedProx + over-provisioning."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compression import compress_delta, compression_ratio
+from repro.configs.paper_resnet_speech import reduced
+from repro.core import SelectorConfig
+from repro.federated import FLConfig, run_fl
+
+
+@pytest.fixture
+def delta(rng):
+    return {"a": jax.random.normal(rng, (64, 32)),
+            "b": jax.random.normal(jax.random.fold_in(rng, 1), (128,)),
+            "s": jnp.float32(0.5)}
+
+
+def test_int8_roundtrip_error_bounded(delta):
+    r = compress_delta("int8", delta)
+    assert r.wire_ratio == 0.25
+    for k in ("a", "b"):
+        x, y = np.asarray(delta[k]), np.asarray(r.delta[k])
+        scale = np.abs(x).max() / 127.0
+        assert np.abs(x - y).max() <= scale * 0.5 + 1e-7
+
+
+def test_topk_keeps_largest(delta):
+    r = compress_delta("topk", delta)
+    a = np.asarray(r.delta["a"])
+    orig = np.asarray(delta["a"])
+    nz = a != 0
+    assert 0 < nz.sum() <= int(0.05 * orig.size) + 1
+    # surviving entries are exactly the original values
+    assert np.allclose(a[nz], orig[nz])
+    # and they are the largest-magnitude ones
+    kept_min = np.abs(a[nz]).min()
+    dropped_max = np.abs(orig[~nz]).max()
+    assert kept_min >= dropped_max - 1e-7
+
+
+def test_none_identity(delta):
+    r = compress_delta("none", delta)
+    assert r.wire_ratio == 1.0
+    for x, y in zip(jax.tree.leaves(delta), jax.tree.leaves(r.delta)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _cfg(**kw):
+    base = dict(
+        selector=SelectorConfig(kind="eafl", k=4),
+        n_clients=20, rounds=6, local_steps=2, batch_size=8,
+        samples_per_client=16, eval_every=3, eval_samples=70,
+        model=reduced(), input_hw=16,
+        sim_model_bytes=85e6, sim_local_steps=400,
+        init_battery_low=10.0, init_battery_high=50.0)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def test_compression_reduces_dropouts():
+    """Smaller uploads -> less battery per round -> fewer dropouts."""
+    h_raw = run_fl(_cfg())
+    h_cmp = run_fl(_cfg(compression="topk"))
+    assert h_cmp.cum_dropouts[-1] <= h_raw.cum_dropouts[-1]
+    assert h_cmp.mean_battery[-1] >= h_raw.mean_battery[-1]
+
+
+def test_fedprox_and_compression_train():
+    h = run_fl(_cfg(fedprox_mu=0.01, compression="int8"))
+    assert len(h.round) == 6
+    assert all(np.isfinite(h.test_acc))
+
+
+def test_overcommit_caps_aggregated_cohort():
+    h = run_fl(_cfg(overcommit=1.5))
+    assert len(h.round) == 6
+    # participation counts successes over the over-committed set
+    assert all(0.0 <= p <= 1.0 for p in h.participation)

@@ -1,0 +1,68 @@
+"""Data pipeline: non-IID partition semantics, learnable structure."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.data import (
+    label_restricted_partition,
+    lm_batch,
+    make_test_set,
+    markov_lm_tokens,
+)
+
+
+def test_label_restricted_partition(rng):
+    n_clients, m = 16, 40
+    data = label_restricted_partition(rng, n_clients, m, n_classes=35,
+                                      labels_per_client=4, hw=16)
+    assert data["x"].shape == (n_clients, m, 16, 16, 1)
+    assert data["y"].shape == (n_clients, m)
+    for c in range(n_clients):
+        labels = set(np.asarray(data["y"][c]).tolist())
+        assert len(labels) <= 4                    # paper: 10% of 35 labels
+        assert all(0 <= l < 35 for l in labels)
+
+
+def test_partition_is_non_iid(rng):
+    data = label_restricted_partition(rng, 8, 64, labels_per_client=4, hw=16)
+    label_sets = [frozenset(np.asarray(data["y"][c]).tolist()) for c in range(8)]
+    assert len(set(label_sets)) > 1                # clients differ
+
+
+def test_test_set_balanced(rng):
+    test = make_test_set(rng, n_samples=350, n_classes=35, hw=16)
+    counts = np.bincount(np.asarray(test["y"]), minlength=35)
+    assert counts.min() == counts.max() == 10
+
+
+def test_prototypes_are_learnable(rng):
+    """Same class -> similar samples; different class -> distinguishable."""
+    data = make_test_set(rng, n_samples=70, n_classes=35, hw=16, noise=0.3)
+    x = np.asarray(data["x"]).reshape(70, -1)
+    y = np.asarray(data["y"])
+    same = np.mean([np.dot(x[i], x[i + 35]) for i in range(35)])
+    diff = np.mean([np.dot(x[i], x[(i + 1) % 35]) for i in range(35)])
+    assert same > diff
+
+
+def test_markov_tokens_in_range(rng):
+    toks = markov_lm_tokens(rng, 4, 64, vocab=100)
+    assert toks.shape == (4, 64)
+    assert int(toks.min()) >= 0 and int(toks.max()) < 100
+
+
+@pytest.mark.parametrize("arch", ["phi3-mini-3.8b", "internvl2-2b",
+                                  "musicgen-large"])
+def test_lm_batch_shapes(arch, rng):
+    cfg = get_reduced(arch)
+    b = lm_batch(rng, cfg, batch=2, seq_len=32)
+    if cfg.frontend == "vision":
+        assert b["tokens"].shape == (2, 32 - cfg.n_patches)
+        assert b["vision_embeds"].shape == (2, cfg.n_patches, cfg.d_model)
+    elif cfg.n_codebooks > 1:
+        assert b["tokens"].shape == (2, 32, cfg.n_codebooks)
+    else:
+        assert b["tokens"].shape == (2, 32)
+    assert b["labels"].shape == b["tokens"].shape

@@ -1,0 +1,32 @@
+"""Multi-pod dry-run smoke: one (arch x shape) per mesh in a subprocess
+(dryrun.py force-sets 512 host devices, so it must not run in-process)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        capture_output=True, text=True, timeout=420, cwd=REPO, env=env)
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+def test_dryrun_one_pair(mesh):
+    r = _run(["--arch", "olmo-1b", "--shape", "decode_32k", "--mesh", mesh])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "dry-run OK" in r.stdout
+    assert "memory_analysis" in r.stdout
+    assert "dominant=" in r.stdout
+
+
+def test_dryrun_serve_strategy():
+    r = _run(["--arch", "olmo-1b", "--shape", "decode_32k",
+              "--strategy", "serve_tp", "--serve-dtype", "bf16"])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "dry-run OK" in r.stdout

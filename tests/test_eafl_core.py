@@ -1,0 +1,158 @@
+"""Property tests (hypothesis) + unit tests for the paper's core math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    SelectorConfig,
+    SelectorState,
+    eafl_reward,
+    jains_index,
+    make_population,
+    oort_utility,
+    projected_power,
+    select,
+    stat_utility,
+    system_penalty,
+)
+from repro.core import energy
+
+f32 = st.floats(min_value=1e-3, max_value=1e3, allow_nan=False)
+
+
+# ------------------------------------------------------------------ Eq. 2
+@settings(max_examples=40, deadline=None)
+@given(T=f32, t=f32, a=st.floats(0.5, 4.0))
+def test_system_penalty_bounds(T, t, a):
+    pen = float(system_penalty(jnp.float32(T), jnp.float32(t), a))
+    if t <= T:
+        assert pen == 1.0
+    else:
+        assert 0.0 <= pen < 1.0 + 1e-6
+
+
+@settings(max_examples=30, deadline=None)
+@given(losses=st.lists(st.floats(0.0, 50.0), min_size=1, max_size=32),
+       n=st.integers(1, 1000))
+def test_stat_utility_nonneg_and_scales(losses, n):
+    ls = jnp.asarray(losses, jnp.float32)
+    u1 = float(stat_utility(ls, n))
+    u2 = float(stat_utility(ls, 2 * n))
+    assert u1 >= 0.0
+    assert abs(u2 - 2 * u1) < 1e-3 * max(u1, 1.0)
+
+
+def test_oort_utility_penalises_stragglers():
+    su = jnp.asarray([10.0, 10.0])
+    t = jnp.asarray([50.0, 200.0])
+    u = oort_utility(su, t, T=100.0, alpha=2.0)
+    assert u[0] > u[1]
+    assert float(u[1]) == pytest.approx(10.0 * (100 / 200) ** 2)
+
+
+# ------------------------------------------------------------------ Eq. 1
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 64), st.integers(0, 2 ** 31 - 1))
+def test_eafl_reward_extremes(n, seed):
+    key = jax.random.PRNGKey(seed)
+    util = jax.random.uniform(key, (n,)) * 100
+    power = jax.random.uniform(jax.random.fold_in(key, 1), (n,)) * 100
+    valid = jnp.ones((n,), bool)
+    r1 = eafl_reward(util, power, f=1.0, valid=valid)
+    r0 = eafl_reward(util, power, f=0.0, valid=valid)
+    assert int(jnp.argmax(r1)) == int(jnp.argmax(util))
+    assert int(jnp.argmax(r0)) == int(jnp.argmax(power))
+
+
+def test_eafl_reward_masks_invalid():
+    util = jnp.asarray([1.0, 100.0, 2.0])
+    power = jnp.asarray([1.0, 100.0, 2.0])
+    valid = jnp.asarray([True, False, True])
+    r = eafl_reward(util, power, f=0.5, valid=valid)
+    assert r[1] == -jnp.inf
+
+
+def test_projected_power_floor():
+    assert float(projected_power(jnp.float32(5.0), jnp.float32(9.0))) == 0.0
+    assert float(projected_power(jnp.float32(50.0), jnp.float32(9.0))) == 41.0
+
+
+# ----------------------------------------------------------------- energy
+@settings(max_examples=40, deadline=None)
+@given(cat=st.integers(0, 2), t1=st.floats(0, 3600), t2=st.floats(0, 3600))
+def test_comp_energy_monotone(cat, t1, t2):
+    lo, hi = sorted([t1, t2])
+    e_lo = float(energy.comp_battery_pct(jnp.int32(cat), jnp.float32(lo)))
+    e_hi = float(energy.comp_battery_pct(jnp.int32(cat), jnp.float32(hi)))
+    assert 0.0 <= e_lo <= e_hi
+
+
+def test_comm_energy_table1_values():
+    """One hour of WiFi download must cost 18.09x + 0.17 %-battery."""
+    pct = float(energy.comm_battery_pct(jnp.int32(0), 3600.0, 0.0))
+    assert pct == pytest.approx(18.09 + 0.17, abs=1e-3)
+    pct3g = float(energy.comm_battery_pct(jnp.int32(1), 0.0, 3600.0))
+    assert pct3g == pytest.approx(15.31 + 2.67, abs=1e-3)
+
+
+def test_comm_energy_clamped_nonneg():
+    # WiFi upload intercept is negative (-2.68): tiny transfers cost >= 0
+    pct = float(energy.comm_battery_pct(jnp.int32(0), 0.0, 1.0))
+    assert pct >= 0.0
+
+
+def test_category_power_table2():
+    assert np.allclose(np.asarray(energy.CATEGORY_POWER_W), [6.33, 5.44, 2.98])
+    assert np.allclose(np.asarray(energy.CATEGORY_BATTERY_MAH),
+                       [4000.0, 3450.0, 3000.0])
+
+
+# --------------------------------------------------------------- fairness
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 100), min_size=2, max_size=50))
+def test_jains_bounds(counts):
+    x = jnp.asarray(counts, jnp.float32)
+    j = float(jains_index(x))
+    n = len(counts)
+    assert 1.0 / n - 1e-6 <= j <= 1.0 + 1e-6
+
+
+def test_jains_extremes():
+    assert float(jains_index(jnp.ones(10))) == pytest.approx(1.0)
+    one_hot = jnp.zeros(10).at[3].set(5.0)
+    assert float(jains_index(one_hot)) == pytest.approx(0.1)
+
+
+# -------------------------------------------------------------- selectors
+@pytest.mark.parametrize("kind", ["eafl", "oort", "random"])
+def test_select_invariants(kind, rng):
+    pop = make_population(rng, 64)
+    # mark some clients dropped
+    dropped = jnp.zeros((64,), bool).at[:8].set(True)
+    pop = pop.replace(dropped=dropped,
+                      stat_util=jax.random.uniform(rng, (64,)) * 10,
+                      explored=jax.random.bernoulli(rng, 0.5, (64,)))
+    cfg = SelectorConfig(kind=kind, k=10)
+    state = SelectorState.create(cfg)
+    pred = jnp.zeros((64,))
+    for r in range(5):
+        key = jax.random.fold_in(rng, r)
+        idx, state = select(key, cfg, state, pop, pred)
+        assert len(idx) == 10
+        assert len(set(idx.tolist())) == 10          # unique
+        assert not np.any(np.asarray(pop.dropped)[idx])  # never dropped ones
+
+
+def test_eafl_prefers_high_battery(rng):
+    """With f->0, EAFL must pick the high-battery half."""
+    pop = make_population(rng, 40)
+    battery = jnp.concatenate([jnp.full((20,), 10.0), jnp.full((20,), 90.0)])
+    pop = pop.replace(battery_pct=battery,
+                      explored=jnp.ones((40,), bool),
+                      stat_util=jnp.ones((40,)))
+    cfg = SelectorConfig(kind="eafl", k=10, f=0.0, epsilon0=0.0,
+                         epsilon_min=0.0)
+    idx, _ = select(rng, cfg, SelectorState.create(cfg), pop, jnp.zeros((40,)))
+    assert np.all(idx >= 20), idx

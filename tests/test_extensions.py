@@ -1,0 +1,72 @@
+"""Beyond-paper extensions: energy-per-joule selector, recharge model,
+over-provisioning deadline, sharding strategy units."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_resnet_speech import reduced
+from repro.core import SelectorConfig, SelectorState, make_population, select
+from repro.federated import FLConfig, run_fl
+
+
+def test_eafl_epj_selector_prefers_efficient_clients(rng):
+    pop = make_population(rng, 40)
+    # same utility everywhere; half the clients pay 10x the energy
+    cost = jnp.concatenate([jnp.full((20,), 10.0), jnp.full((20,), 1.0)])
+    pop = pop.replace(stat_util=jnp.ones((40,)),
+                      explored=jnp.ones((40,), bool),
+                      battery_pct=jnp.full((40,), 80.0))
+    cfg = SelectorConfig(kind="eafl-epj", k=10, epsilon0=0.0, epsilon_min=0.0)
+    idx, _ = select(rng, cfg, SelectorState.create(cfg), pop, cost)
+    assert np.all(idx >= 20), idx
+
+
+def test_eafl_epj_never_selects_doomed_clients(rng):
+    pop = make_population(rng, 20)
+    cost = jnp.full((20,), 50.0)
+    battery = jnp.concatenate([jnp.full((10,), 40.0),   # would die mid-round
+                               jnp.full((10,), 90.0)])
+    pop = pop.replace(stat_util=jnp.ones((20,)), explored=jnp.ones((20,), bool),
+                      battery_pct=battery)
+    cfg = SelectorConfig(kind="eafl-epj", k=5, epsilon0=0.0, epsilon_min=0.0)
+    idx, _ = select(rng, cfg, SelectorState.create(cfg), pop, cost)
+    assert np.all(idx >= 10), idx
+
+
+def _cfg(kind, **kw):
+    base = dict(
+        selector=SelectorConfig(kind=kind, k=4),
+        n_clients=20, rounds=6, local_steps=2, batch_size=8,
+        samples_per_client=16, eval_every=3, eval_samples=70,
+        model=reduced(), input_hw=16)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def test_run_fl_with_epj_selector():
+    h = run_fl(_cfg("eafl-epj"))
+    assert len(h.round) == 6
+    assert all(np.isfinite(h.test_acc))
+
+
+def test_recharge_model_restores_battery():
+    heavy = dict(init_battery_low=2.0, init_battery_high=10.0,
+                 sim_model_bytes=85e6, sim_local_steps=1600)
+    h_flat = run_fl(_cfg("random", **heavy))
+    h_charge = run_fl(_cfg("random", recharge_pct_per_hour=40.0,
+                           plugged_frac=0.8, **heavy))
+    assert h_charge.mean_battery[-1] > h_flat.mean_battery[-1]
+    assert h_charge.cum_dropouts[-1] <= h_flat.cum_dropouts[-1]
+
+
+def test_strategy_shardings_distinct():
+    from repro.launch.sharding import _apply_strategy
+
+    base = ("data", "model")
+    assert _apply_strategy(base, "baseline") == ("data", "model")
+    assert _apply_strategy(base, "serve_tp") == (None, "model")
+    assert _apply_strategy(base, "fsdp") == (("data", "model"), None)
+    moe = ("model", "data", None)
+    assert _apply_strategy(moe, "fsdp") == moe      # expert stacks untouched
+    assert _apply_strategy(moe, "ep_fsdp") == moe

@@ -1,0 +1,43 @@
+"""Optimizers converge on a quadratic; checkpoint roundtrips."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.optim import adagrad, adam, adamw, apply_updates, sgd, yogi
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: sgd(0.1), lambda: sgd(0.05, momentum=0.9), lambda: adam(0.1),
+    lambda: yogi(0.1), lambda: adagrad(0.5), lambda: adamw(0.1, weight_decay=0.0),
+])
+def test_quadratic_convergence(make_opt):
+    opt = make_opt()
+    target = {"a": jnp.asarray([1.0, -2.0, 3.0]), "b": jnp.asarray(0.5)}
+    params = jax.tree.map(jnp.zeros_like, target)
+    state = opt.init(params)
+
+    def loss(p):
+        return sum(jnp.sum((x - t) ** 2)
+                   for x, t in zip(jax.tree.leaves(p), jax.tree.leaves(target)))
+
+    for _ in range(300):
+        grads = jax.grad(loss)(params)
+        updates, state = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+    assert float(loss(params)) < 1e-2
+
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    params = {"w": jax.random.normal(rng, (4, 4)),
+              "stages": [{"x": jnp.arange(3)}, None],
+              "t": (jnp.ones(2), jnp.zeros(1))}
+    path = os.path.join(tmp_path, "ckpt.msgpack")
+    save_checkpoint(path, params, step=7, extra={"lr": 0.1})
+    loaded, step, extra = load_checkpoint(path)
+    assert step == 7 and extra["lr"] == 0.1
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(loaded)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,69 @@
+"""Roofline HLO parser: trip-count multipliers, dot FLOPs, collective costs."""
+import pytest
+
+from repro.launch.roofline import parse_hlo, shape_bytes
+
+HLO = """\
+HloModule test
+
+%body.1 (p: (s32[], f32[16,32])) -> (s32[], f32[16,32]) {
+  %p = (s32[], f32[16,32]) parameter(0)
+  %w = f32[32,32] parameter(1)
+  %x = f32[16,32] get-tuple-element(%p), index=1
+  %dot.1 = f32[16,32] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %all-reduce.1 = f32[16,32] all-reduce(%dot.1), channel_id=1, replica_groups=[2,4]<=[8], use_global_device_ids=true
+}
+
+%cond.1 (p2: (s32[], f32[16,32])) -> pred[] {
+  %p2 = (s32[], f32[16,32]) parameter(0)
+  %i = s32[] get-tuple-element(%p2), index=0
+  %c = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main.1 (a: f32[16,32]) -> f32[16,32] {
+  %a = f32[16,32] parameter(0)
+  %t = (s32[], f32[16,32]) tuple(%zero, %a)
+  %while.1 = (s32[], f32[16,32]) while(%t), condition=%cond.1, body=%body.1
+  %all-gather.9 = f32[16,64] all-gather(%a), channel_id=2, replica_groups=[4,2]<=[8], dimensions={1}
+  ROOT %r = f32[16,32] get-tuple-element(%while.1), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[16,32]") == 16 * 32 * 4
+    assert shape_bytes("(bf16[8,8], s32[4])") == 8 * 8 * 2 + 4 * 4
+    assert shape_bytes("pred[]") == 1
+
+
+def test_parse_hlo_trip_and_costs():
+    stats = parse_hlo(HLO)
+    assert stats.n_while == 1
+    # dot inside while body: 2*16*32*32 flops * trip 10
+    assert stats.dot_flops == pytest.approx(2 * 16 * 32 * 32 * 10)
+    # all-reduce in body: 2048 bytes * 2*(4-1)/4 * 10 trips
+    ar = 16 * 32 * 4 * 2 * (3 / 4) * 10
+    # all-gather in entry: 16*64*4 bytes * (2-1)/2 * 1
+    ag = 16 * 64 * 4 * (1 / 2)
+    assert stats.by_type["all-reduce"] == pytest.approx(ar)
+    assert stats.by_type["all-gather"] == pytest.approx(ag)
+    assert stats.collective_bytes == pytest.approx(ar + ag)
+
+
+def test_parse_real_artifact_smoke():
+    """End-to-end: a tiny jitted scan on 1 device parses without error."""
+    import jax
+    import jax.numpy as jnp
+
+    def f(w, x):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), None
+        return jax.lax.scan(body, x, w)[0].sum()
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((5, 16, 16), jnp.float32),
+        jax.ShapeDtypeStruct((4, 16), jnp.float32)).compile()
+    stats = parse_hlo(comp.as_text())
+    # 5 iterations x 2*4*16*16 flops
+    assert stats.dot_flops == pytest.approx(2 * 4 * 16 * 16 * 5)

@@ -1,0 +1,77 @@
+"""Event-driven round simulation invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EnergyModel, make_population
+from repro.federated import predicted_round_cost_pct, simulate_round
+
+MB = 4e6  # 4MB model
+
+
+@pytest.fixture
+def pop(rng):
+    return make_population(rng, 32)
+
+
+def test_selected_drain_more(pop):
+    em = EnergyModel()
+    sel = np.arange(8)
+    before = np.asarray(pop.battery_pct)
+    new_pop, out = simulate_round(pop, sel, em, MB, 10, 20, rnd=1)
+    after = np.asarray(new_pop.battery_pct)
+    drain = before - after
+    assert (drain[sel] > 0).all()
+    assert (drain >= -1e-6).all()
+    # selected clients drain more than every unselected client
+    assert drain[sel].min() > drain[8:].max()
+
+
+def test_prediction_matches_debit(pop):
+    """power(i)'s predicted battery_used == the actual debit (same model)."""
+    em = EnergyModel()
+    pred = np.asarray(predicted_round_cost_pct(pop, em, MB, 10, 20))
+    sel = np.arange(4)
+    before = np.asarray(pop.battery_pct)
+    new_pop, _ = simulate_round(pop, sel, em, MB, 10, 20, rnd=1)
+    after = np.asarray(new_pop.battery_pct)
+    np.testing.assert_allclose(before[sel] - after[sel], pred[sel], rtol=1e-5)
+
+
+def test_dropout_on_battery_exhaustion(pop):
+    em = EnergyModel()
+    batt = jnp.asarray(np.where(np.arange(32) < 4, 0.01, 80.0), jnp.float32)
+    pop = pop.replace(battery_pct=batt)
+    sel = np.arange(8)
+    new_pop, out = simulate_round(pop, sel, em, MB, 10, 20, rnd=1)
+    assert not out.succeeded[:4].any()      # ran out mid-round -> failed
+    assert out.succeeded[4:].all()
+    assert np.asarray(new_pop.dropped)[:4].all()
+    assert out.new_dropouts >= 4
+
+
+def test_round_duration_is_slowest_success(pop):
+    em = EnergyModel()
+    sel = np.arange(8)
+    _, out = simulate_round(pop, sel, em, MB, 10, 20, rnd=1)
+    assert out.round_duration == pytest.approx(
+        out.durations[out.succeeded].max())
+
+
+def test_deadline_caps_round(pop):
+    em = EnergyModel()
+    sel = np.arange(8)
+    _, out = simulate_round(pop, sel, em, MB, 10, 20, rnd=1, deadline_s=1.0)
+    assert out.round_duration <= 1.0 + 1e-6
+
+
+def test_participation_bookkeeping(pop):
+    em = EnergyModel()
+    sel = np.asarray([3, 7, 11])
+    new_pop, _ = simulate_round(pop, sel, em, MB, 10, 20, rnd=5)
+    ts = np.asarray(new_pop.times_selected)
+    assert ts[sel].tolist() == [1, 1, 1]
+    assert ts.sum() == 3
+    assert np.asarray(new_pop.explored)[sel].all()
+    assert (np.asarray(new_pop.last_round)[sel] == 5).all()
