@@ -1,0 +1,130 @@
+"""Selection-path scaling sweep: host argsort vs jitted top_k vs Pallas.
+
+Times one full selection step of the round engine — predicted round cost
+(Eq. 1's ``power(i)`` input) + scores + exploration + state update — over
+synthetic populations from 10k to 1M clients, on three legs:
+
+  host    the original eager path (eager ``predicted_round_cost_pct`` +
+          ``select_host``: jnp scores pulled to host, two full
+          ``np.argsort`` over the population)
+  jit     the device-resident path (one jitted function fusing the cost
+          model with ``select_device``'s ``jax.lax.top_k`` selection)
+  pallas  the same fused step dispatching exploitation to the fused
+          ``topk_reward`` Pallas kernel (interpret mode off-TPU, so its
+          CPU number only proves the kernel logic; the jit leg carries the
+          speedup claim there)
+
+Writes ``BENCH_selection.json`` and prints one row per (N, leg).
+
+  PYTHONPATH=src python -m benchmarks.selection_scale [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EnergyModel, SelectorConfig, SelectorState, \
+    make_population
+from repro.core.selection import _device_select, select_host
+from repro.federated.simulation import _round_cost, predicted_round_cost_pct
+
+DEFAULT_SIZES = (10_000, 65_536, 262_144, 1_048_576)
+# the simulated device workload (ResNet-34-class update, ~500 local epochs)
+MODEL_BYTES, LOCAL_STEPS, BATCH = 85e6, 1600, 20
+
+
+def _synth_pop(key, n: int):
+    pop = make_population(key, n)
+    ks = jax.random.split(jax.random.fold_in(key, 1), 3)
+    return pop.replace(
+        stat_util=jax.random.uniform(ks[0], (n,)) * 10,
+        explored=jax.random.bernoulli(ks[1], 0.7, (n,)),
+        dropped=jax.random.bernoulli(ks[2], 0.05, (n,)),
+    )
+
+
+def _time_ms(fn, reps: int) -> float:
+    fn()  # warmup (compile)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    # best-of-reps: the standard noise-resistant microbenchmark estimate
+    # (this container shares its host, so means/medians absorb neighbours)
+    return float(np.min(ts)) * 1e3
+
+
+def sweep(sizes, k: int, reps: int, pallas_reps: int, skip_pallas: bool):
+    cfg = SelectorConfig(kind="eafl", k=k)
+    em = EnergyModel()
+    interpret = jax.default_backend() != "tpu"
+    rows = []
+    for n in sizes:
+        key = jax.random.PRNGKey(n)
+        pop = _synth_pop(key, n)
+        state = SelectorState.create(cfg)
+
+        def host_step():
+            pred = predicted_round_cost_pct(pop, em, MODEL_BYTES,
+                                            LOCAL_STEPS, BATCH)
+            return select_host(key, cfg, state, pop, pred)
+
+        host_ms = _time_ms(host_step, reps)
+
+        def make_jit_step(use_pallas):
+            @jax.jit
+            def step(key, state, pop):
+                _t, cost = _round_cost(pop, em, MODEL_BYTES, LOCAL_STEPS,
+                                       BATCH, None)
+                return _device_select(key, cfg, state, pop, cost,
+                                      use_pallas, interpret)
+
+            return lambda: jax.block_until_ready(step(key, state, pop)[:2])
+
+        jit_ms = _time_ms(make_jit_step(False), reps)
+        row = {"n": n, "k": k, "host_ms": round(host_ms, 3),
+               "jit_ms": round(jit_ms, 3),
+               "speedup_jit_vs_host": round(host_ms / jit_ms, 1)}
+        if not skip_pallas:
+            row["pallas_ms"] = round(_time_ms(make_jit_step(True),
+                                              pallas_reps), 3)
+            row["pallas_interpret"] = interpret
+        rows.append(row)
+        print(",".join(f"{k_}={v}" for k_, v in row.items()), flush=True)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="+", default=DEFAULT_SIZES)
+    ap.add_argument("--k", type=int, default=100)
+    ap.add_argument("--reps", type=int, default=9)
+    ap.add_argument("--pallas-reps", type=int, default=3,
+                    help="interpret mode is slow on CPU; time fewer reps")
+    ap.add_argument("--skip-pallas", action="store_true")
+    ap.add_argument("--fast", action="store_true",
+                    help="small sizes only (CI smoke)")
+    ap.add_argument("--out", default="BENCH_selection.json")
+    args = ap.parse_args()
+
+    sizes = (10_000, 65_536) if args.fast else args.sizes
+    rows = sweep(sizes, args.k, args.reps, args.pallas_reps,
+                 args.skip_pallas)
+    result = {"backend": jax.default_backend(), "k": args.k,
+              "reps": args.reps,
+              "workload": {"model_bytes": MODEL_BYTES,
+                           "local_steps": LOCAL_STEPS, "batch": BATCH},
+              "rows": rows}
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,16 +4,26 @@ from repro.core.energy import EnergyModel
 from repro.core.fairness import jains_index, participation_rate
 from repro.core.rewards import (
     eafl_reward,
+    minmax_normalize,
     oort_utility,
     projected_power,
     stat_utility,
     system_penalty,
 )
-from repro.core.selection import SelectorConfig, SelectorState, select
+from repro.core.selection import (
+    PALLAS_N_THRESHOLD,
+    SelectorConfig,
+    SelectorState,
+    compute_scores,
+    select,
+    select_device,
+    select_host,
+)
 
 __all__ = [
     "ClientPopulation", "make_population", "round_times", "EnergyModel",
-    "jains_index", "participation_rate", "eafl_reward", "oort_utility",
-    "projected_power", "stat_utility", "system_penalty",
-    "SelectorConfig", "SelectorState", "select",
+    "jains_index", "participation_rate", "eafl_reward", "minmax_normalize",
+    "oort_utility", "projected_power", "stat_utility", "system_penalty",
+    "PALLAS_N_THRESHOLD", "SelectorConfig", "SelectorState",
+    "compute_scores", "select", "select_device", "select_host",
 ]

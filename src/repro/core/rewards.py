@@ -29,7 +29,10 @@ def stat_utility(per_sample_loss: jnp.ndarray, n_samples) -> jnp.ndarray:
 def system_penalty(T: jnp.ndarray, t_i: jnp.ndarray, alpha: float = 2.0):
     """(T/t_i)^{1(T<t_i)*alpha} — penalise clients slower than the pacer T."""
     slow = t_i > T
-    pen = jnp.power(jnp.maximum(T, 1e-9) / jnp.maximum(t_i, 1e-9), alpha)
+    ratio = jnp.maximum(T, 1e-9) / jnp.maximum(t_i, 1e-9)
+    # pow() is a transcendental; the paper's alpha=2 is a plain square,
+    # which matters at million-client populations
+    pen = jnp.square(ratio) if alpha == 2.0 else jnp.power(ratio, alpha)
     return jnp.where(slow, pen, 1.0)
 
 
@@ -44,12 +47,21 @@ def projected_power(battery_pct: jnp.ndarray,
     return jnp.maximum(battery_pct - predicted_round_cost_pct, 0.0)
 
 
-def _minmax(x, valid):
+def minmax_range(x, valid):
+    """(lo, range) of ``x`` over the ``valid`` subset (range floored)."""
     big = jnp.where(valid, x, -jnp.inf)
     small = jnp.where(valid, x, jnp.inf)
     lo, hi = jnp.min(small), jnp.max(big)
-    rng = jnp.maximum(hi - lo, 1e-9)
+    return lo, jnp.maximum(hi - lo, 1e-9)
+
+
+def minmax_normalize(x, valid):
+    """Min-max normalise ``x`` over the ``valid`` subset (0 elsewhere)."""
+    lo, rng = minmax_range(x, valid)
     return jnp.where(valid, (x - lo) / rng, 0.0)
+
+
+_minmax = minmax_normalize
 
 
 def eafl_reward(util: jnp.ndarray, power: jnp.ndarray, f: float,

@@ -10,13 +10,18 @@ which EAFL modifies *only* in the reward definition, Eq. 1):
   - a pacer maintains the developer-preferred round duration T used by the
     system-efficiency penalty in Eq. 2.
 
-Selection runs eagerly on host once per round (the population is small next
-to the training step); ``repro.kernels.topk_select`` provides the Pallas
-TPU kernel for million-client populations.
+The hot path is device-resident: ``select_device`` is a single jitted
+function (exploration via the Gumbel-top-k trick, exploitation via
+``jax.lax.top_k`` or, above ``PALLAS_N_THRESHOLD`` on TPU, the fused
+Pallas ``topk_reward`` kernel), returning fixed-shape ``(k,)`` indices plus
+a chosen-slot mask so it composes with ``jax.lax.scan``. ``select`` is the
+thin host wrapper that trims to the chosen slots; ``select_host`` keeps the
+original eager numpy implementation as the parity reference.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
+from functools import partial
 from typing import Optional, Tuple
 
 import jax
@@ -25,9 +30,14 @@ import numpy as np
 
 from repro.core import rewards
 from repro.core.clients import ClientPopulation
+from repro.kernels import topk_select as _tk
+
+# population size above which the Pallas kernel is preferred on TPU;
+# below it a single lax.top_k is faster than a two-level tournament.
+PALLAS_N_THRESHOLD = 131_072
 
 
-@dataclass
+@dataclass(frozen=True)
 class SelectorConfig:
     kind: str                     # eafl | oort | random | eafl-epj
     k: int = 10
@@ -45,6 +55,9 @@ class SelectorConfig:
 
 @dataclass
 class SelectorState:
+    """Selector carry. All fields are scalars (python or jnp 0-d) so the
+    state is a 4-leaf pytree that flows through jit and lax.scan."""
+
     round: int = 0
     epsilon: float = 0.9
     pacer_T: float = 120.0
@@ -54,47 +67,223 @@ class SelectorState:
     def create(cls, cfg: SelectorConfig) -> "SelectorState":
         return cls(round=0, epsilon=cfg.epsilon0, pacer_T=cfg.pacer_t0)
 
+    def canonical(self) -> "SelectorState":
+        """Strong-typed device scalars (required as a lax.scan carry)."""
+        return SelectorState(
+            round=jnp.asarray(self.round, jnp.int32),
+            epsilon=jnp.asarray(self.epsilon, jnp.float32),
+            pacer_T=jnp.asarray(self.pacer_T, jnp.float32),
+            util_ema=jnp.asarray(self.util_ema, jnp.float32))
 
-def _ucb_bonus(cfg, pop: ClientPopulation, rnd: int) -> jnp.ndarray:
+
+jax.tree_util.register_pytree_node(
+    SelectorState,
+    lambda s: ((s.round, s.epsilon, s.pacer_T, s.util_ema), None),
+    lambda _, leaves: SelectorState(*leaves))
+
+
+def _rank_bits(key, n: int) -> jnp.ndarray:
+    """Random ranking keys equivalent to Gumbel top-k from the same key.
+
+    ``uniform(key)`` keeps the top 23 bits of ``bits(key)`` as the f32
+    mantissa, and ``gumbel = -log(-log(uniform))`` is strictly increasing,
+    so ranking ``bits >> 9`` yields index-for-index (and tie-for-tie) the
+    same top-k as ranking the Gumbels — this is what makes the device path
+    bit-compatible with ``jax.random.choice(replace=False)`` and the host
+    reference while skipping the float transforms. The 23-bit keys are
+    returned as exact f32 integers: XLA's CPU TopK fast path is
+    float-only (integer top_k falls back to a full sort).
+    """
+    return (jax.random.bits(key, (n,), jnp.uint32) >> 9).astype(jnp.float32)
+
+
+def _ucb_bonus(cfg, pop: ClientPopulation, rnd) -> jnp.ndarray:
     age = jnp.maximum(rnd - pop.last_round, 1)
-    return cfg.ucb_c * jnp.sqrt(jnp.log(float(rnd) + 1.0) / age)
+    rnd_f = jnp.asarray(rnd, jnp.float32)
+    return cfg.ucb_c * jnp.sqrt(jnp.log(rnd_f + 1.0) / age)
+
+
+def _score_inputs(cfg: SelectorConfig, state: SelectorState,
+                  pop: ClientPopulation, predicted_cost_pct):
+    """Elementwise pieces of the exploitation score.
+
+    Returns ``(a, b, valid, mask, ucb, mode)`` of *raw* (un-normalised)
+    score inputs: ``valid`` is the normalisation population (Eq. 1's
+    candidate set), ``mask`` the selectable set, and the final score is
+    ``where(mask, mix(a, b) * (1 + ucb), -inf)`` with ``mix`` given by
+    ``mode`` (see :func:`_mix_scores` and the Pallas ``topk_reward``
+    kernel, its fused twin).
+    """
+    util = rewards.oort_utility(pop.stat_util, pop.last_duration,
+                                state.pacer_T, cfg.alpha)
+    valid = pop.alive
+    ucb = _ucb_bonus(cfg, pop, state.round)
+    if cfg.kind == "oort":
+        return util, jnp.zeros_like(util), valid, valid, ucb, "oort"
+    if cfg.kind == "eafl":
+        power = rewards.projected_power(pop.battery_pct, predicted_cost_pct)
+        return util, power, valid, valid, ucb, "eafl"
+    if cfg.kind == "eafl-epj":
+        # beyond-paper variant: utility per unit energy, gated on surviving
+        # the round — ranks by how much statistical progress each %-battery
+        # buys instead of mixing the scales linearly.
+        survives = pop.battery_pct > predicted_cost_pct
+        return util, predicted_cost_pct, valid, valid & survives, ucb, \
+            "eafl-epj"
+    raise ValueError(cfg.kind)
+
+
+def _mix_scores(cfg: SelectorConfig, a, b, valid, mask, ucb,
+                mode: str) -> jnp.ndarray:
+    f = cfg.f
+    if mode == "oort":
+        s = a
+    elif mode == "eafl":
+        if cfg.normalize_reward:
+            # min-max normalisation of util and power over the candidate
+            # set, folded into scalar affine coefficients so no normalised
+            # million-entry array is ever materialised:
+            #   f*(a-lo_a)/ra + (1-f)*(b-lo_b)/rb = ca*a + cb*b + c0
+            lo_a, ra = rewards.minmax_range(a, valid)
+            lo_b, rb = rewards.minmax_range(b, valid)
+            ca, cb = f / ra, (1.0 - f) / rb
+            c0 = -(ca * lo_a + cb * lo_b)
+            s = ca * a + cb * b + c0
+        else:
+            s = f * a + (1.0 - f) * b
+    elif mode == "eafl-epj":
+        s = a / jnp.maximum(b, 1e-3)
+    else:
+        raise ValueError(mode)
+    return jnp.where(mask, s * (1.0 + ucb), -jnp.inf)
 
 
 def compute_scores(cfg: SelectorConfig, state: SelectorState,
                    pop: ClientPopulation,
                    predicted_cost_pct: jnp.ndarray) -> jnp.ndarray:
     """Per-client selection score for the exploitation slots."""
-    util = rewards.oort_utility(pop.stat_util, pop.last_duration,
-                                state.pacer_T, cfg.alpha)
+    a, b, valid, mask, ucb, mode = _score_inputs(cfg, state, pop,
+                                                 predicted_cost_pct)
+    return _mix_scores(cfg, a, b, valid, mask, ucb, mode)
+
+
+def _device_select(key, cfg: SelectorConfig, state: SelectorState,
+                   pop: ClientPopulation, predicted_cost_pct,
+                   use_pallas: bool, interpret: bool):
+    """Fully traced selection step with fixed output shapes.
+
+    Returns ``(idx (k,), chosen (k,) bool, new_state)`` where only the
+    slots with ``chosen`` are real picks (exploit slots first, then
+    exploration), mirroring the host reference ordering exactly.
+    """
+    n = pop.n
+    k = min(cfg.k, n)
+    state = SelectorState(state.round + 1, state.epsilon, state.pacer_T,
+                          state.util_ema)
     valid = pop.alive
-    if cfg.kind == "oort":
-        score = jnp.where(valid, util * (1.0 + _ucb_bonus(cfg, pop, state.round)),
-                          -jnp.inf)
-    elif cfg.kind == "eafl":
-        power = rewards.projected_power(pop.battery_pct, predicted_cost_pct)
-        score = rewards.eafl_reward(util, power, cfg.f, valid,
-                                    cfg.normalize_reward)
-        score = jnp.where(valid, score * (1.0 + _ucb_bonus(cfg, pop, state.round)),
-                          -jnp.inf)
-    elif cfg.kind == "eafl-epj":
-        # beyond-paper variant: utility per unit energy, gated on surviving
-        # the round — ranks by how much statistical progress each %-battery
-        # buys instead of mixing the scales linearly.
-        survives = pop.battery_pct > predicted_cost_pct
-        epj = util / jnp.maximum(predicted_cost_pct, 1e-3)
-        score = jnp.where(valid & survives,
-                          epj * (1.0 + _ucb_bonus(cfg, pop, state.round)),
-                          -jnp.inf)
+    k_eff = jnp.minimum(k, jnp.sum(valid)).astype(jnp.int32)
+    slots = jnp.arange(k)
+
+    if cfg.kind == "random":
+        g = jnp.where(valid, _rank_bits(key, n), -1.0)
+        _, idx = jax.lax.top_k(g, k)
+        return idx.astype(jnp.int32), slots < k_eff, state
+
+    explored = pop.explored & valid
+    unexplored = valid & ~explored
+
+    a, b, norm_valid, mask, ucb, mode = _score_inputs(cfg, state, pop,
+                                                      predicted_cost_pct)
+    mask = mask & explored
+
+    n_unexp = jnp.sum(unexplored).astype(jnp.int32)
+    # exploit slots are capped by the *selectable* explored pool (for
+    # eafl-epj the mask also excludes clients that would die mid-round),
+    # so slots never overflow onto -inf-scored clients
+    n_expl_avail = jnp.sum(mask).astype(jnp.int32)
+    n_explore = jnp.minimum(
+        jnp.round(state.epsilon * k_eff).astype(jnp.int32), n_unexp)
+    n_exploit = jnp.minimum(k_eff - n_explore, n_expl_avail)
+    n_explore = jnp.minimum(k_eff - n_exploit, n_unexp)
+    if use_pallas:
+        if mode == "eafl" and cfg.normalize_reward:
+            a = rewards.minmax_normalize(a, norm_valid)
+            b = rewards.minmax_normalize(b, norm_valid)
+        _, exploit_idx = _tk.topk_reward(a, b, mask, ucb=ucb, f=cfg.f, k=k,
+                                         mode=mode, interpret=interpret)
     else:
-        raise ValueError(cfg.kind)
-    return score
+        score = _mix_scores(cfg, a, b, norm_valid, mask, ucb, mode)
+        _, exploit_idx = jax.lax.top_k(score, k)
+
+    g = jnp.where(unexplored, _rank_bits(key, n), -1.0)
+    _, explore_idx = jax.lax.top_k(g, k)
+
+    take_exploit = slots < n_exploit
+    idx = jnp.where(take_exploit, exploit_idx,
+                    explore_idx[jnp.clip(slots - n_exploit, 0, k - 1)])
+    chosen = slots < (n_exploit + n_explore)
+
+    # epsilon decay + pacer update on the *exploited* utility mass; the host
+    # reference skips all of this when no client is selectable, so gate on
+    # k_eff to keep the state trajectories identical.
+    any_pick = k_eff > 0
+    n_chosen = jnp.sum(chosen)
+    sel_util = jnp.sum(jnp.where(chosen, pop.stat_util[idx], 0.0)) \
+        / jnp.maximum(n_chosen, 1)
+    epsilon = jnp.where(
+        any_pick,
+        jnp.maximum(cfg.epsilon_min, state.epsilon * cfg.epsilon_decay),
+        state.epsilon)
+    slow = (state.util_ema > 0.0) & (sel_util < 0.95 * state.util_ema)
+    pacer = jnp.where(
+        any_pick & slow,
+        jnp.minimum(cfg.pacer_max, state.pacer_T + cfg.pacer_delta),
+        state.pacer_T)
+    ema = jnp.where(any_pick, 0.9 * state.util_ema + 0.1 * sel_util,
+                    state.util_ema)
+    return (idx.astype(jnp.int32), chosen,
+            SelectorState(state.round, epsilon, pacer, ema))
+
+
+select_device = partial(jax.jit, static_argnames=(
+    "cfg", "use_pallas", "interpret"))(_device_select)
+
+
+def _auto_pallas(n: int, use_pallas: Optional[bool]) -> bool:
+    if use_pallas is None:
+        return jax.default_backend() == "tpu" and n >= PALLAS_N_THRESHOLD
+    return use_pallas
 
 
 def select(key, cfg: SelectorConfig, state: SelectorState,
            pop: ClientPopulation,
            predicted_cost_pct: Optional[jnp.ndarray] = None,
+           use_pallas: Optional[bool] = None,
+           interpret: Optional[bool] = None,
            ) -> Tuple[np.ndarray, SelectorState]:
-    """Pick K clients. Returns (indices (<=K,), new_state)."""
+    """Pick K clients. Returns (indices (<=K,), new_state).
+
+    Thin host facade over the jitted :func:`select_device`; the only host
+    work is trimming the fixed-shape output to the chosen slots.
+    """
+    if predicted_cost_pct is None:
+        predicted_cost_pct = jnp.zeros((pop.n,), jnp.float32)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    idx, chosen, new_state = select_device(
+        key, cfg, state, pop, predicted_cost_pct,
+        use_pallas=_auto_pallas(pop.n, use_pallas), interpret=interpret)
+    idx = np.asarray(idx)[np.asarray(chosen)]
+    return idx.astype(np.int64), new_state
+
+
+def select_host(key, cfg: SelectorConfig, state: SelectorState,
+                pop: ClientPopulation,
+                predicted_cost_pct: Optional[jnp.ndarray] = None,
+                ) -> Tuple[np.ndarray, SelectorState]:
+    """The original eager host implementation (numpy argsort). Kept as the
+    parity oracle for :func:`select_device` and as the baseline leg of
+    ``benchmarks/selection_scale.py``."""
     valid = np.asarray(pop.alive)
     n_valid = int(valid.sum())
     k = min(cfg.k, n_valid)
@@ -105,23 +294,27 @@ def select(key, cfg: SelectorConfig, state: SelectorState,
 
     if cfg.kind == "random":
         p = valid / valid.sum()
-        idx = jax.random.choice(key, pop.n, (k,), replace=False, p=jnp.asarray(p))
-        return np.asarray(idx), state
+        idx = jax.random.choice(key, pop.n, (k,), replace=False,
+                                p=jnp.asarray(p))
+        return np.asarray(idx).astype(np.int64), state
 
     if predicted_cost_pct is None:
         predicted_cost_pct = jnp.zeros((pop.n,), jnp.float32)
 
     explored = np.asarray(pop.explored) & valid
     unexplored = valid & ~explored
-    n_explore = min(int(round(state.epsilon * k)), int(unexplored.sum()))
-    n_exploit = min(k - n_explore, int(explored.sum()))
+    score = np.array(compute_scores(cfg, state, pop, predicted_cost_pct))
+    score[~explored] = -np.inf
+    n_explore = min(int(round(float(state.epsilon) * k)),
+                    int(unexplored.sum()))
+    # exploit slots are capped by the *selectable* explored pool (finite
+    # score: for eafl-epj this excludes clients that would die mid-round)
+    n_exploit = min(k - n_explore, int((score > -np.inf).sum()))
     n_explore = k - n_exploit  # hand leftovers back to exploration
     n_explore = min(n_explore, int(unexplored.sum()))
 
     picks = []
     if n_exploit > 0:
-        score = np.array(compute_scores(cfg, state, pop, predicted_cost_pct))
-        score[~explored] = -np.inf
         picks.append(np.argsort(-score, kind="stable")[:n_exploit])
     if n_explore > 0:
         g = np.array(jax.random.gumbel(key, (pop.n,)))
@@ -130,9 +323,12 @@ def select(key, cfg: SelectorConfig, state: SelectorState,
     idx = np.concatenate(picks) if picks else np.zeros((0,), np.int64)
 
     # epsilon decay + pacer update on the *exploited* utility mass
-    state.epsilon = max(cfg.epsilon_min, state.epsilon * cfg.epsilon_decay)
+    epsilon = max(cfg.epsilon_min, float(state.epsilon) * cfg.epsilon_decay)
+    pacer_T = float(state.pacer_T)
+    util_ema = float(state.util_ema)
     sel_util = float(np.asarray(pop.stat_util)[idx].mean()) if len(idx) else 0.0
-    if state.util_ema > 0.0 and sel_util < 0.95 * state.util_ema:
-        state.pacer_T = min(cfg.pacer_max, state.pacer_T + cfg.pacer_delta)
-    state.util_ema = 0.9 * state.util_ema + 0.1 * sel_util
-    return idx.astype(np.int64), state
+    if util_ema > 0.0 and sel_util < 0.95 * util_ema:
+        pacer_T = min(cfg.pacer_max, pacer_T + cfg.pacer_delta)
+    util_ema = 0.9 * util_ema + 0.1 * sel_util
+    return idx.astype(np.int64), SelectorState(state.round, epsilon, pacer_T,
+                                               util_ema)

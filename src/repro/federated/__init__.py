@@ -3,13 +3,24 @@ from repro.federated.aggregation import (
     server_update,
     weighted_delta,
 )
-from repro.federated.server import FLConfig, FLHistory, run_fl
+from repro.federated.server import (
+    FLConfig,
+    FLHistory,
+    run_fl,
+    run_selection_scanned,
+)
 from repro.federated.simulation import (
+    DeviceRoundOutcome,
     RoundOutcome,
+    make_round_engine,
     predicted_round_cost_pct,
+    run_rounds_scanned,
     simulate_round,
+    simulate_round_device,
 )
 
 __all__ = ["make_server_optimizer", "server_update", "weighted_delta",
-           "FLConfig", "FLHistory", "run_fl", "RoundOutcome",
-           "predicted_round_cost_pct", "simulate_round"]
+           "FLConfig", "FLHistory", "run_fl", "run_selection_scanned",
+           "RoundOutcome", "DeviceRoundOutcome", "make_round_engine",
+           "predicted_round_cost_pct", "run_rounds_scanned",
+           "simulate_round", "simulate_round_device"]

@@ -8,9 +8,10 @@ cohort (the TPU-mesh version of the same cohort step lives in repro.launch).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +35,11 @@ from repro.federated.aggregation import (
     server_update,
     weighted_delta,
 )
-from repro.federated.simulation import predicted_round_cost_pct, simulate_round
+from repro.federated.simulation import (
+    predicted_round_cost_pct,
+    run_rounds_scanned,
+    simulate_round,
+)
 from repro.models.resnet import init_resnet, resnet_forward, resnet_loss
 
 
@@ -88,7 +93,6 @@ class FLConfig:
 
 
 def replace_selector_k(sel: SelectorConfig, k: int) -> SelectorConfig:
-    import dataclasses
     return dataclasses.replace(sel, k=k)
 
 
@@ -149,14 +153,26 @@ class FLHistory:
         return {k: list(v) for k, v in self.__dict__.items()}
 
 
-def run_fl(cfg: FLConfig, verbose: bool = False) -> FLHistory:
-    key = jax.random.PRNGKey(cfg.seed)
-    kpop, kdata, kmodel, ktest, kloop = jax.random.split(key, 5)
+def _engine_setup(cfg: FLConfig, kpop, model_bytes: float):
+    """Population + simulated-workload knobs shared by :func:`run_fl` and
+    :func:`run_selection_scanned` — one definition so the scanned path's
+    trajectory-parity claim can't drift from the host loop."""
+    from repro.compression import compression_ratio
 
     pop = make_population(kpop, cfg.n_clients,
                           init_battery_low=cfg.init_battery_low,
                           init_battery_high=cfg.init_battery_high,
                           samples_per_client=cfg.samples_per_client)
+    sim_steps = cfg.sim_local_steps or cfg.local_steps
+    up_bytes = model_bytes * compression_ratio(cfg.compression)
+    energy_model = EnergyModel(busy_fraction=cfg.idle_busy_fraction)
+    return pop, sim_steps, up_bytes, energy_model
+
+
+def run_fl(cfg: FLConfig, verbose: bool = False) -> FLHistory:
+    key = jax.random.PRNGKey(cfg.seed)
+    kpop, kdata, kmodel, ktest, kloop = jax.random.split(key, 5)
+
     data = label_restricted_partition(
         kdata, cfg.n_clients, cfg.samples_per_client, cfg.n_classes,
         cfg.labels_per_client, cfg.input_hw, noise=cfg.data_noise)
@@ -166,14 +182,11 @@ def run_fl(cfg: FLConfig, verbose: bool = False) -> FLHistory:
     params = init_resnet(kmodel, cfg.model)
     n_params = sum(x.size for x in jax.tree.leaves(params))
     model_bytes = cfg.sim_model_bytes or (n_params * 4.0)
-    sim_steps = cfg.sim_local_steps or cfg.local_steps
     opt = make_server_optimizer(cfg.server_opt, cfg.server_lr)
     opt_state = opt.init(params)
 
-    from repro.compression import compression_ratio
-
-    up_bytes = model_bytes * compression_ratio(cfg.compression)
-    energy_model = EnergyModel(busy_fraction=cfg.idle_busy_fraction)
+    pop, sim_steps, up_bytes, energy_model = _engine_setup(cfg, kpop,
+                                                           model_bytes)
     sel_state = SelectorState.create(cfg.selector)
     local_train = _local_train_fn(cfg.model, cfg.local_steps,
                                   cfg.batch_size, cfg.client_lr,
@@ -187,7 +200,6 @@ def run_fl(cfg: FLConfig, verbose: bool = False) -> FLHistory:
     hist = FLHistory()
     wall = 0.0
     cum_drop = 0
-    stat_util = np.zeros((cfg.n_clients,), np.float32)
     last_loss = float("nan")
 
     for rnd in range(1, cfg.rounds + 1):
@@ -207,12 +219,15 @@ def run_fl(cfg: FLConfig, verbose: bool = False) -> FLHistory:
         cum_drop += outcome.new_dropouts
         if cfg.overcommit > 1.0:
             # keep only the fastest K successful clients (stragglers beyond
-            # K are abandoned — they still paid the energy)
+            # K are abandoned — they still paid the energy); the outcome is
+            # replaced, not mutated: the pre-cap `succeeded` already fed the
+            # dropout accounting above
             order = np.argsort(outcome.durations)
             keep = [i for i in order if outcome.succeeded[i]][:cfg.selector.k]
             mask = np.zeros_like(outcome.succeeded)
             mask[keep] = True
-            outcome.succeeded = outcome.succeeded & mask
+            outcome = dataclasses.replace(
+                outcome, succeeded=outcome.succeeded & mask)
 
         if cfg.recharge_pct_per_hour > 0.0:
             kplug = jax.random.fold_in(kloop, 7)
@@ -233,10 +248,11 @@ def run_fl(cfg: FLConfig, verbose: bool = False) -> FLHistory:
             weights = np.asarray(pop.n_samples)[succ].astype(np.float32)
             agg = weighted_delta(deltas, jnp.asarray(weights))
             params, opt_state = server_update(params, agg, opt, opt_state)
-            # update Oort statistical utility for participants
-            su = np.asarray(stat_utility(per_sample, weights))
-            stat_util[succ] = su
-            pop = pop.replace(stat_util=jnp.asarray(stat_util))
+            # update Oort statistical utility for participants (functional
+            # scatter — the population pytree stays device-resident)
+            su = stat_utility(per_sample, jnp.asarray(weights))
+            pop = pop.replace(
+                stat_util=pop.stat_util.at[jnp.asarray(succ)].set(su))
             last_loss = float(mean_losses.mean())
 
         wall += outcome.round_duration / 3600.0
@@ -257,3 +273,32 @@ def run_fl(cfg: FLConfig, verbose: bool = False) -> FLHistory:
                   f"loss={last_loss:.3f} drop={cum_drop} "
                   f"fair={hist.fairness[-1]:.3f} wall={wall:.2f}h")
     return hist
+
+
+def run_selection_scanned(cfg: FLConfig, rounds: Optional[int] = None,
+                          use_pallas: Optional[bool] = None,
+                          ) -> Tuple[ClientPopulation, Dict[str, Any]]:
+    """The device-resident fast path: selection + energy + battery advanced
+    for ``rounds`` rounds inside one ``jax.lax.scan`` (no training — the
+    trajectory's per-round ``selected`` indices are the interface for
+    dispatching training separately).
+
+    Uses the same population, energy model, and simulated device workload
+    as :func:`run_fl`, so its battery/dropout trajectories match the host
+    loop within float tolerance.
+    """
+    key = jax.random.PRNGKey(cfg.seed)
+    kpop, _kdata, kmodel, _ktest, kloop = jax.random.split(key, 5)
+    if cfg.sim_model_bytes is not None:
+        model_bytes = cfg.sim_model_bytes
+    else:
+        params = init_resnet(kmodel, cfg.model)
+        model_bytes = sum(x.size for x in jax.tree.leaves(params)) * 4.0
+    pop, sim_steps, up_bytes, energy_model = _engine_setup(cfg, kpop,
+                                                           model_bytes)
+    final_pop, final_state, traj = run_rounds_scanned(
+        kloop, cfg.selector, pop, SelectorState.create(cfg.selector),
+        energy_model, model_bytes, sim_steps, cfg.batch_size,
+        rounds or cfg.rounds, deadline_s=cfg.deadline_s, up_bytes=up_bytes,
+        use_pallas=use_pallas)
+    return final_pop, {"state": final_state, **traj}

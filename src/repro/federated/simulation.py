@@ -6,17 +6,30 @@ network profiles); battery is debited with the Sec. 4.2 energy models; a
 client whose battery hits zero mid-round DROPS OUT — it fails the round and
 becomes unavailable (the paper's central failure mode). Unselected devices
 drain at the idle/busy mix rate over the round's wall time.
+
+The core is device-resident: :func:`simulate_round_device` is a pure
+traced jnp function over a selection *mask*, fused with the cost model so
+prediction (Eq. 1's ``power(i)``) and debit share one computation.
+:func:`make_round_engine` composes predicted-cost → selection → simulation
+into a single traced step, and :func:`run_rounds_scanned` advances it for R
+rounds under ``jax.lax.scan`` — training stays decoupled via the
+selected-indices trajectory the scan emits. :func:`simulate_round` keeps
+the original index-list host API on top of the same fused core.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
-from typing import Optional
+from functools import partial
+from typing import Dict, NamedTuple, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.clients import ClientPopulation, round_times
 from repro.core.energy import EnergyModel
+from repro.core.selection import SelectorConfig, SelectorState, _device_select
 
 
 @dataclass
@@ -29,14 +42,99 @@ class RoundOutcome:
     energy_spent_pct: float       # total battery % spent by participants
 
 
+class DeviceRoundOutcome(NamedTuple):
+    """Traced per-round outputs (full-population masks, device-resident)."""
+
+    sel_mask: jnp.ndarray         # (N,) bool, selected this round
+    succeeded: jnp.ndarray        # (N,) bool, selected & finished
+    durations: jnp.ndarray        # (N,) f32, per-client total round seconds
+    cost_pct: jnp.ndarray         # (N,) f32, battery %% a participant pays
+    round_duration: jnp.ndarray   # f32 scalar, wall seconds
+    new_dropouts: jnp.ndarray     # i32 scalar
+    energy_spent_pct: jnp.ndarray  # f32 scalar
+
+
+def _round_cost(pop: ClientPopulation, energy_model: EnergyModel,
+                model_bytes: float, local_steps: int, batch_size: int,
+                up_bytes: Optional[float]):
+    """Shared fused computation of per-client round time + battery cost."""
+    t = round_times(pop, model_bytes, local_steps, batch_size, up_bytes)
+    cost = energy_model.round_cost_pct(pop.category, pop.network,
+                                       t["comp"], t["down"], t["up"])
+    return t["total"], cost
+
+
 def predicted_round_cost_pct(pop: ClientPopulation, energy_model: EnergyModel,
                              model_bytes: float, local_steps: int,
                              batch_size: int,
                              up_bytes: float = None) -> jnp.ndarray:
     """battery_used(i) for Eq. 1's power(i) — identical model to the debit."""
-    t = round_times(pop, model_bytes, local_steps, batch_size, up_bytes)
-    return energy_model.round_cost_pct(pop.category, pop.network,
-                                       t["comp"], t["down"], t["up"])
+    return _round_cost(pop, energy_model, model_bytes, local_steps,
+                       batch_size, up_bytes)[1]
+
+
+def simulate_round_device(pop: ClientPopulation, sel_mask: jnp.ndarray,
+                          t_total: jnp.ndarray, cost: jnp.ndarray,
+                          rnd, energy_model: EnergyModel,
+                          deadline_s: Optional[float] = None,
+                          ) -> Tuple[ClientPopulation, DeviceRoundOutcome]:
+    """Pure traced round state update over a (N,) selection mask."""
+    battery_after = pop.battery_pct - jnp.where(sel_mask, cost, 0.0)
+    ran_out = sel_mask & (battery_after <= 0.0)
+    missed_deadline = (sel_mask & (t_total > deadline_s)
+                       if deadline_s else jnp.zeros_like(sel_mask))
+    succeeded = sel_mask & ~ran_out & ~missed_deadline
+
+    # round wall time: slowest successful participant (or deadline)
+    any_sel = jnp.any(sel_mask)
+    max_succ = jnp.max(jnp.where(succeeded, t_total, -jnp.inf))
+    max_sel = jnp.max(jnp.where(sel_mask, t_total, -jnp.inf))
+    fallback = jnp.float32(deadline_s) if deadline_s else max_sel
+    duration = jnp.where(jnp.any(succeeded), max_succ, fallback)
+    if deadline_s:
+        duration = jnp.minimum(duration, jnp.float32(deadline_s))
+    duration = jnp.where(any_sel, duration, 0.0)
+
+    # unselected (and dropped-out mid-round) devices drain at idle/busy rate
+    idle_cost = energy_model.idle_cost_pct(pop.category, duration)
+    battery_new = jnp.clip(
+        jnp.where(sel_mask, battery_after, pop.battery_pct - idle_cost),
+        0.0, 100.0)
+
+    was_dropped = pop.dropped
+    dropped_new = was_dropped | (battery_new <= 0.0)
+    new_dropouts = jnp.sum(dropped_new & ~was_dropped).astype(jnp.int32)
+
+    new_pop = pop.replace(
+        battery_pct=battery_new,
+        dropped=dropped_new,
+        explored=pop.explored | sel_mask,
+        last_duration=jnp.where(sel_mask, t_total, pop.last_duration),
+        last_round=jnp.where(sel_mask, jnp.asarray(rnd, jnp.int32),
+                             pop.last_round),
+        times_selected=pop.times_selected + sel_mask.astype(jnp.int32),
+    )
+    outcome = DeviceRoundOutcome(
+        sel_mask=sel_mask,
+        succeeded=succeeded,
+        durations=t_total,
+        cost_pct=cost,
+        round_duration=duration.astype(jnp.float32),
+        new_dropouts=new_dropouts,
+        energy_spent_pct=jnp.sum(jnp.where(sel_mask, cost, 0.0)),
+    )
+    return new_pop, outcome
+
+
+@partial(jax.jit, static_argnames=("energy_model", "model_bytes",
+                                   "local_steps", "batch_size", "deadline_s",
+                                   "up_bytes"))
+def _simulate_round_jit(pop, sel_mask, rnd, energy_model, model_bytes,
+                        local_steps, batch_size, deadline_s, up_bytes):
+    t_total, cost = _round_cost(pop, energy_model, model_bytes, local_steps,
+                                batch_size, up_bytes)
+    return simulate_round_device(pop, sel_mask, t_total, cost, rnd,
+                                 energy_model, deadline_s)
 
 
 def simulate_round(pop: ClientPopulation, selected: np.ndarray,
@@ -44,54 +142,118 @@ def simulate_round(pop: ClientPopulation, selected: np.ndarray,
                    local_steps: int, batch_size: int, rnd: int,
                    deadline_s: Optional[float] = None,
                    up_bytes: float = None):
-    """Returns (new_pop, RoundOutcome)."""
-    t = round_times(pop, model_bytes, local_steps, batch_size, up_bytes)
-    cost = energy_model.round_cost_pct(pop.category, pop.network,
-                                       t["comp"], t["down"], t["up"])
+    """Returns (new_pop, RoundOutcome). Host facade over the fused core."""
+    selected = np.asarray(selected)
     sel_mask = np.zeros((pop.n,), bool)
     sel_mask[selected] = True
-    sel_mask = jnp.asarray(sel_mask)
-
-    battery_after = pop.battery_pct - jnp.where(sel_mask, cost, 0.0)
-    ran_out = sel_mask & (battery_after <= 0.0)
-    missed_deadline = (sel_mask & (t["total"] > deadline_s)
-                       if deadline_s else jnp.zeros_like(sel_mask))
-    succeeded_mask = sel_mask & ~ran_out & ~missed_deadline
-
-    # round wall time: slowest successful participant (or deadline)
-    t_tot = np.asarray(t["total"])
-    succ_np = np.asarray(succeeded_mask)
-    if succ_np.any():
-        round_duration = float(t_tot[succ_np].max())
-    else:
-        round_duration = float(deadline_s or t_tot[np.asarray(sel_mask)].max())
-    if deadline_s:
-        round_duration = min(round_duration, float(deadline_s))
-
-    # unselected (and dropped-out mid-round) devices drain at idle/busy rate
-    idle_cost = energy_model.idle_cost_pct(pop.category, round_duration)
-    battery_new = jnp.where(sel_mask, battery_after,
-                            pop.battery_pct - idle_cost)
-    battery_new = jnp.clip(battery_new, 0.0, 100.0)
-
-    was_dropped = pop.dropped
-    dropped_new = was_dropped | (battery_new <= 0.0)
-    new_dropouts = int(jnp.sum(dropped_new & ~was_dropped))
-
-    new_pop = pop.replace(
-        battery_pct=battery_new,
-        dropped=dropped_new,
-        explored=pop.explored | np.asarray(sel_mask),
-        last_duration=jnp.where(sel_mask, t["total"], pop.last_duration),
-        last_round=jnp.where(sel_mask, rnd, pop.last_round),
-        times_selected=pop.times_selected + sel_mask.astype(jnp.int32),
-    )
+    new_pop, dev = _simulate_round_jit(
+        pop, jnp.asarray(sel_mask), jnp.asarray(rnd, jnp.int32),
+        energy_model, float(model_bytes), int(local_steps), int(batch_size),
+        None if deadline_s is None else float(deadline_s),
+        None if up_bytes is None else float(up_bytes))
     outcome = RoundOutcome(
-        selected=np.asarray(selected),
-        succeeded=np.asarray(succeeded_mask)[np.asarray(selected)],
-        durations=t_tot[np.asarray(selected)],
-        round_duration=round_duration,
-        new_dropouts=new_dropouts,
-        energy_spent_pct=float(jnp.sum(jnp.where(sel_mask, cost, 0.0))),
+        selected=selected,
+        succeeded=np.asarray(dev.succeeded)[selected],
+        durations=np.asarray(dev.durations)[selected],
+        round_duration=float(dev.round_duration),
+        new_dropouts=int(dev.new_dropouts),
+        energy_spent_pct=float(dev.energy_spent_pct),
     )
     return new_pop, outcome
+
+
+def make_round_engine(sel_cfg: SelectorConfig, energy_model: EnergyModel,
+                      model_bytes: float, local_steps: int, batch_size: int,
+                      deadline_s: Optional[float] = None,
+                      up_bytes: Optional[float] = None,
+                      use_pallas: bool = False, interpret: bool = False):
+    """One fused traced round step: predicted cost → selection → simulation.
+
+    Returns ``step(key, pop, sel_state) -> (pop, sel_state, idx, chosen,
+    DeviceRoundOutcome)`` suitable for ``jax.jit`` or as a ``lax.scan``
+    body. Training is *not* dispatched here — callers gather the selected
+    indices and run training between steps (or not at all).
+    """
+
+    def step(key, pop: ClientPopulation, sel_state: SelectorState):
+        t_total, cost = _round_cost(pop, energy_model, model_bytes,
+                                    local_steps, batch_size, up_bytes)
+        idx, chosen, sel_state = _device_select(
+            key, sel_cfg, sel_state, pop, cost, use_pallas, interpret)
+        # scatter chosen slots into a population mask (unchosen slots are
+        # routed to index N and dropped)
+        sel_mask = jnp.zeros((pop.n,), bool).at[
+            jnp.where(chosen, idx, pop.n)].set(True, mode="drop")
+        pop, dev = simulate_round_device(pop, sel_mask, t_total, cost,
+                                         sel_state.round, energy_model,
+                                         deadline_s)
+        return pop, sel_state, idx, chosen, dev
+
+    return step
+
+
+@functools.lru_cache(maxsize=32)
+def _scanned_runner(sel_cfg: SelectorConfig, energy_model: EnergyModel,
+                    model_bytes: float, local_steps: int, batch_size: int,
+                    deadline_s: Optional[float], up_bytes: Optional[float],
+                    rounds: int, use_pallas: bool, interpret: bool):
+    """Cached jitted R-round scan (all args hashable statics), so repeated
+    calls with the same config reuse one compilation."""
+    step = make_round_engine(sel_cfg, energy_model, model_bytes,
+                             local_steps, batch_size, deadline_s,
+                             up_bytes, use_pallas, interpret)
+
+    def scan_step(carry, key_r):
+        pop, st = carry
+        pop, st, idx, chosen, dev = step(key_r, pop, st)
+        out = {
+            "selected": idx,
+            "chosen": chosen,
+            "succeeded": dev.succeeded[idx] & chosen,
+            "round_duration": dev.round_duration,
+            "new_dropouts": dev.new_dropouts,
+            "energy_spent_pct": dev.energy_spent_pct,
+            "mean_battery": jnp.mean(pop.battery_pct),
+            "total_dropped": jnp.sum(pop.dropped).astype(jnp.int32),
+        }
+        return (pop, st), out
+
+    @jax.jit
+    def run(key, pop, st):
+        keys = jax.random.split(key, rounds)
+        return jax.lax.scan(scan_step, (pop, st), keys)
+
+    return run
+
+
+def run_rounds_scanned(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
+                       sel_state: SelectorState, energy_model: EnergyModel,
+                       model_bytes: float, local_steps: int, batch_size: int,
+                       rounds: int,
+                       deadline_s: Optional[float] = None,
+                       up_bytes: Optional[float] = None,
+                       use_pallas: Optional[bool] = None,
+                       interpret: Optional[bool] = None,
+                       ) -> Tuple[ClientPopulation, SelectorState,
+                                  Dict[str, jnp.ndarray]]:
+    """Advance selection + energy + battery state for ``rounds`` rounds
+    inside one ``jax.lax.scan`` — the device-resident fast path.
+
+    Returns ``(final_pop, final_state, trajectory)`` where the trajectory
+    holds per-round arrays: ``selected (R,k)``, ``chosen (R,k)``,
+    ``succeeded (R,k)`` (per selected slot), ``round_duration (R,)``,
+    ``new_dropouts (R,)``, ``energy_spent_pct (R,)``, ``mean_battery (R,)``
+    and ``total_dropped (R,)``. Matches the per-round host loop
+    (``select`` + ``simulate_round``) within float tolerance.
+    """
+    from repro.core.selection import _auto_pallas
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    run = _scanned_runner(
+        sel_cfg, energy_model, float(model_bytes), int(local_steps),
+        int(batch_size),
+        None if deadline_s is None else float(deadline_s),
+        None if up_bytes is None else float(up_bytes),
+        int(rounds), _auto_pallas(pop.n, use_pallas), interpret)
+    (pop, st), traj = run(key, pop, sel_state.canonical())
+    return pop, st, traj

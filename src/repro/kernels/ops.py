@@ -55,9 +55,11 @@ def ssd_chunk(x, Bm, Cm, dt, A,
                          interpret=_auto_interpret(interpret))
 
 
-@partial(jax.jit, static_argnames=("f", "k", "block_n", "interpret"))
+@partial(jax.jit, static_argnames=("f", "k", "block_n", "mode", "interpret"))
 def topk_reward(util, power, valid, f: float, k: int,
                 block_n: int = _tk.DEFAULT_BLOCK_N,
+                ucb=None, mode: str = "eafl",
                 interpret: Optional[bool] = None):
     return _tk.topk_reward(util, power, valid, f=f, k=k, block_n=block_n,
+                           ucb=ucb, mode=mode,
                            interpret=_auto_interpret(interpret))

@@ -66,12 +66,23 @@ def ssd_chunk_ref(x, Bm, Cm, dt, A):
     return jnp.moveaxis(ys, 0, 1).astype(x.dtype)        # (B,S,nh,hd)
 
 
-def topk_reward_ref(util, power, valid, f: float, k: int):
-    """EAFL Eq.1 reward + top-k. Returns (values (k,), indices (k,)).
+def topk_reward_ref(util, power, valid, f: float, k: int,
+                    ucb=None, mode: str = "eafl"):
+    """Fused selection score + top-k. Returns (values (k,), indices (k,)).
 
     util/power are pre-normalised by the caller (see rewards.eafl_reward);
-    the kernel fuses only the mix + mask + top-k, matching this oracle.
+    the kernel fuses only the mix + ucb + mask + top-k, matching this
+    oracle. ``mode`` picks the score variant (see kernels.topk_select).
     """
-    reward = f * util + (1.0 - f) * power
+    if mode == "eafl":
+        reward = f * util + (1.0 - f) * power
+    elif mode == "oort":
+        reward = util
+    elif mode == "eafl-epj":
+        reward = util / jnp.maximum(power, 1e-3)
+    else:
+        raise ValueError(mode)
+    if ucb is not None:
+        reward = reward * (1.0 + ucb)
     reward = jnp.where(valid, reward, -jnp.inf)
     return jax.lax.top_k(reward, k)

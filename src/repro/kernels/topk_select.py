@@ -1,14 +1,29 @@
 """EAFL reward + top-k client selection Pallas kernel (TPU target).
 
 The paper's selection at production scale: for millions of registered
-clients, fuse the Eq. 1 reward (f*util + (1-f)*power, invalid clients
-masked) with a blocked top-k reduction so the million-entry reward vector is
-never materialised in HBM. Each grid step processes one VMEM-sized block of
-clients and emits that block's local top-k (values + global indices) via K
-iterations of max+mask; the host merges nblocks*k candidates with one tiny
-final top_k — an exact two-level tournament.
+clients, fuse the selection score with a blocked top-k reduction so the
+million-entry reward vector is never materialised in HBM. Each grid step
+processes one VMEM-sized block of clients and emits that block's local
+top-k (values + global indices) via K iterations of max+mask; the host
+merges nblocks*k candidates with one tiny final top_k — an exact two-level
+tournament.
 
-Grid: (n_blocks,); VMEM per program: 3 input blocks + k outputs.
+Three fused score variants (``mode``), all multiplied by the Oort/EAFL
+UCB staleness bonus ``(1 + ucb)`` and masked to ``-inf`` outside ``valid``:
+
+  eafl      f*a + (1-f)*b          (Eq. 1: a=norm. utility, b=norm. power)
+  oort      a                      (a = Oort utility, Eq. 2)
+  eafl-epj  a / max(b, 1e-3)       (a = utility, b = predicted %-battery)
+
+Arbitrary population sizes are supported: the tail block is padded with
+``valid=0`` entries. Masked entries score a finite ``SENTINEL`` (not
+``-inf``) so that when ``k`` exceeds a block's valid count the repeated
+argmax still walks distinct, lowest-index-first candidates — matching
+``lax.top_k`` tie-breaking — instead of re-emitting index 0. Sentinel
+picks therefore surface with value ``SENTINEL`` where the jnp oracle
+reports ``-inf``; they are never preferred over any valid candidate.
+
+Grid: (n_blocks,); VMEM per program: 4 input blocks + k outputs.
 """
 from __future__ import annotations
 
@@ -20,16 +35,26 @@ from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK_N = 4096
 NEG_INF = -jnp.inf
+SENTINEL = -3e38          # masked-entry score: below any real reward, > -inf
+MODES = ("eafl", "oort", "eafl-epj")
 
 
-def _topk_kernel(util_ref, power_ref, valid_ref, vals_ref, idx_ref,
-                 *, f: float, k: int, block_n: int):
+def _topk_kernel(a_ref, b_ref, valid_ref, ucb_ref, vals_ref, idx_ref,
+                 *, f: float, k: int, block_n: int, mode: str):
     bi = pl.program_id(0)
-    util = util_ref[...].astype(jnp.float32)
-    power = power_ref[...].astype(jnp.float32)
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
     valid = valid_ref[...] != 0
-    reward = f * util + (1.0 - f) * power
-    reward = jnp.where(valid, reward, NEG_INF)
+    ucb = ucb_ref[...].astype(jnp.float32)
+    if mode == "eafl":
+        reward = f * a + (1.0 - f) * b
+    elif mode == "oort":
+        reward = a
+    elif mode == "eafl-epj":
+        reward = a / jnp.maximum(b, 1e-3)
+    else:
+        raise ValueError(mode)
+    reward = jnp.where(valid, reward * (1.0 + ucb), SENTINEL)
     base = bi * block_n
 
     def pick(i, r):
@@ -41,20 +66,34 @@ def _topk_kernel(util_ref, power_ref, valid_ref, vals_ref, idx_ref,
     jax.lax.fori_loop(0, k, pick, reward, unroll=True)
 
 
-def topk_reward(util, power, valid, *, f: float, k: int,
+def topk_reward(a, b, valid, *, f: float, k: int,
                 block_n: int = DEFAULT_BLOCK_N,
+                ucb=None, mode: str = "eafl",
                 interpret: bool = False):
-    """util/power: (N,) f32; valid: (N,) int32/bool. Returns (vals, idx) (k,)."""
-    N = util.shape[0]
+    """a/b: (N,) f32 score inputs (see module docstring per ``mode``);
+    valid: (N,) int32/bool; ucb: optional (N,) f32 staleness bonus.
+    Returns (vals, idx) each (k,)."""
+    assert mode in MODES, mode
+    N = a.shape[0]
+    if ucb is None:
+        ucb = jnp.zeros((N,), jnp.float32)
     block_n = min(block_n, N)
-    assert N % block_n == 0, (N, block_n)
-    n_blocks = N // block_n
+    # pad the tail block with masked entries so any N works
+    pad = (-N) % block_n
+    if pad:
+        a = jnp.pad(a, (0, pad))
+        b = jnp.pad(b, (0, pad))
+        ucb = jnp.pad(ucb, (0, pad))
+        valid = jnp.pad(valid.astype(jnp.int32), (0, pad))
+    n_blocks = (N + pad) // block_n
 
-    kernel = functools.partial(_topk_kernel, f=f, k=k, block_n=block_n)
+    kernel = functools.partial(_topk_kernel, f=f, k=k, block_n=block_n,
+                               mode=mode)
     vals, idx = pl.pallas_call(
         kernel,
         grid=(n_blocks,),
         in_specs=[
+            pl.BlockSpec((block_n,), lambda b: (b,)),
             pl.BlockSpec((block_n,), lambda b: (b,)),
             pl.BlockSpec((block_n,), lambda b: (b,)),
             pl.BlockSpec((block_n,), lambda b: (b,)),
@@ -68,7 +107,7 @@ def topk_reward(util, power, valid, *, f: float, k: int,
             jax.ShapeDtypeStruct((n_blocks, k), jnp.int32),
         ],
         interpret=interpret,
-    )(util, power, valid.astype(jnp.int32))
+    )(a, b, valid.astype(jnp.int32), ucb)
 
     # final merge: nblocks*k candidates -> global top-k (exact)
     flat_v = vals.reshape(-1)

@@ -1,0 +1,245 @@
+"""Device-resident round engine: jitted/Pallas selection parity with the
+host reference, kernel tail padding, and scan-vs-loop trajectory
+equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_resnet_speech import reduced
+from repro.core import (
+    EnergyModel,
+    SelectorConfig,
+    SelectorState,
+    make_population,
+    select,
+    select_host,
+    stat_utility,
+)
+from repro.federated import (
+    FLConfig,
+    predicted_round_cost_pct,
+    run_rounds_scanned,
+    run_selection_scanned,
+    simulate_round,
+)
+from repro.kernels import ops, ref
+
+ALL_KINDS = ["eafl", "oort", "eafl-epj", "random"]
+
+
+def _mixed_pop(rng, n=96):
+    """Population with dropped, explored, and battery heterogeneity."""
+    pop = make_population(rng, n)
+    return pop.replace(
+        stat_util=jax.random.uniform(jax.random.fold_in(rng, 1), (n,)) * 10,
+        explored=jax.random.bernoulli(jax.random.fold_in(rng, 2), 0.5, (n,)),
+        dropped=jnp.zeros((n,), bool).at[: n // 8].set(True),
+    )
+
+
+# ------------------------------------------------------- host/device parity
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_select_device_matches_host_reference(kind, rng):
+    pop = _mixed_pop(rng)
+    cfg = SelectorConfig(kind=kind, k=12)
+    st_dev, st_host = SelectorState.create(cfg), SelectorState.create(cfg)
+    pred = jnp.abs(jax.random.normal(jax.random.fold_in(rng, 3),
+                                     (pop.n,))) * 5
+    for r in range(6):
+        key = jax.random.fold_in(rng, 100 + r)
+        idx_dev, st_dev = select(key, cfg, st_dev, pop, pred)
+        idx_host, st_host = select_host(key, cfg, st_host, pop, pred)
+        np.testing.assert_array_equal(idx_dev, idx_host)
+        assert float(st_dev.epsilon) == pytest.approx(float(st_host.epsilon))
+        assert float(st_dev.pacer_T) == pytest.approx(float(st_host.pacer_T))
+        assert float(st_dev.util_ema) == pytest.approx(
+            float(st_host.util_ema), abs=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["eafl", "oort", "eafl-epj"])
+def test_select_device_parity_on_ties(kind, rng):
+    """All-equal utilities tie every exploitation score; both paths must
+    break ties identically (stable: lowest index first)."""
+    n = 64
+    pop = make_population(rng, n)
+    pop = pop.replace(stat_util=jnp.ones((n,)),
+                      last_duration=jnp.ones((n,)),
+                      battery_pct=jnp.full((n,), 80.0),
+                      explored=jnp.ones((n,), bool),
+                      last_round=jnp.zeros((n,), jnp.int32))
+    cfg = SelectorConfig(kind=kind, k=10, epsilon0=0.0, epsilon_min=0.0)
+    pred = jnp.full((n,), 3.0)
+    key = jax.random.fold_in(rng, 7)
+    idx_dev, _ = select(key, cfg, SelectorState.create(cfg), pop, pred)
+    idx_host, _ = select_host(key, cfg, SelectorState.create(cfg), pop, pred)
+    np.testing.assert_array_equal(idx_dev, idx_host)
+    np.testing.assert_array_equal(idx_dev, np.arange(10))
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_select_device_all_dropped(kind, rng):
+    pop = make_population(rng, 32)
+    pop = pop.replace(dropped=jnp.ones((32,), bool))
+    cfg = SelectorConfig(kind=kind, k=8)
+    key = jax.random.fold_in(rng, 11)
+    idx_dev, st_dev = select(key, cfg, SelectorState.create(cfg), pop)
+    idx_host, st_host = select_host(key, cfg, SelectorState.create(cfg), pop)
+    assert len(idx_dev) == 0 and len(idx_host) == 0
+    # the host reference skips decay/pacer when nothing is selectable
+    assert float(st_dev.epsilon) == pytest.approx(float(st_host.epsilon))
+    assert float(st_dev.util_ema) == pytest.approx(float(st_host.util_ema))
+    assert int(st_dev.round) == int(st_host.round) == 1
+
+
+def test_epj_exploit_never_overflows_to_unselectable(rng):
+    """When every explored client is doomed (cost > battery), eafl-epj must
+    not fill exploit slots with -inf-scored (or dead) clients."""
+    n = 24
+    pop = make_population(rng, n)
+    pop = pop.replace(stat_util=jnp.ones((n,)),
+                      explored=jnp.ones((n,), bool),
+                      battery_pct=jnp.full((n,), 10.0),
+                      dropped=jnp.zeros((n,), bool).at[:4].set(True))
+    cost = jnp.full((n,), 50.0)  # everyone would die mid-round
+    cfg = SelectorConfig(kind="eafl-epj", k=8)
+    key = jax.random.fold_in(rng, 23)
+    idx_dev, _ = select(key, cfg, SelectorState.create(cfg), pop, cost)
+    idx_host, _ = select_host(key, cfg, SelectorState.create(cfg), pop, cost)
+    np.testing.assert_array_equal(idx_dev, idx_host)
+    assert len(idx_dev) == 0, idx_dev
+
+
+def test_select_trims_to_valid_count(rng):
+    """k larger than the alive population: both paths return n_valid picks."""
+    n = 16
+    pop = make_population(rng, n)
+    pop = pop.replace(dropped=jnp.zeros((n,), bool).at[4:].set(True))
+    cfg = SelectorConfig(kind="eafl", k=10)
+    key = jax.random.fold_in(rng, 13)
+    idx_dev, _ = select(key, cfg, SelectorState.create(cfg), pop)
+    idx_host, _ = select_host(key, cfg, SelectorState.create(cfg), pop)
+    assert len(idx_dev) == len(idx_host) == 4
+    np.testing.assert_array_equal(np.sort(idx_dev), np.arange(4))
+
+
+@pytest.mark.parametrize("kind", ["eafl", "oort", "eafl-epj"])
+def test_select_pallas_matches_jnp(kind, rng):
+    """The Pallas kernel leg returns the same picks as the lax.top_k leg
+    (interpret mode on CPU; scores are continuous so no ties)."""
+    pop = _mixed_pop(rng, n=200)   # server default; exercises tail padding
+    cfg = SelectorConfig(kind=kind, k=12)
+    pred = jnp.abs(jax.random.normal(jax.random.fold_in(rng, 3), (200,))) * 5
+    key = jax.random.fold_in(rng, 17)
+    idx_jnp, st_jnp = select(key, cfg, SelectorState.create(cfg), pop, pred,
+                             use_pallas=False)
+    idx_pal, st_pal = select(key, cfg, SelectorState.create(cfg), pop, pred,
+                             use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(idx_jnp, idx_pal)
+    assert float(st_jnp.util_ema) == pytest.approx(float(st_pal.util_ema))
+
+
+# ------------------------------------------------------------ kernel shapes
+@pytest.mark.parametrize("n,block", [(200, 4096), (200, 64), (1000, 256),
+                                     (4097, 4096)])
+def test_topk_kernel_tail_padding(n, block, rng):
+    """Arbitrary population sizes work: the tail block is masked, never
+    selected."""
+    util = jax.random.normal(jax.random.fold_in(rng, 0), (n,))
+    power = jax.random.normal(jax.random.fold_in(rng, 1), (n,))
+    valid = jax.random.bernoulli(jax.random.fold_in(rng, 2), 0.8, (n,))
+    tv, ti = ops.topk_reward(util, power, valid, f=0.25, k=10, block_n=block)
+    ev, ei = ref.topk_reward_ref(util, power, valid, 0.25, 10)
+    np.testing.assert_allclose(np.asarray(tv), np.asarray(ev), atol=1e-6)
+    assert set(np.asarray(ti).tolist()) == set(np.asarray(ei).tolist())
+    assert (np.asarray(ti) < n).all()
+
+
+def test_topk_kernel_k_exceeds_valid_count(rng):
+    """k >= number of valid entries: the kernel must emit distinct
+    lowest-index-first candidates (lax.top_k tie-breaking), not duplicate
+    index 0."""
+    n = 64
+    util = jax.random.normal(jax.random.fold_in(rng, 0), (n,))
+    power = jax.random.normal(jax.random.fold_in(rng, 1), (n,))
+    valid = jnp.ones((n,), bool).at[10:14].set(False)
+    tv, ti = ops.topk_reward(util, power, valid, f=0.25, k=n, block_n=n)
+    ev, ei = ref.topk_reward_ref(util, power, valid, 0.25, n)
+    assert len(set(np.asarray(ti).tolist())) == n           # all distinct
+    assert set(np.asarray(ti).tolist()) == set(np.asarray(ei).tolist())
+    finite = np.isfinite(np.asarray(ev))
+    np.testing.assert_allclose(np.asarray(tv)[finite],
+                               np.asarray(ev)[finite], atol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["oort", "eafl-epj"])
+def test_topk_kernel_score_variants(mode, rng):
+    n, k = 512, 16
+    a = jnp.abs(jax.random.normal(jax.random.fold_in(rng, 0), (n,))) * 10
+    b = jnp.abs(jax.random.normal(jax.random.fold_in(rng, 1), (n,))) + 0.1
+    ucb = jnp.abs(jax.random.normal(jax.random.fold_in(rng, 2), (n,))) * 0.1
+    valid = jax.random.bernoulli(jax.random.fold_in(rng, 3), 0.9, (n,))
+    tv, ti = ops.topk_reward(a, b, valid, f=0.25, k=k, block_n=128,
+                             ucb=ucb, mode=mode)
+    ev, ei = ref.topk_reward_ref(a, b, valid, 0.25, k, ucb=ucb, mode=mode)
+    np.testing.assert_allclose(np.asarray(tv), np.asarray(ev), rtol=1e-6)
+    assert set(np.asarray(ti).tolist()) == set(np.asarray(ei).tolist())
+
+
+# --------------------------------------------------- scan-vs-loop equivalence
+def test_scanned_rounds_match_host_loop(rng):
+    """run_rounds_scanned == the per-round host loop (select +
+    simulate_round) on battery/dropout/duration trajectories — the
+    acceptance bar for the device-resident engine."""
+    n, rounds, k = 200, 20, 20
+    mb, steps, bs = 85e6, 400, 20
+    em = EnergyModel()
+    cfg = SelectorConfig(kind="eafl", k=k)
+    pop0 = make_population(rng, n, init_battery_low=15.0,
+                           init_battery_high=90.0)
+    pop0 = pop0.replace(
+        stat_util=jax.random.uniform(jax.random.fold_in(rng, 1), (n,)) * 10)
+    keys = jax.random.split(jax.random.fold_in(rng, 2), rounds)
+
+    pop, st = pop0, SelectorState.create(cfg)
+    loop_sel, loop_dur, loop_batt, loop_drop = [], [], [], []
+    for r in range(rounds):
+        pred = predicted_round_cost_pct(pop, em, mb, steps, bs)
+        idx, st = select(keys[r], cfg, st, pop, pred)
+        pop, out = simulate_round(pop, idx, em, mb, steps, bs, rnd=r + 1)
+        loop_sel.append(set(idx.tolist()))
+        loop_dur.append(out.round_duration)
+        loop_batt.append(float(pop.battery_pct.mean()))
+        loop_drop.append(int(np.asarray(pop.dropped).sum()))
+
+    fpop, fst, traj = run_rounds_scanned(
+        jax.random.fold_in(rng, 2), cfg, pop0, SelectorState.create(cfg),
+        em, mb, steps, bs, rounds)
+
+    for r in range(rounds):
+        sel_r = np.asarray(traj["selected"][r])[np.asarray(traj["chosen"][r])]
+        assert set(sel_r.tolist()) == loop_sel[r], f"round {r}"
+    np.testing.assert_allclose(np.asarray(traj["round_duration"]), loop_dur,
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(traj["mean_battery"]), loop_batt,
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(traj["total_dropped"]),
+                                  loop_drop)
+    np.testing.assert_allclose(np.asarray(fpop.battery_pct),
+                               np.asarray(pop.battery_pct),
+                               rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(fpop.dropped),
+                                  np.asarray(pop.dropped))
+    assert int(fst.round) == rounds
+
+
+def test_run_selection_scanned_from_flconfig():
+    cfg = FLConfig(selector=SelectorConfig(kind="eafl", k=4),
+                   n_clients=24, rounds=6, local_steps=3, batch_size=8,
+                   samples_per_client=24, model=reduced(), input_hw=16,
+                   sim_model_bytes=85e6, sim_local_steps=400)
+    fpop, traj = run_selection_scanned(cfg)
+    assert traj["selected"].shape == (6, 4)
+    assert traj["round_duration"].shape == (6,)
+    assert np.isfinite(np.asarray(traj["mean_battery"])).all()
+    assert int(traj["state"].round) == 6
