@@ -1,5 +1,10 @@
 """The paper's primary contribution: energy-aware client selection (EAFL)."""
-from repro.core.clients import ClientPopulation, make_population, round_times
+from repro.core.clients import (
+    ClientPopulation,
+    make_population,
+    pad_population,
+    round_times,
+)
 from repro.core.energy import EnergyModel
 from repro.core.fairness import jains_index, participation_rate
 from repro.core.rewards import (
@@ -15,15 +20,18 @@ from repro.core.selection import (
     SelectorConfig,
     SelectorState,
     compute_scores,
+    make_sharded_select_step,
     select,
     select_device,
     select_host,
 )
 
 __all__ = [
-    "ClientPopulation", "make_population", "round_times", "EnergyModel",
+    "ClientPopulation", "make_population", "pad_population", "round_times",
+    "EnergyModel",
     "jains_index", "participation_rate", "eafl_reward", "minmax_normalize",
     "oort_utility", "projected_power", "stat_utility", "system_penalty",
     "PALLAS_N_THRESHOLD", "SelectorConfig", "SelectorState",
-    "compute_scores", "select", "select_device", "select_host",
+    "compute_scores", "make_sharded_select_step", "select", "select_device",
+    "select_host",
 ]

@@ -96,6 +96,31 @@ def make_population(key, n_clients: int,
     )
 
 
+def pad_population(pop: ClientPopulation, multiple: int) -> ClientPopulation:
+    """Pad ``pop`` to a multiple of ``multiple`` clients (sharded engine:
+    every mesh shard must hold the same number of clients).
+
+    Pad clients are inert by construction: battery 0 and ``dropped`` True
+    (so ``alive`` is False and no selector scores them), ``explored`` True
+    (so they are never exploration candidates), unit bandwidths (finite
+    round times), and 0 samples. The engine's per-client updates keep them
+    inert — battery clips at 0 and an already-dropped client never counts
+    as a new dropout.
+    """
+    pad = (-pop.n) % multiple
+    if pad == 0:
+        return pop
+    fills = {"category": 0, "network": 0, "down_mbps": 1.0, "up_mbps": 1.0,
+             "battery_pct": 0.0, "stat_util": 0.0, "last_duration": 1.0,
+             "explored": True, "last_round": 0, "times_selected": 0,
+             "dropped": True, "n_samples": 0}
+    return ClientPopulation(**{
+        f: jnp.concatenate([
+            getattr(pop, f),
+            jnp.full((pad,), fills[f], getattr(pop, f).dtype)])
+        for f in _FIELDS})
+
+
 def round_times(pop: ClientPopulation, model_bytes: float,
                 local_steps: int, batch_size: int,
                 up_bytes: float = None) -> Dict[str, jnp.ndarray]:

@@ -55,9 +55,21 @@ def minmax_range(x, valid):
     return lo, jnp.maximum(hi - lo, 1e-9)
 
 
-def minmax_normalize(x, valid):
-    """Min-max normalise ``x`` over the ``valid`` subset (0 elsewhere)."""
-    lo, rng = minmax_range(x, valid)
+def minmax_range_shard(x, valid, axis_name):
+    """Shard-local :func:`minmax_range`: local extrema reduced over the mesh
+    axis. min/max are exactly associative, so the (lo, range) pair is
+    bitwise identical to the unsharded computation over the full array."""
+    lo = jax.lax.pmin(jnp.min(jnp.where(valid, x, jnp.inf)), axis_name)
+    hi = jax.lax.pmax(jnp.max(jnp.where(valid, x, -jnp.inf)), axis_name)
+    return lo, jnp.maximum(hi - lo, 1e-9)
+
+
+def minmax_normalize(x, valid, stats=None):
+    """Min-max normalise ``x`` over the ``valid`` subset (0 elsewhere).
+    ``stats`` overrides the locally-computed (lo, range) — the sharded
+    selection path passes globally-reduced statistics through here so the
+    normalised values match the single-device ones bitwise."""
+    lo, rng = minmax_range(x, valid) if stats is None else stats
     return jnp.where(valid, (x - lo) / rng, 0.0)
 
 

@@ -29,8 +29,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import rewards
-from repro.core.clients import ClientPopulation
+from repro.core.clients import ClientPopulation, pad_population
 from repro.kernels import topk_select as _tk
+
+# Counter-based (partitionable) threefry: ``random.bits(key, (n,))`` becomes
+# an elementwise hash of the position, so (a) XLA shards rank-bit generation
+# with the population instead of replicating the full stream on every device
+# of a `clients` mesh, and (b) the stream is prefix-stable — the first N
+# elements are identical for any padded length, which is what makes the
+# padded sharded engine bit-compatible with the unpadded single-device path.
+# Set once at import (NOT per engine entry point: parity between the host /
+# single-device / sharded paths requires every path to draw the same
+# stream, and flipping the flag mid-process would split them). An explicit
+# user setting via the standard env var wins.
+import os as _os
+
+if "JAX_THREEFRY_PARTITIONABLE" not in _os.environ:
+    jax.config.update("jax_threefry_partitionable", True)
 
 # population size above which the Pallas kernel is preferred on TPU;
 # below it a single lax.top_k is faster than a two-level tournament.
@@ -134,7 +149,7 @@ def _score_inputs(cfg: SelectorConfig, state: SelectorState,
 
 
 def _mix_scores(cfg: SelectorConfig, a, b, valid, mask, ucb,
-                mode: str) -> jnp.ndarray:
+                mode: str, norm_stats=None) -> jnp.ndarray:
     f = cfg.f
     if mode == "oort":
         s = a
@@ -144,8 +159,14 @@ def _mix_scores(cfg: SelectorConfig, a, b, valid, mask, ucb,
             # set, folded into scalar affine coefficients so no normalised
             # million-entry array is ever materialised:
             #   f*(a-lo_a)/ra + (1-f)*(b-lo_b)/rb = ca*a + cb*b + c0
-            lo_a, ra = rewards.minmax_range(a, valid)
-            lo_b, rb = rewards.minmax_range(b, valid)
+            # ``norm_stats`` lets the sharded path inject globally-reduced
+            # (lo, range) pairs; the arithmetic below is shared, so shard
+            # scores stay bitwise identical to the single-device scores.
+            if norm_stats is None:
+                lo_a, ra = rewards.minmax_range(a, valid)
+                lo_b, rb = rewards.minmax_range(b, valid)
+            else:
+                (lo_a, ra), (lo_b, rb) = norm_stats
             ca, cb = f / ra, (1.0 - f) / rb
             c0 = -(ca * lo_a + cb * lo_b)
             s = ca * a + cb * b + c0
@@ -247,6 +268,182 @@ def _device_select(key, cfg: SelectorConfig, state: SelectorState,
 
 select_device = partial(jax.jit, static_argnames=(
     "cfg", "use_pallas", "interpret"))(_device_select)
+
+
+# ------------------------------------------------------------------ sharded
+# Two-level selection over a `clients` mesh axis: each shard generates its
+# local top-k candidates (the same structure the Pallas kernel uses per
+# block), an all-gather merges the S*k candidates, and a tiny global top-k
+# finishes. Candidates are gathered in shard order and each shard emits
+# ties lowest-local-index first, so the merged flat order is ascending
+# global index — exactly ``lax.top_k``'s tie-breaking over the full array.
+# Combined with bitwise-identical scores (shared `_mix_scores` arithmetic,
+# exactly-associative min/max collectives for the normalisation stats, and
+# prefix-stable partitionable rank bits) the sharded output is
+# index-for-index identical to :func:`select_device`.
+
+def _merge_candidates(v_loc, i_loc, k: int, axis_name: str):
+    """All-gather per-shard candidates (values + GLOBAL indices) and finish
+    with one tiny global top-k. Candidates arrive in shard order and each
+    shard emits ties lowest-index-first, so among equal values the flat
+    gather order is ascending global index — `lax.top_k` tie-breaking."""
+    v_all = jax.lax.all_gather(v_loc, axis_name).reshape(-1)
+    i_all = jax.lax.all_gather(i_loc, axis_name).reshape(-1)
+    _, pos = jax.lax.top_k(v_all, k)
+    return i_all[pos]
+
+
+def _merge_topk(g_loc, k: int, k_loc: int, base, axis_name: str):
+    """Per-shard top-k_loc + candidate merge (exact two-level tournament;
+    tie-identical to single-device ``lax.top_k(g, k)``)."""
+    v_loc, i_loc = jax.lax.top_k(g_loc, k_loc)
+    return _merge_candidates(v_loc, i_loc + base, k, axis_name)
+
+
+def _slot_gather(x_loc, idx, mask, base, axis_name: str, fill=0.0):
+    """Gather ``x_loc[idx - base]`` for the (k,) global ``idx`` slots where
+    ``mask`` — exactly one shard owns each slot, so a psum reassembles the
+    replicated (k,) result without reordering any float arithmetic."""
+    n_loc = x_loc.shape[0]
+    in_range = mask & (idx >= base) & (idx < base + n_loc)
+    loc = jnp.clip(idx - base, 0, n_loc - 1)
+    vals = jnp.where(in_range, x_loc[loc].astype(jnp.float32), fill)
+    return jax.lax.psum(vals, axis_name)
+
+
+def _shard_select(key, state: SelectorState, pop: ClientPopulation,
+                  predicted_cost_pct, bits,
+                  *, cfg: SelectorConfig, axis_name: str, n_real: int,
+                  use_pallas: bool, interpret: bool):
+    """Shard-local body of the sharded selection step (call under
+    ``shard_map`` over ``axis_name``).
+
+    ``pop``/``predicted_cost_pct``/``bits`` are this shard's (n_shard,)
+    slices of the padded population (pad clients are dead: ``alive`` False,
+    ``explored`` True); ``bits`` is the global rank-bit stream generated
+    outside the shard_map (prefix-stable, see module flag above). Returns
+    replicated ``(idx (k,), chosen (k,) bool, new_state)`` matching
+    :func:`_device_select` on the unpadded population index-for-index.
+    """
+    n_loc = predicted_cost_pct.shape[0]
+    k = min(cfg.k, n_real)
+    k_loc = min(k, n_loc)
+    base = (jax.lax.axis_index(axis_name) * n_loc).astype(jnp.int32)
+    state = SelectorState(state.round + 1, state.epsilon, state.pacer_T,
+                          state.util_ema)
+    valid = pop.alive
+    k_eff = jnp.minimum(k, jax.lax.psum(
+        jnp.sum(valid), axis_name)).astype(jnp.int32)
+    slots = jnp.arange(k)
+
+    if cfg.kind == "random":
+        g = jnp.where(valid, bits, -1.0)
+        idx = _merge_topk(g, k, k_loc, base, axis_name)
+        return idx.astype(jnp.int32), slots < k_eff, state
+
+    explored = pop.explored & valid
+    unexplored = valid & ~explored
+
+    a, b, norm_valid, mask, ucb, mode = _score_inputs(cfg, state, pop,
+                                                      predicted_cost_pct)
+    mask = mask & explored
+    norm_stats = None
+    if mode == "eafl" and cfg.normalize_reward:
+        norm_stats = (rewards.minmax_range_shard(a, norm_valid, axis_name),
+                      rewards.minmax_range_shard(b, norm_valid, axis_name))
+
+    n_unexp = jax.lax.psum(jnp.sum(unexplored), axis_name).astype(jnp.int32)
+    n_expl_avail = jax.lax.psum(jnp.sum(mask), axis_name).astype(jnp.int32)
+    n_explore = jnp.minimum(
+        jnp.round(state.epsilon * k_eff).astype(jnp.int32), n_unexp)
+    n_exploit = jnp.minimum(k_eff - n_explore, n_expl_avail)
+    n_explore = jnp.minimum(k_eff - n_exploit, n_unexp)
+
+    if use_pallas:
+        if mode == "eafl" and cfg.normalize_reward:
+            a = rewards.minmax_normalize(a, norm_valid, norm_stats[0])
+            b = rewards.minmax_normalize(b, norm_valid, norm_stats[1])
+        # per-shard leg of the tournament is the Pallas block merge itself
+        v_loc, i_loc = _tk.topk_reward(a, b, mask, ucb=ucb, f=cfg.f,
+                                       k=k_loc, mode=mode,
+                                       interpret=interpret,
+                                       index_offset=base)
+        exploit_idx = _merge_candidates(v_loc, i_loc, k, axis_name)
+    else:
+        score = _mix_scores(cfg, a, b, norm_valid, mask, ucb, mode,
+                            norm_stats)
+        exploit_idx = _merge_topk(score, k, k_loc, base, axis_name)
+
+    g = jnp.where(unexplored, bits, -1.0)
+    explore_idx = _merge_topk(g, k, k_loc, base, axis_name)
+
+    take_exploit = slots < n_exploit
+    idx = jnp.where(take_exploit, exploit_idx,
+                    explore_idx[jnp.clip(slots - n_exploit, 0, k - 1)])
+    chosen = slots < (n_exploit + n_explore)
+
+    # state update: gather stat_util per chosen slot (one owner per slot,
+    # psum-reassembled), then reduce in slot order — bitwise identical to
+    # the single-device `sum(where(chosen, stat_util[idx], 0))`.
+    any_pick = k_eff > 0
+    n_chosen = jnp.sum(chosen)
+    sel_vals = _slot_gather(pop.stat_util, idx, chosen, base, axis_name)
+    sel_util = jnp.sum(jnp.where(chosen, sel_vals, 0.0)) \
+        / jnp.maximum(n_chosen, 1)
+    epsilon = jnp.where(
+        any_pick,
+        jnp.maximum(cfg.epsilon_min, state.epsilon * cfg.epsilon_decay),
+        state.epsilon)
+    slow = (state.util_ema > 0.0) & (sel_util < 0.95 * state.util_ema)
+    pacer = jnp.where(
+        any_pick & slow,
+        jnp.minimum(cfg.pacer_max, state.pacer_T + cfg.pacer_delta),
+        state.pacer_T)
+    ema = jnp.where(any_pick, 0.9 * state.util_ema + 0.1 * sel_util,
+                    state.util_ema)
+    return (idx.astype(jnp.int32), chosen,
+            SelectorState(state.round, epsilon, pacer, ema))
+
+
+def make_sharded_select_step(cfg: SelectorConfig, mesh, n_real: int,
+                             use_pallas: bool = False,
+                             interpret: bool = False,
+                             axis_name: str = "clients"):
+    """Jitted sharded selection step over a 1-D `clients` mesh.
+
+    Returns ``step(key, state, pop, predicted_cost_pct) -> (idx, chosen,
+    new_state)``. Inputs may be unpadded (the step pads in-trace to a
+    multiple of the mesh size — pad clients are dead, see
+    ``clients.pad_population``) or already padded and sharded over
+    ``axis_name``; outputs are replicated and identical to
+    :func:`select_device` on the unpadded inputs.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    n_shards = mesh.shape[axis_name]
+    n_padded = n_real + (-n_real) % n_shards
+    spec = P(axis_name)
+    body = shard_map(
+        partial(_shard_select, cfg=cfg, axis_name=axis_name, n_real=n_real,
+                use_pallas=use_pallas, interpret=interpret),
+        mesh=mesh,
+        in_specs=(P(), P(), spec, spec, spec),
+        out_specs=(P(), P(), P()),
+        check_rep=False)
+
+    @jax.jit
+    def step(key, state, pop, predicted_cost_pct):
+        if pop.n != n_padded:
+            pop = pad_population(pop, n_shards)
+            predicted_cost_pct = jnp.pad(predicted_cost_pct,
+                                         (0, n_padded - n_real))
+        # prefix-stable rank bits, generated sharded (partitionable threefry)
+        bits = jax.lax.with_sharding_constraint(
+            _rank_bits(key, n_padded), NamedSharding(mesh, spec))
+        return body(key, state, pop, predicted_cost_pct, bits)
+
+    return step
 
 
 def _auto_pallas(n: int, use_pallas: Optional[bool]) -> bool:

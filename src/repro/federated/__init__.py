@@ -14,7 +14,9 @@ from repro.federated.simulation import (
     RoundOutcome,
     make_round_engine,
     predicted_round_cost_pct,
+    round_cost_table,
     run_rounds_scanned,
+    run_rounds_sharded,
     simulate_round,
     simulate_round_device,
 )
@@ -22,5 +24,6 @@ from repro.federated.simulation import (
 __all__ = ["make_server_optimizer", "server_update", "weighted_delta",
            "FLConfig", "FLHistory", "run_fl", "run_selection_scanned",
            "RoundOutcome", "DeviceRoundOutcome", "make_round_engine",
-           "predicted_round_cost_pct", "run_rounds_scanned",
+           "predicted_round_cost_pct", "round_cost_table",
+           "run_rounds_scanned", "run_rounds_sharded",
            "simulate_round", "simulate_round_device"]

@@ -38,6 +38,7 @@ from repro.federated.aggregation import (
 from repro.federated.simulation import (
     predicted_round_cost_pct,
     run_rounds_scanned,
+    run_rounds_sharded,
     simulate_round,
 )
 from repro.models.resnet import init_resnet, resnet_forward, resnet_loss
@@ -277,6 +278,8 @@ def run_fl(cfg: FLConfig, verbose: bool = False) -> FLHistory:
 
 def run_selection_scanned(cfg: FLConfig, rounds: Optional[int] = None,
                           use_pallas: Optional[bool] = None,
+                          n_shards: Optional[int] = None,
+                          mesh=None,
                           ) -> Tuple[ClientPopulation, Dict[str, Any]]:
     """The device-resident fast path: selection + energy + battery advanced
     for ``rounds`` rounds inside one ``jax.lax.scan`` (no training — the
@@ -285,7 +288,9 @@ def run_selection_scanned(cfg: FLConfig, rounds: Optional[int] = None,
 
     Uses the same population, energy model, and simulated device workload
     as :func:`run_fl`, so its battery/dropout trajectories match the host
-    loop within float tolerance.
+    loop within float tolerance. With ``n_shards``/``mesh`` the scan runs
+    on the sharded engine (population split over a `clients` mesh,
+    ``run_rounds_sharded``) with an identical selection trajectory.
     """
     key = jax.random.PRNGKey(cfg.seed)
     kpop, _kdata, kmodel, _ktest, kloop = jax.random.split(key, 5)
@@ -296,9 +301,17 @@ def run_selection_scanned(cfg: FLConfig, rounds: Optional[int] = None,
         model_bytes = sum(x.size for x in jax.tree.leaves(params)) * 4.0
     pop, sim_steps, up_bytes, energy_model = _engine_setup(cfg, kpop,
                                                            model_bytes)
-    final_pop, final_state, traj = run_rounds_scanned(
-        kloop, cfg.selector, pop, SelectorState.create(cfg.selector),
-        energy_model, model_bytes, sim_steps, cfg.batch_size,
-        rounds or cfg.rounds, deadline_s=cfg.deadline_s, up_bytes=up_bytes,
-        use_pallas=use_pallas)
+    if n_shards is not None or mesh is not None:
+        final_pop, final_state, traj = run_rounds_sharded(
+            kloop, cfg.selector, pop, SelectorState.create(cfg.selector),
+            energy_model, model_bytes, sim_steps, cfg.batch_size,
+            rounds or cfg.rounds, deadline_s=cfg.deadline_s,
+            up_bytes=up_bytes, use_pallas=use_pallas, mesh=mesh,
+            n_shards=n_shards)
+    else:
+        final_pop, final_state, traj = run_rounds_scanned(
+            kloop, cfg.selector, pop, SelectorState.create(cfg.selector),
+            energy_model, model_bytes, sim_steps, cfg.batch_size,
+            rounds or cfg.rounds, deadline_s=cfg.deadline_s,
+            up_bytes=up_bytes, use_pallas=use_pallas)
     return final_pop, {"state": final_state, **traj}

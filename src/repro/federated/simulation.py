@@ -27,9 +27,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.clients import ClientPopulation, round_times
+from repro.core.clients import ClientPopulation, pad_population, round_times
 from repro.core.energy import EnergyModel
-from repro.core.selection import SelectorConfig, SelectorState, _device_select
+from repro.core.selection import (
+    SelectorConfig,
+    SelectorState,
+    _auto_pallas,
+    _device_select,
+    _rank_bits,
+    _shard_select,
+    _slot_gather,
+)
 
 
 @dataclass
@@ -73,12 +81,37 @@ def predicted_round_cost_pct(pop: ClientPopulation, energy_model: EnergyModel,
                        batch_size, up_bytes)[1]
 
 
+def _asum(x, axis_name):
+    s = jnp.sum(x)
+    return jax.lax.psum(s, axis_name) if axis_name else s
+
+
+def _amax(x, axis_name):
+    m = jnp.max(x)
+    return jax.lax.pmax(m, axis_name) if axis_name else m
+
+
+def _aany(x, axis_name):
+    a = jnp.any(x)
+    if axis_name:
+        a = jax.lax.pmax(a.astype(jnp.int32), axis_name) > 0
+    return a
+
+
 def simulate_round_device(pop: ClientPopulation, sel_mask: jnp.ndarray,
                           t_total: jnp.ndarray, cost: jnp.ndarray,
                           rnd, energy_model: EnergyModel,
                           deadline_s: Optional[float] = None,
+                          axis_name: Optional[str] = None,
                           ) -> Tuple[ClientPopulation, DeviceRoundOutcome]:
-    """Pure traced round state update over a (N,) selection mask."""
+    """Pure traced round state update over a (N,) selection mask.
+
+    With ``axis_name`` the same body runs shard-local under ``shard_map``:
+    per-client updates are elementwise (bitwise identical to the unsharded
+    run) and the scalar reductions go through psum/pmax collectives (max is
+    exactly associative, so durations match bitwise too; summed stats may
+    differ in the last ulp from the single-device reduction order).
+    """
     battery_after = pop.battery_pct - jnp.where(sel_mask, cost, 0.0)
     ran_out = sel_mask & (battery_after <= 0.0)
     missed_deadline = (sel_mask & (t_total > deadline_s)
@@ -86,11 +119,11 @@ def simulate_round_device(pop: ClientPopulation, sel_mask: jnp.ndarray,
     succeeded = sel_mask & ~ran_out & ~missed_deadline
 
     # round wall time: slowest successful participant (or deadline)
-    any_sel = jnp.any(sel_mask)
-    max_succ = jnp.max(jnp.where(succeeded, t_total, -jnp.inf))
-    max_sel = jnp.max(jnp.where(sel_mask, t_total, -jnp.inf))
+    any_sel = _aany(sel_mask, axis_name)
+    max_succ = _amax(jnp.where(succeeded, t_total, -jnp.inf), axis_name)
+    max_sel = _amax(jnp.where(sel_mask, t_total, -jnp.inf), axis_name)
     fallback = jnp.float32(deadline_s) if deadline_s else max_sel
-    duration = jnp.where(jnp.any(succeeded), max_succ, fallback)
+    duration = jnp.where(_aany(succeeded, axis_name), max_succ, fallback)
     if deadline_s:
         duration = jnp.minimum(duration, jnp.float32(deadline_s))
     duration = jnp.where(any_sel, duration, 0.0)
@@ -103,7 +136,8 @@ def simulate_round_device(pop: ClientPopulation, sel_mask: jnp.ndarray,
 
     was_dropped = pop.dropped
     dropped_new = was_dropped | (battery_new <= 0.0)
-    new_dropouts = jnp.sum(dropped_new & ~was_dropped).astype(jnp.int32)
+    new_dropouts = _asum(dropped_new & ~was_dropped,
+                         axis_name).astype(jnp.int32)
 
     new_pop = pop.replace(
         battery_pct=battery_new,
@@ -121,7 +155,7 @@ def simulate_round_device(pop: ClientPopulation, sel_mask: jnp.ndarray,
         cost_pct=cost,
         round_duration=duration.astype(jnp.float32),
         new_dropouts=new_dropouts,
-        energy_spent_pct=jnp.sum(jnp.where(sel_mask, cost, 0.0)),
+        energy_spent_pct=_asum(jnp.where(sel_mask, cost, 0.0), axis_name),
     )
     return new_pop, outcome
 
@@ -246,7 +280,6 @@ def run_rounds_scanned(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
     and ``total_dropped (R,)``. Matches the per-round host loop
     (``select`` + ``simulate_round``) within float tolerance.
     """
-    from repro.core.selection import _auto_pallas
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     run = _scanned_runner(
@@ -257,3 +290,157 @@ def run_rounds_scanned(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
         int(rounds), _auto_pallas(pop.n, use_pallas), interpret)
     (pop, st), traj = run(key, pop, sel_state.canonical())
     return pop, st, traj
+
+
+# ------------------------------------------------------------------ sharded
+# Round engine over a 1-D `clients` mesh: the population pytree is sharded
+# on its leading (client) dimension, selection runs per-shard candidate
+# generation + a global (k * n_shards -> k) merge (see
+# ``selection._shard_select``), and the battery/dropout simulation stays
+# fully shard-local with only the (k,) selected indices and scalar round
+# stats reassembled via collectives. The static per-client cost table
+# (round time + battery debit) depends only on immutable population fields
+# (category, network, bandwidths), so it is computed ONCE at engine setup
+# and carried as a sharded constant instead of being recomputed every round
+# — on CPU meshes that hoist is most of the measured speedup
+# (BENCH_selection.json).
+
+def _shard_round_step(key, sel_state, pop, t_total, cost, bits, *,
+                      sel_cfg, energy_model, deadline_s, use_pallas,
+                      interpret, axis_name, n_real):
+    """Shard-local round step (selection -> simulation) for shard_map."""
+    n_loc = cost.shape[0]
+    base = (jax.lax.axis_index(axis_name) * n_loc).astype(jnp.int32)
+    idx, chosen, sel_state = _shard_select(
+        key, sel_state, pop, cost, bits, cfg=sel_cfg, axis_name=axis_name,
+        n_real=n_real, use_pallas=use_pallas, interpret=interpret)
+    # scatter the shard-owned chosen slots into the local population mask
+    # (foreign/unchosen slots route to index n_loc and are dropped)
+    own = chosen & (idx >= base) & (idx < base + n_loc)
+    sel_mask = jnp.zeros((n_loc,), bool).at[
+        jnp.where(own, idx - base, n_loc)].set(True, mode="drop")
+    pop, dev = simulate_round_device(pop, sel_mask, t_total, cost,
+                                     sel_state.round, energy_model,
+                                     deadline_s, axis_name=axis_name)
+    # per-slot success for the trajectory: one shard owns each slot
+    succ_sel = _slot_gather(dev.succeeded, idx, chosen, base, axis_name) > 0
+    return pop, sel_state, idx, chosen, succ_sel, dev
+
+
+@functools.lru_cache(maxsize=16)
+def _sharded_scanned_runner(sel_cfg: SelectorConfig,
+                            energy_model: EnergyModel,
+                            deadline_s: Optional[float], rounds: int,
+                            use_pallas: bool, interpret: bool,
+                            mesh, n_real: int, axis_name: str):
+    """Cached jitted R-round sharded scan. The hoisted cost table is a run
+    argument (not a static), so one compilation serves any population with
+    the same shape/config."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    n_shards = mesh.shape[axis_name]
+    n_padded = n_real + (-n_real) % n_shards
+    n_pad = n_padded - n_real
+    spec = P(axis_name)
+
+    def body(key_r, st, pop, t_total, cost, bits):
+        pop, st, idx, chosen, succ_sel, dev = _shard_round_step(
+            key_r, st, pop, t_total, cost, bits, sel_cfg=sel_cfg,
+            energy_model=energy_model, deadline_s=deadline_s,
+            use_pallas=use_pallas, interpret=interpret,
+            axis_name=axis_name, n_real=n_real)
+        out = {
+            "selected": idx,
+            "chosen": chosen,
+            "succeeded": succ_sel,
+            "round_duration": dev.round_duration,
+            "new_dropouts": dev.new_dropouts,
+            "energy_spent_pct": dev.energy_spent_pct,
+            "mean_battery": _asum(pop.battery_pct, axis_name) / n_real,
+            "total_dropped": (_asum(pop.dropped, axis_name)
+                              .astype(jnp.int32) - n_pad),
+        }
+        return pop, st, out
+
+    smapped = shard_map(body, mesh=mesh,
+                        in_specs=(P(), P(), spec, spec, spec, spec),
+                        out_specs=(spec, P(), P()),
+                        check_rep=False)
+
+    @jax.jit
+    def run(key, pop, st, t_total, cost):
+        def scan_step(carry, key_r):
+            pop, st = carry
+            # prefix-stable sharded rank bits (partitionable threefry):
+            # the first n_real values equal the single-device stream
+            bits = jax.lax.with_sharding_constraint(
+                _rank_bits(key_r, n_padded), NamedSharding(mesh, spec))
+            pop, st, out = smapped(key_r, st, pop, t_total, cost, bits)
+            return (pop, st), out
+
+        keys = jax.random.split(key, rounds)
+        return jax.lax.scan(scan_step, (pop, st), keys)
+
+    return run
+
+
+def round_cost_table(pop: ClientPopulation, energy_model: EnergyModel,
+                     model_bytes: float, local_steps: int, batch_size: int,
+                     up_bytes: Optional[float] = None, sharding=None):
+    """Precompute the round-invariant per-client (round time, battery cost)
+    table. Both depend only on static population fields, so the sharded
+    engine computes them once at setup instead of once per round."""
+    fn = lambda p: _round_cost(p, energy_model, float(model_bytes),
+                               int(local_steps), int(batch_size),
+                               None if up_bytes is None else float(up_bytes))
+    if sharding is not None:
+        return jax.jit(fn, out_shardings=(sharding, sharding))(pop)
+    return jax.jit(fn)(pop)
+
+
+def run_rounds_sharded(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
+                       sel_state: SelectorState, energy_model: EnergyModel,
+                       model_bytes: float, local_steps: int, batch_size: int,
+                       rounds: int,
+                       deadline_s: Optional[float] = None,
+                       up_bytes: Optional[float] = None,
+                       use_pallas: Optional[bool] = None,
+                       interpret: Optional[bool] = None,
+                       mesh=None, n_shards: Optional[int] = None,
+                       ) -> Tuple[ClientPopulation, SelectorState,
+                                  Dict[str, jnp.ndarray]]:
+    """Sharded twin of :func:`run_rounds_scanned` over a `clients` mesh.
+
+    Pads the population to a multiple of the mesh size (pad clients are
+    dead and never selected), shards it with the hoisted cost table, and
+    scans fully sharded. The selection trajectory (``selected``/``chosen``)
+    is index-for-index identical to :func:`run_rounds_scanned`; summed
+    stats (``energy_spent_pct``, ``mean_battery``) match within float
+    reduction-order tolerance. The returned population is trimmed back to
+    the real client count.
+    """
+    from repro.launch.mesh import make_client_mesh
+    from repro.launch.sharding import population_sharding
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if mesh is None:
+        mesh = make_client_mesh(n_shards)
+    axis_name = mesh.axis_names[0]
+    n_real = pop.n
+    shard = population_sharding(mesh, axis_name)
+    padded = jax.device_put(pad_population(pop, mesh.shape[axis_name]),
+                            shard)
+    t_total, cost = round_cost_table(padded, energy_model, model_bytes,
+                                     local_steps, batch_size, up_bytes,
+                                     sharding=shard)
+    run = _sharded_scanned_runner(
+        sel_cfg, energy_model,
+        None if deadline_s is None else float(deadline_s), int(rounds),
+        _auto_pallas(n_real, use_pallas), interpret, mesh, n_real,
+        axis_name)
+    (fpop, st), traj = run(key, padded, sel_state.canonical(), t_total, cost)
+    if fpop.n != n_real:
+        fpop = jax.tree.map(lambda x: x[:n_real], fpop)
+    return fpop, st, traj

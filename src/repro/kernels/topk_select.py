@@ -69,10 +69,13 @@ def _topk_kernel(a_ref, b_ref, valid_ref, ucb_ref, vals_ref, idx_ref,
 def topk_reward(a, b, valid, *, f: float, k: int,
                 block_n: int = DEFAULT_BLOCK_N,
                 ucb=None, mode: str = "eafl",
-                interpret: bool = False):
+                interpret: bool = False, index_offset=None):
     """a/b: (N,) f32 score inputs (see module docstring per ``mode``);
     valid: (N,) int32/bool; ucb: optional (N,) f32 staleness bonus.
-    Returns (vals, idx) each (k,)."""
+    Returns (vals, idx) each (k,). ``index_offset`` (static or traced
+    scalar) shifts the returned indices — the sharded selection path uses
+    this kernel as the per-shard leg of its tournament and passes the
+    shard's global base index so candidates merge in global coordinates."""
     assert mode in MODES, mode
     N = a.shape[0]
     if ucb is None:
@@ -113,4 +116,7 @@ def topk_reward(a, b, valid, *, f: float, k: int,
     flat_v = vals.reshape(-1)
     flat_i = idx.reshape(-1)
     top_v, pos = jax.lax.top_k(flat_v, k)
-    return top_v, flat_i[pos]
+    top_i = flat_i[pos]
+    if index_offset is not None:
+        top_i = top_i + jnp.asarray(index_offset, jnp.int32)
+    return top_v, top_i

@@ -129,9 +129,15 @@ def parse_hlo(text: str) -> HloStats:
             wm = _WHILE_RE.search(op)
             if wm:
                 cond, body = wm.groups()
-                consts = [int(c) for c in _CONST_RE.findall(
-                    "\n".join(comp_ops.get(cond, [])))]
-                trip = max(consts) if consts else 1
+                # post-optimization artifacts annotate the trip count
+                # directly; fall back to the loop-condition constant
+                km = re.search(r'known_trip_count[^0-9]*(\d+)', op)
+                if km:
+                    trip = int(km.group(1))
+                else:
+                    consts = [int(c) for c in _CONST_RE.findall(
+                        "\n".join(comp_ops.get(cond, [])))]
+                    trip = max(consts) if consts else 1
                 while_edges.append((comp, body, max(trip, 1)))
 
     for _ in range(12):                    # fixpoint over nesting depth
@@ -157,14 +163,20 @@ def parse_hlo(text: str) -> HloStats:
         for op in ops:
             if m == 0.0:
                 break
-            # dot flops
+            # dot flops — operands may carry inline types in real artifacts
+            # (`dot(f32[4,16]{1,0} %x, ...)`) or be bare names in pre-layout
+            # HLO (`dot(%x, ...)`); prefer the inline lhs type, fall back to
+            # the symbol table
             dm = re.match(
-                r"(?:ROOT )?%?[\w\.\-]+ = (\(?.+?\)?) dot\(%?([\w\.\-]+), "
-                r"%?([\w\.\-]+)\)(.*)", op)
+                r"(?:ROOT )?%?[\w\.\-]+ = (\(?.+?\)?) dot\("
+                r"(?:([a-z0-9]+\[[0-9,]*\])(?:\{[0-9,]*\})? )?%?([\w\.\-]+), "
+                r"(?:[a-z0-9]+\[[0-9,]*\](?:\{[0-9,]*\})? )?%?([\w\.\-]+)\)"
+                r"(.*)", op)
             if dm:
-                out_txt, lhs, rhs, tail = dm.groups()
+                out_txt, lhs_type, lhs, rhs, tail = dm.groups()
                 out = _shape_dims(out_txt)
-                lhs_shape = _shape_dims(symbols.get((comp, lhs), ""))
+                lhs_shape = _shape_dims(lhs_type
+                                        or symbols.get((comp, lhs), ""))
                 km = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", tail)
                 if out and lhs_shape and km:
                     out_n = 1

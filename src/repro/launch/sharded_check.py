@@ -1,0 +1,175 @@
+from repro.host_devices import force_host_device_count_from_argv
+
+force_host_device_count_from_argv()  # must precede the first jax import
+
+"""Sharded-vs-single-device selection parity checker.
+
+Runs the full parity matrix of the sharded round engine against the
+single-device reference on N virtual CPU devices (the same
+``--xla_force_host_platform_device_count`` mechanism as
+``launch/dryrun.py``, which is why this must run in its own process):
+
+  - every selector kind (eafl / oort / eafl-epj / random), multi-round so
+    the selector state trajectory is exercised, on both a shard-divisible
+    and a non-divisible (padded final shard) population;
+  - tie-heavy scores (all-equal utilities: tie-breaking must be
+    index-identical);
+  - an entirely-dropped first shard and an all-dropped population;
+  - k larger than the per-shard client count;
+  - the Pallas per-shard leg against the single-device Pallas leg;
+  - the R-round scanned trajectory (``run_rounds_sharded`` vs
+    ``run_rounds_scanned``), index-for-index on selected/chosen/succeeded.
+
+Exits non-zero on the first mismatch; prints ``parity OK`` when the whole
+matrix passes.
+
+  PYTHONPATH=src python -m repro.launch.sharded_check --devices 8
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EnergyModel, SelectorConfig, SelectorState, \
+    make_population
+from repro.core.selection import make_sharded_select_step, select_device
+from repro.federated.simulation import run_rounds_scanned, run_rounds_sharded
+from repro.launch.mesh import make_client_mesh
+
+ALL_KINDS = ("eafl", "oort", "eafl-epj", "random")
+
+
+def _mixed_pop(key, n):
+    pop = make_population(key, n)
+    ks = jax.random.split(jax.random.fold_in(key, 1), 3)
+    return pop.replace(
+        stat_util=jax.random.uniform(ks[0], (n,)) * 10,
+        explored=jax.random.bernoulli(ks[1], 0.6, (n,)),
+        dropped=jax.random.bernoulli(ks[2], 0.08, (n,)))
+
+
+def _check_step(label, mesh, cfg, pop, pred, key, rounds=4,
+                use_pallas=False):
+    """Drive both paths for several rounds with independent state carries
+    and require identical indices, chosen masks, and selector state."""
+    step = make_sharded_select_step(cfg, mesh, pop.n, use_pallas=use_pallas,
+                                    interpret=True)
+    st_ref = SelectorState.create(cfg).canonical()
+    st_sh = SelectorState.create(cfg).canonical()
+    for r in range(rounds):
+        kr = jax.random.fold_in(key, 100 + r)
+        i1, c1, st_ref = select_device(kr, cfg, st_ref, pop, pred,
+                                       use_pallas=use_pallas,
+                                       interpret=True)
+        i2, c2, st_sh = step(kr, st_sh, pop, pred)
+        c1, c2 = np.asarray(c1), np.asarray(c2)
+        i1, i2 = np.asarray(i1), np.asarray(i2)
+        assert np.array_equal(c1, c2), \
+            f"{label} r{r}: chosen mask diverged\n{c1}\n{c2}"
+        assert np.array_equal(i1[c1], i2[c2]), \
+            f"{label} r{r}: indices diverged\n{i1[c1]}\n{i2[c2]}"
+        for f in ("epsilon", "pacer_T", "util_ema"):
+            a, b = float(getattr(st_ref, f)), float(getattr(st_sh, f))
+            assert a == b, f"{label} r{r}: state.{f} {a} != {b}"
+    print(f"  {label}: OK")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=None,
+                    help="virtual CPU device count (set before jax init)")
+    ap.add_argument("--n", type=int, default=999,
+                    help="population size for the main matrix (default "
+                         "intentionally not divisible by 2 or 8)")
+    ap.add_argument("--rounds", type=int, default=4)
+    args = ap.parse_args()
+
+    # validate the requested count against what jax actually initialised
+    # (make_client_mesh raises if the pre-import XLA flag didn't take)
+    mesh = make_client_mesh(args.devices)
+    s = mesh.shape["clients"]
+    print(f"devices={len(jax.devices())} mesh_shards={s}")
+    key = jax.random.PRNGKey(7)
+    em = EnergyModel()
+
+    # -- every kind x {padded, divisible} populations ----------------------
+    for n in (args.n, 1024):
+        pop = _mixed_pop(key, n)
+        pred = jnp.abs(jax.random.normal(jax.random.fold_in(key, 2),
+                                         (n,))) * 5
+        for kind in ALL_KINDS:
+            cfg = SelectorConfig(kind=kind, k=12)
+            _check_step(f"{kind} n={n}", mesh, cfg, pop, pred, key,
+                        rounds=args.rounds)
+
+    # -- tie-heavy scores --------------------------------------------------
+    n = 1024
+    pop = make_population(key, n).replace(
+        stat_util=jnp.ones((n,)), last_duration=jnp.ones((n,)),
+        battery_pct=jnp.full((n,), 80.0), explored=jnp.ones((n,), bool),
+        last_round=jnp.zeros((n,), jnp.int32))
+    pred = jnp.full((n,), 3.0)
+    for kind in ("eafl", "oort", "eafl-epj"):
+        cfg = SelectorConfig(kind=kind, k=16, epsilon0=0.0, epsilon_min=0.0)
+        _check_step(f"ties {kind}", mesh, cfg, pop, pred, key, rounds=2)
+
+    # -- an all-dropped first shard, and an all-dropped population ---------
+    n = 1024
+    pop = _mixed_pop(key, n)
+    shard_dropped = pop.replace(
+        dropped=jnp.asarray(np.arange(n) < max(n // s, 1)))
+    all_dropped = pop.replace(dropped=jnp.ones((n,), bool))
+    pred = jnp.abs(jax.random.normal(jax.random.fold_in(key, 3), (n,))) * 5
+    for kind in ALL_KINDS:
+        cfg = SelectorConfig(kind=kind, k=12)
+        _check_step(f"first-shard-dropped {kind}", mesh, cfg,
+                    shard_dropped, pred, key, rounds=2)
+        _check_step(f"all-dropped {kind}", mesh, cfg, all_dropped, pred,
+                    key, rounds=2)
+
+    # -- k larger than the per-shard client count --------------------------
+    n = 40  # n_shard = 5 on 8 devices, k = 12 > 5
+    pop = _mixed_pop(key, n)
+    pred = jnp.abs(jax.random.normal(jax.random.fold_in(key, 4), (n,))) * 5
+    for kind in ALL_KINDS:
+        cfg = SelectorConfig(kind=kind, k=12)
+        _check_step(f"k>n_shard {kind}", mesh, cfg, pop, pred, key,
+                    rounds=2)
+
+    # -- Pallas per-shard leg ---------------------------------------------
+    n = 1000
+    pop = _mixed_pop(key, n)
+    pred = jnp.abs(jax.random.normal(jax.random.fold_in(key, 5), (n,))) * 5
+    _check_step("pallas eafl", mesh, SelectorConfig(kind="eafl", k=12),
+                pop, pred, key, rounds=2, use_pallas=True)
+
+    # -- scanned trajectory ------------------------------------------------
+    n = args.n
+    pop = _mixed_pop(key, n)
+    cfg = SelectorConfig(kind="eafl", k=12)
+    kw = dict(energy_model=em, model_bytes=85e6, local_steps=400,
+              batch_size=20, rounds=6)
+    p1, s1, t1 = run_rounds_scanned(key, cfg, pop,
+                                    SelectorState.create(cfg), **kw)
+    p2, s2, t2 = run_rounds_sharded(key, cfg, pop,
+                                    SelectorState.create(cfg), mesh=mesh,
+                                    **kw)
+    for f in ("selected", "chosen", "succeeded", "total_dropped"):
+        assert np.array_equal(np.asarray(t1[f]), np.asarray(t2[f])), \
+            f"scan trajectory diverged on {f}"
+    np.testing.assert_allclose(np.asarray(t1["mean_battery"]),
+                               np.asarray(t2["mean_battery"]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(t1["round_duration"]),
+                               np.asarray(t2["round_duration"]), rtol=0)
+    np.testing.assert_allclose(np.asarray(p1.battery_pct),
+                               np.asarray(p2.battery_pct), rtol=1e-6)
+    assert np.array_equal(np.asarray(p1.dropped), np.asarray(p2.dropped))
+    assert float(s1.util_ema) == float(s2.util_ema)
+    print("  scan trajectory: OK")
+
+    print(f"parity OK ({s} shards)")
+
+
+if __name__ == "__main__":
+    main()

@@ -224,3 +224,11 @@ def cache_sharding(cfg, cache_shape: PyTree, mesh) -> PyTree:
 
 def replicated(mesh):
     return NamedSharding(mesh, P())
+
+
+# --------------------------------------------------------------- population
+def population_sharding(mesh, axis_name: str = "clients"):
+    """Sharding for the FL ``ClientPopulation`` pytree: every per-client
+    (N,) leaf splits over the ``clients`` mesh axis. Pad the population to
+    a multiple of the mesh size first (``clients.pad_population``)."""
+    return NamedSharding(mesh, P(axis_name))

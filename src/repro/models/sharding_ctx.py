@@ -25,6 +25,28 @@ AxisName = Union[str, Tuple[str, ...], None]
 _AXES = {"batch": None, "model": None, "gather_weights": False}
 
 
+def _ambient_mesh():
+    """The mesh whose axes bare-PartitionSpec constraints resolve against.
+
+    Newer jax exposes ``jax.sharding.get_abstract_mesh()`` (set via
+    ``jax.set_mesh``); the installed 0.4-era jax instead carries the mesh
+    entered with ``with mesh:`` in ``thread_resources`` — check both so the
+    launchers work on either API. Returns None when no mesh is active.
+    """
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        mesh = getter()
+        if mesh is not None and not mesh.empty:
+            return mesh
+    # fall through even when the getter exists: `with mesh:` only sets
+    # thread_resources, and the abstract mesh defaults to empty
+    from jax._src import mesh as mesh_lib
+    mesh = mesh_lib.thread_resources.env.physical_mesh
+    if mesh is not None and not mesh.empty:
+        return mesh
+    return None
+
+
 def set_axes(batch: AxisName = None, model: AxisName = None,
              gather_weights: bool = False) -> None:
     _AXES["batch"] = batch
@@ -57,8 +79,8 @@ def _gsh_bwd(res, g):
     the 256-way gradient reduction as reduce-scatter (half an all-reduce's
     bytes) instead of all-reduce + local slice (§Perf iteration 3)."""
     ndim, shape = res
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
+    mesh = _ambient_mesh()
+    if mesh is None:
         return (g,)
     total = 1
     for s in mesh.shape.values():
@@ -125,8 +147,8 @@ def constrain(x, *kinds: Optional[str]):
     """constrain(h, "batch", None, None) — kinds name logical roles."""
     if _AXES["batch"] is None and _AXES["model"] is None:
         return x
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
+    mesh = _ambient_mesh()
+    if mesh is None:
         return x
     mesh_shape = dict(mesh.shape)
     dims = []

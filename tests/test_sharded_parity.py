@@ -1,0 +1,112 @@
+"""Sharded round engine: single-device parity (in-process, 1-shard mesh)
+plus the full multi-device matrix via ``repro.launch.sharded_check``
+subprocesses (virtual device counts must be fixed before jax init, so the
+2- and 8-shard runs cannot share this process — same mechanism as
+``test_dryrun_subprocess``)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    EnergyModel,
+    SelectorConfig,
+    SelectorState,
+    make_population,
+)
+from repro.core.clients import pad_population
+from repro.core.selection import make_sharded_select_step, select_device
+from repro.federated.simulation import run_rounds_scanned, run_rounds_sharded
+from repro.launch.mesh import make_client_mesh
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ALL_KINDS = ["eafl", "oort", "eafl-epj", "random"]
+
+
+def _mixed_pop(rng, n):
+    pop = make_population(rng, n)
+    ks = jax.random.split(jax.random.fold_in(rng, 1), 3)
+    return pop.replace(
+        stat_util=jax.random.uniform(ks[0], (n,)) * 10,
+        explored=jax.random.bernoulli(ks[1], 0.6, (n,)),
+        dropped=jax.random.bernoulli(ks[2], 0.08, (n,)))
+
+
+# ---------------------------------------------------------------- in-process
+def test_pad_population_pads_inert(rng):
+    pop = _mixed_pop(rng, 13)
+    padded = pad_population(pop, 8)
+    assert padded.n == 16
+    assert not np.asarray(padded.alive)[13:].any()
+    assert np.asarray(padded.explored)[13:].all()
+    assert np.asarray(padded.dropped)[13:].all()
+    # real clients untouched
+    np.testing.assert_array_equal(np.asarray(padded.battery_pct)[:13],
+                                  np.asarray(pop.battery_pct))
+    assert pad_population(pop, 13) is pop  # already divisible: no copy
+
+
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_sharded_select_matches_device_one_shard(kind, rng):
+    """1-shard mesh: the sharded path (shard_map + merge + collectives)
+    must already be index-for-index identical to select_device."""
+    n = 200
+    pop = _mixed_pop(rng, n)
+    cfg = SelectorConfig(kind=kind, k=12)
+    pred = jnp.abs(jax.random.normal(jax.random.fold_in(rng, 3), (n,))) * 5
+    mesh = make_client_mesh(1)
+    step = make_sharded_select_step(cfg, mesh, n)
+    st_ref = SelectorState.create(cfg).canonical()
+    st_sh = SelectorState.create(cfg).canonical()
+    for r in range(4):
+        key = jax.random.fold_in(rng, 50 + r)
+        i1, c1, st_ref = select_device(key, cfg, st_ref, pop, pred,
+                                       use_pallas=False, interpret=True)
+        i2, c2, st_sh = step(key, st_sh, pop, pred)
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+        np.testing.assert_array_equal(np.asarray(i1)[np.asarray(c1)],
+                                      np.asarray(i2)[np.asarray(c2)])
+    assert float(st_ref.util_ema) == float(st_sh.util_ema)
+    assert float(st_ref.epsilon) == float(st_sh.epsilon)
+
+
+def test_sharded_scan_matches_scanned_one_shard(rng):
+    n, rounds = 300, 8
+    pop = _mixed_pop(rng, n)
+    cfg = SelectorConfig(kind="eafl", k=16)
+    em = EnergyModel()
+    kw = dict(energy_model=em, model_bytes=85e6, local_steps=400,
+              batch_size=20, rounds=rounds)
+    p1, s1, t1 = run_rounds_scanned(rng, cfg, pop,
+                                    SelectorState.create(cfg), **kw)
+    p2, s2, t2 = run_rounds_sharded(rng, cfg, pop,
+                                    SelectorState.create(cfg),
+                                    mesh=make_client_mesh(1), **kw)
+    for f in ("selected", "chosen", "succeeded", "total_dropped"):
+        np.testing.assert_array_equal(np.asarray(t1[f]), np.asarray(t2[f]))
+    np.testing.assert_allclose(np.asarray(t1["mean_battery"]),
+                               np.asarray(t2["mean_battery"]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(p1.battery_pct),
+                               np.asarray(p2.battery_pct), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(p1.dropped),
+                                  np.asarray(p2.dropped))
+    assert int(s2.round) == rounds
+
+
+# --------------------------------------------------------------- subprocess
+@pytest.mark.parametrize("devices", ["1", "2", "8"])
+def test_sharded_parity_matrix_subprocess(devices):
+    """The full matrix (all kinds, ties, dropped shards, k > n_shard,
+    padded final shard, Pallas leg, scan trajectory) under real multi-shard
+    meshes."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.sharded_check",
+         "--devices", devices, "--rounds", "3"],
+        capture_output=True, text=True, timeout=420, cwd=REPO, env=env)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert f"parity OK ({devices} shards)" in r.stdout
