@@ -6,15 +6,22 @@ round duration. The simulated device workload matches the paper (ResNet-34
 scale: 85 MB model updates, ~500 local epochs), the learned proxy is the
 small ResNet on the non-IID synthetic speech task.
 
+``--mode async`` runs the same three selectors under the FedBuff-style
+buffered-asynchronous server instead of the synchronous barrier (knobs:
+``--buffer-size``, ``--max-concurrency``, ``--staleness-power``), emitting
+the same dropout / fairness / accuracy-vs-wall-clock curves plus a
+time-to-accuracy summary, so sync and async runs are directly comparable.
+
 Run standalone for the full-scale version:
   PYTHONPATH=src python -m benchmarks.fl_comparison --rounds 150 --clients 200
+  PYTHONPATH=src python -m benchmarks.fl_comparison --mode async --buffer-size 5
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
-from typing import Dict
+from typing import Dict, Optional
 
 from repro.configs.paper_resnet_speech import reduced
 from repro.core import SelectorConfig
@@ -29,7 +36,10 @@ PAPER_SCALE = dict(
 
 
 def make_config(kind: str, rounds: int, clients: int, seed: int = 0,
-                fast: bool = False) -> FLConfig:
+                fast: bool = False,
+                buffer_size: Optional[int] = None,
+                max_concurrency: Optional[int] = None,
+                staleness_power: float = 0.5) -> FLConfig:
     scale = dict(PAPER_SCALE)
     sel = SelectorConfig(kind=kind, k=scale.pop("k"), f=scale.pop("f"),
                          pacer_t0=1500.0, pacer_delta=300.0)
@@ -49,21 +59,38 @@ def make_config(kind: str, rounds: int, clients: int, seed: int = 0,
         client_lr=scale.pop("client_lr"),
         batch_size=scale.pop("batch_size"),
         server_opt=scale.pop("server_opt"),
+        buffer_size=buffer_size,
+        max_concurrency=max_concurrency,
+        staleness_power=staleness_power,
         **scale,
     )
 
 
 def run_comparison(rounds: int, clients: int, seed: int = 0,
                    fast: bool = False, verbose: bool = False,
-                   ) -> Dict[str, FLHistory]:
+                   mode: str = "sync", **async_kw) -> Dict[str, FLHistory]:
     out = {}
     for kind in ("eafl", "oort", "random"):
-        out[kind] = run_fl(make_config(kind, rounds, clients, seed, fast),
-                           verbose=verbose)
+        cfg = make_config(kind, rounds, clients, seed, fast, **async_kw)
+        out[kind] = run_fl(cfg, verbose=verbose, mode=mode)
     return out
 
 
-def summarize(results: Dict[str, FLHistory]) -> Dict[str, Dict[str, float]]:
+def time_to_accuracy(h: FLHistory, target: float) -> Optional[float]:
+    """Wall hours until test accuracy first reaches ``target`` (None if it
+    never does) — the async-vs-sync headline metric."""
+    for wall, acc in zip(h.wall_hours, h.test_acc):
+        if acc >= target:
+            return wall
+    return None
+
+
+def summarize(results: Dict[str, FLHistory],
+              acc_target: Optional[float] = None,
+              ) -> Dict[str, Dict[str, float]]:
+    if acc_target is None:
+        # default target: 90% of the best final accuracy across selectors
+        acc_target = 0.9 * max(h.test_acc[-1] for h in results.values())
     s = {}
     for kind, h in results.items():
         n = len(h.round)
@@ -75,29 +102,50 @@ def summarize(results: Dict[str, FLHistory]) -> Dict[str, Dict[str, float]]:
             "mean_round_s": sum(h.round_duration) / n,
             "mean_participation": sum(h.participation) / n,
             "wall_hours": h.wall_hours[-1],
+            "acc_target": acc_target,
+            "hours_to_target": time_to_accuracy(h, acc_target),
         }
     return s
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--rounds", type=int, default=150)
+    ap.add_argument("--rounds", type=int, default=150,
+                    help="rounds (sync) / server aggregations (async)")
     ap.add_argument("--clients", type=int, default=200)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mode", choices=["sync", "async"], default="sync")
+    ap.add_argument("--buffer-size", type=int, default=None,
+                    help="async: aggregate every N arrivals (default k)")
+    ap.add_argument("--max-concurrency", type=int, default=None,
+                    help="async: in-flight client cap (default k)")
+    ap.add_argument("--staleness-power", type=float, default=0.5,
+                    help="async: delta damping 1/(1+staleness)**p")
+    ap.add_argument("--acc-target", type=float, default=None,
+                    help="time-to-accuracy target (default: 0.9x best final)")
+    ap.add_argument("--fast", action="store_true")
     ap.add_argument("--out", default="experiments/fl_comparison.json")
     args = ap.parse_args()
 
+    async_kw = {}
+    if args.mode == "async":
+        async_kw = dict(buffer_size=args.buffer_size,
+                        max_concurrency=args.max_concurrency,
+                        staleness_power=args.staleness_power)
     results = run_comparison(args.rounds, args.clients, args.seed,
-                             verbose=True)
-    summary = summarize(results)
+                             fast=args.fast, verbose=True, mode=args.mode,
+                             **async_kw)
+    summary = summarize(results, args.acc_target)
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
-        json.dump({"summary": summary,
+        json.dump({"mode": args.mode, "summary": summary,
                    "history": {k: h.as_dict() for k, h in results.items()},
                    "rounds": args.rounds, "clients": args.clients,
-                   "seed": args.seed}, f)
+                   "seed": args.seed, **async_kw}, f)
     for kind, s in summary.items():
-        print(f"{kind:7s} " + " ".join(f"{k}={v:.3f}" for k, v in s.items()))
+        print(f"{kind:7s} " + " ".join(
+            f"{k}={v:.3f}" if isinstance(v, float) else f"{k}={v}"
+            for k, v in s.items()))
     e, o = summary["eafl"], summary["oort"]
     if e["cum_dropouts"]:
         print(f"dropout ratio oort/eafl = "

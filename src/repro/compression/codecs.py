@@ -7,16 +7,21 @@ a beyond-paper extension in the spirit of the authors' own compression line
 decompressed (approximate) delta used for aggregation and the wire-size
 ratio fed to the energy simulation.
 
+Each codec owns its wire-ratio formula (``_RATIOS``) and stamps it on every
+``CompressionResult``; :func:`compression_ratio` reads the same formula, so
+the energy simulation can never drift from what the codec actually ships
+(asserted codec-by-codec in ``tests/test_compression.py``).
+
 Codecs:
   none    identity (ratio 1.0)
-  int8    per-tensor absmax int8 quantization (ratio ~0.25)
+  int8    per-tensor absmax int8 quantization (ratio 0.25)
   topk    magnitude top-k sparsification, k = sparsity*n
-          (ratio ~ sparsity * 2: values + indices)
+          (ratio sparsity * 2: values + indices)
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
@@ -30,8 +35,20 @@ class CompressionResult:
     wire_ratio: float      # uploaded bytes / raw float32 bytes
 
 
+# --- wire-ratio formulas: the single source of truth ------------------------
+# (per-codec keyword args mirror the codec's own signature)
+
+_RATIOS: Dict[str, Callable[..., float]] = {
+    "none": lambda: 1.0,
+    # int8 payload / float32 payload (per-tensor f32 scale amortised away)
+    "int8": lambda: 0.25,
+    # k float32 values + k int32 indices out of n float32 entries
+    "topk": lambda sparsity=0.05: sparsity * 2.0,
+}
+
+
 def _identity(delta: PyTree) -> CompressionResult:
-    return CompressionResult(delta, 1.0)
+    return CompressionResult(delta, _RATIOS["none"]())
 
 
 def _int8(delta: PyTree) -> CompressionResult:
@@ -41,7 +58,7 @@ def _int8(delta: PyTree) -> CompressionResult:
         scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
         return jnp.round(x / scale).astype(jnp.int8).astype(x.dtype) * scale
 
-    return CompressionResult(jax.tree.map(q, delta), 0.25)
+    return CompressionResult(jax.tree.map(q, delta), _RATIOS["int8"]())
 
 
 def _topk(delta: PyTree, sparsity: float = 0.05) -> CompressionResult:
@@ -53,22 +70,31 @@ def _topk(delta: PyTree, sparsity: float = 0.05) -> CompressionResult:
         thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
         return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
 
-    # wire: k values (4B) + k int32 indices (4B) per float32 tensor
-    return CompressionResult(jax.tree.map(s, delta), sparsity * 2.0)
+    return CompressionResult(jax.tree.map(s, delta),
+                             _RATIOS["topk"](sparsity=sparsity))
 
 
-CODECS: Dict[str, Callable[[PyTree], CompressionResult]] = {
+CODECS: Dict[str, Callable[..., CompressionResult]] = {
     "none": _identity,
     "int8": _int8,
     "topk": _topk,
 }
 
 
-def compress_delta(name: str, delta: PyTree) -> CompressionResult:
+def compress_delta(name: str, delta: PyTree, **params) -> CompressionResult:
+    """Compress+decompress ``delta`` with codec ``name``.
+
+    ``params`` are codec keywords (``topk`` takes ``sparsity``); unknown
+    keywords for a codec raise a TypeError, same as calling it directly.
+    """
     if name not in CODECS:
         raise KeyError(f"unknown codec {name!r}; known: {sorted(CODECS)}")
-    return CODECS[name](delta)
+    return CODECS[name](delta, **params)
 
 
-def compression_ratio(name: str) -> float:
-    return {"none": 1.0, "int8": 0.25, "topk": 0.1}[name]
+def compression_ratio(name: str, **params) -> float:
+    """Wire ratio codec ``name`` will stamp on its results for ``params`` —
+    same formula the codec itself uses, so the two cannot disagree."""
+    if name not in _RATIOS:
+        raise KeyError(f"unknown codec {name!r}; known: {sorted(_RATIOS)}")
+    return _RATIOS[name](**params)

@@ -6,24 +6,31 @@ from repro.federated.aggregation import (
 from repro.federated.server import (
     FLConfig,
     FLHistory,
+    cap_stragglers,
     run_fl,
     run_selection_scanned,
 )
 from repro.federated.simulation import (
+    AsyncEventState,
     DeviceRoundOutcome,
     RoundOutcome,
+    make_async_round_engine,
     make_round_engine,
     predicted_round_cost_pct,
     round_cost_table,
+    run_async_scanned,
     run_rounds_scanned,
     run_rounds_sharded,
     simulate_round,
     simulate_round_device,
 )
+from repro.federated.async_server import run_fl_async
 
 __all__ = ["make_server_optimizer", "server_update", "weighted_delta",
-           "FLConfig", "FLHistory", "run_fl", "run_selection_scanned",
-           "RoundOutcome", "DeviceRoundOutcome", "make_round_engine",
+           "FLConfig", "FLHistory", "cap_stragglers", "run_fl",
+           "run_fl_async", "run_selection_scanned",
+           "RoundOutcome", "DeviceRoundOutcome", "AsyncEventState",
+           "make_async_round_engine", "make_round_engine",
            "predicted_round_cost_pct", "round_cost_table",
-           "run_rounds_scanned", "run_rounds_sharded",
+           "run_async_scanned", "run_rounds_scanned", "run_rounds_sharded",
            "simulate_round", "simulate_round_device"]

@@ -1,0 +1,212 @@
+"""FedBuff-style buffered-asynchronous FL server (the async twin of
+:func:`repro.federated.server.run_fl`).
+
+EAFL's central failure mode is the synchronous barrier: every selected
+client must finish before aggregation, so stragglers stretch
+time-to-accuracy and drained devices are abandoned at the deadline. Here
+each client trains on its own clock (the device-resident event core in
+:mod:`repro.federated.simulation`): the server aggregates whenever
+``buffer_size`` updates have arrived, damps each delta by
+``1/(1+staleness)**staleness_power`` (FedBuff, Nguyen et al. AISTATS'22),
+and immediately refills the freed concurrency slots, so slow or low-energy
+clients contribute late instead of never.
+
+Training is REAL and staleness is physical: every cohort member trains
+from the parameter version it actually downloaded (a refcounted snapshot
+ring keeps at most ``max_concurrency`` live versions), and its delta is
+applied to the *current* parameters as a damped pseudo-gradient.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SelectorState, jains_index, stat_utility
+from repro.data import label_restricted_partition, make_test_set
+from repro.federated.aggregation import (
+    make_server_optimizer,
+    server_update,
+    weighted_delta,
+)
+from repro.federated.server import (
+    FLConfig,
+    FLHistory,
+    _engine_setup,
+    _local_train_fn,
+    _recharge_step,
+    _record_test_acc,
+)
+from repro.federated.simulation import (
+    AsyncEventState,
+    make_async_round_engine,
+)
+from repro.models.resnet import init_resnet, resnet_forward
+
+
+class _SnapshotRing:
+    """Refcounted parameter versions still referenced by in-flight clients.
+
+    At most ``max_concurrency`` versions are ever live (one per in-flight
+    client in the worst case), so memory stays bounded no matter how stale
+    a straggler gets.
+    """
+
+    def __init__(self):
+        self._params: Dict[int, object] = {}
+        self._refs: Dict[int, int] = {}
+
+    def retain(self, version: int, params, count: int):
+        if count <= 0:
+            return
+        if version not in self._params:
+            self._params[version] = params
+        self._refs[version] = self._refs.get(version, 0) + count
+
+    def get(self, version: int):
+        return self._params[version]
+
+    def release(self, version: int):
+        self._refs[version] -= 1
+        if self._refs[version] == 0:
+            del self._refs[version]
+            del self._params[version]
+
+    @property
+    def live_versions(self) -> int:
+        return len(self._params)
+
+
+def run_fl_async(cfg: FLConfig, verbose: bool = False) -> FLHistory:
+    """Buffered-asynchronous FL: ``cfg.rounds`` server aggregations.
+
+    One history row per aggregation (``round_duration`` is the wall time
+    between consecutive aggregations, so ``wall_hours`` is directly
+    comparable with the sync loop's). ``cfg.buffer_size`` /
+    ``cfg.max_concurrency`` default to ``selector.k`` — the sync-parity
+    regime — and ``cfg.staleness_power`` damps stale deltas.
+    """
+    if cfg.overcommit != 1.0:
+        raise ValueError("overcommit is a synchronous-barrier knob; the "
+                         "async engine refills slots continuously instead")
+    key = jax.random.PRNGKey(cfg.seed)
+    kpop, kdata, kmodel, ktest, kloop = jax.random.split(key, 5)
+
+    data = label_restricted_partition(
+        kdata, cfg.n_clients, cfg.samples_per_client, cfg.n_classes,
+        cfg.labels_per_client, cfg.input_hw, noise=cfg.data_noise)
+    test = make_test_set(ktest, cfg.eval_samples, cfg.n_classes, cfg.input_hw,
+                         noise=cfg.data_noise)
+
+    params = init_resnet(kmodel, cfg.model)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    model_bytes = cfg.sim_model_bytes or (n_params * 4.0)
+    opt = make_server_optimizer(cfg.server_opt, cfg.server_lr)
+    opt_state = opt.init(params)
+
+    pop, sim_steps, up_bytes, energy_model = _engine_setup(cfg, kpop,
+                                                           model_bytes)
+    sel_state = SelectorState.create(cfg.selector).canonical()
+    astate = AsyncEventState.create(pop.n)
+    # per-client start params (params_axis=0): each completer trains from
+    # the version it downloaded, so staleness is real, not simulated
+    local_train = _local_train_fn(cfg.model, cfg.local_steps,
+                                  cfg.batch_size, cfg.client_lr,
+                                  cfg.fedprox_mu, cfg.compression,
+                                  cfg.compression_sparsity, params_axis=0)
+
+    init_fill, engine_step = make_async_round_engine(
+        cfg.selector, energy_model, model_bytes, sim_steps, cfg.batch_size,
+        buffer_size=cfg.buffer_size, max_concurrency=cfg.max_concurrency,
+        staleness_power=cfg.staleness_power, deadline_s=cfg.deadline_s,
+        up_bytes=up_bytes)
+    init_fill = jax.jit(init_fill)
+    engine_step = jax.jit(engine_step)
+
+    @jax.jit
+    def test_acc_fn(p):
+        logits = resnet_forward(cfg.model, p, test["x"])
+        return (jnp.argmax(logits, -1) == test["y"]).mean()
+
+    hist = FLHistory()
+    hist.init_acc = float(test_acc_fn(params))
+    cum_drop = 0
+    last_loss = float("nan")
+
+    # ---- prime the concurrency slots (server version 0) -----------------
+    kloop, kfill = jax.random.split(kloop)
+    snapshots = _SnapshotRing()
+    sel_state, astate, idx0, chosen0 = init_fill(kfill, pop, sel_state,
+                                                 astate)
+    snapshots.retain(0, params, int(np.asarray(chosen0).sum()))
+
+    for agg in range(1, cfg.rounds + 1):
+        kloop, kstep, ktrain = jax.random.split(kloop, 3)
+        pop, sel_state, astate, flush, (ridx, rchosen) = engine_step(
+            kstep, pop, sel_state, astate, jnp.bool_(True))
+
+        comp_chosen = np.asarray(flush["comp_chosen"])
+        completed = np.asarray(flush["completed"])[comp_chosen]
+        succeeded = np.asarray(flush["succeeded"])[comp_chosen]
+        staleness = np.asarray(flush["staleness"])[comp_chosen]
+        agg_w = np.asarray(flush["agg_weight"])[comp_chosen]
+        cum_drop += int(flush["new_dropouts"])
+        # server version when this batch flushed (the engine bumps the
+        # version only on non-empty flushes, so don't assume it equals agg-1)
+        version_now = int(astate.server_version)
+        version_before = version_now - (1 if len(completed) else 0)
+
+        pop = _recharge_step(cfg, pop, kloop, float(flush["round_duration"]))
+
+        succ = completed[succeeded]
+        if len(succ) > 0:
+            starts = (version_before - staleness[succeeded]).tolist()
+            start_params = jax.tree.map(
+                lambda *leaves: jnp.stack(leaves),
+                *[snapshots.get(int(v)) for v in starts])
+            xs = data["x"][succ]
+            ys = data["y"][succ]
+            keys = jax.random.split(ktrain, len(succ))
+            deltas, per_sample, mean_losses = local_train(start_params, xs,
+                                                          ys, keys)
+            # FedBuff aggregation: staleness-damped, sample-weighted mean of
+            # the buffered deltas applied to the CURRENT params
+            weights = (np.asarray(pop.n_samples)[succ].astype(np.float32)
+                       * agg_w[succeeded])
+            agg_delta = weighted_delta(deltas, jnp.asarray(weights))
+            params, opt_state = server_update(params, agg_delta, opt,
+                                              opt_state)
+            su = stat_utility(per_sample, jnp.asarray(weights))
+            pop = pop.replace(
+                stat_util=pop.stat_util.at[jnp.asarray(succ)].set(su))
+            last_loss = float(mean_losses.mean())
+        for v in staleness:
+            snapshots.release(version_before - int(v))
+
+        # refilled clients download the (possibly just bumped) live version
+        n_refilled = int(np.asarray(rchosen).sum())
+        snapshots.retain(version_now, params, n_refilled)
+
+        hist.round.append(agg)
+        hist.wall_hours.append(float(astate.server_clock) / 3600.0)
+        hist.round_duration.append(float(flush["round_duration"]))
+        hist.cum_dropouts.append(cum_drop)
+        hist.fairness.append(float(jains_index(pop.times_selected)))
+        hist.participation.append(float(succeeded.mean())
+                                  if len(succeeded) else 0.0)
+        hist.mean_battery.append(float(pop.battery_pct.mean()))
+        hist.train_loss.append(last_loss)
+        _record_test_acc(hist, cfg, agg, params, test_acc_fn)
+        if verbose and agg % 10 == 0:
+            print(f"[{cfg.selector.kind}/async] agg={agg} "
+                  f"acc={hist.test_acc[-1]:.3f} loss={last_loss:.3f} "
+                  f"drop={cum_drop} fair={hist.fairness[-1]:.3f} "
+                  f"wall={hist.wall_hours[-1]:.2f}h "
+                  f"stale_max={int(staleness.max()) if len(staleness) else 0}")
+        # population exhausted: nothing in flight and nothing refillable
+        if len(completed) == 0 and n_refilled == 0 \
+                and not bool(np.asarray(astate.in_flight).any()):
+            break
+    return hist

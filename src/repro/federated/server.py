@@ -83,24 +83,65 @@ class FLConfig:
     rejoin_pct: float = 20.0
     # --- beyond-paper: update compression (repro.compression) -----------
     # shrinks upload time => upload battery cost (Table 1), at the price of
-    # a lossy delta. none | int8 | topk
+    # a lossy delta. none | int8 | topk; `compression_sparsity` is topk's
+    # kept fraction and flows into BOTH the codec and the wire-ratio the
+    # energy simulation charges (single source of truth in repro.compression)
     compression: str = "none"
+    compression_sparsity: float = 0.05
     # --- beyond-paper: FedProx proximal term on client SGD --------------
     fedprox_mu: float = 0.0
     # --- beyond-paper: over-provisioning (Oort/FedScale style) ----------
     # select ceil(overcommit*K) clients, aggregate only the fastest K
     # successful ones; stragglers beyond K are abandoned (still pay energy)
     overcommit: float = 1.0
+    # --- async (FedBuff-style) round engine knobs -----------------------
+    # run_fl(mode="async") / run_async_scanned: each client completes at
+    # its own event-clock time; the server aggregates every `buffer_size`
+    # arrivals with 1/(1+staleness)**staleness_power damping and refills
+    # freed concurrency slots from the selector. None -> selector.k (the
+    # sync-parity limit; with staleness_power=0.0 the async engine then
+    # reproduces the synchronous trajectory exactly).
+    buffer_size: Optional[int] = None
+    max_concurrency: Optional[int] = None
+    staleness_power: float = 0.5
 
 
 def replace_selector_k(sel: SelectorConfig, k: int) -> SelectorConfig:
     return dataclasses.replace(sel, k=k)
 
 
+def cap_stragglers(outcome, k: int):
+    """Over-provisioning cap: keep only the fastest ``k`` *successful*
+    clients for aggregation; stragglers beyond ``k`` are abandoned.
+
+    Returns a NEW outcome (never mutates): only ``succeeded`` shrinks.
+    Dropout and energy accounting are pre-cap by construction — abandoned
+    stragglers already paid their round energy and any battery deaths were
+    already counted, so ``new_dropouts`` / ``energy_spent_pct`` /
+    ``durations`` pass through untouched.
+    """
+    order = np.argsort(outcome.durations)
+    keep = [i for i in order if outcome.succeeded[i]][:k]
+    mask = np.zeros_like(outcome.succeeded)
+    mask[keep] = True
+    return dataclasses.replace(outcome, succeeded=outcome.succeeded & mask)
+
+
 def _local_train_fn(model_cfg, local_steps: int, batch_size: int, lr: float,
-                    fedprox_mu: float = 0.0, compression: str = "none"):
-    """Builds the jitted, client-vmapped local training function."""
+                    fedprox_mu: float = 0.0, compression: str = "none",
+                    compression_sparsity: float = 0.05,
+                    params_axis: Optional[int] = None):
+    """Builds the jitted, client-vmapped local training function.
+
+    ``params_axis=None`` broadcasts one global parameter pytree to the whole
+    cohort (the sync server). ``params_axis=0`` gives every client its own
+    stacked start parameters — the async server trains each completer from
+    the (possibly stale) model version it actually downloaded.
+    """
     from repro.compression import compress_delta
+
+    codec_params = ({"sparsity": compression_sparsity}
+                    if compression == "topk" else {})
 
     def one_client(params, x, y, key):
         m = x.shape[0]
@@ -127,13 +168,14 @@ def _local_train_fn(model_cfg, local_steps: int, batch_size: int, lr: float,
         new_params, losses = jax.lax.scan(sgd_step, params, keys)
         delta = jax.tree.map(lambda a, b: a - b, new_params, params)
         if compression != "none":
-            delta = compress_delta(compression, delta).delta
+            delta = compress_delta(compression, delta, **codec_params).delta
         # post-training per-sample losses on the local data -> Oort stat util
         _, per_sample = resnet_loss(model_cfg, new_params, {"x": x, "y": y})
         return delta, per_sample, losses.mean()
 
     def cohort(params, xs, ys, keys):
-        return jax.vmap(one_client, in_axes=(None, 0, 0, 0))(params, xs, ys, keys)
+        return jax.vmap(one_client, in_axes=(params_axis, 0, 0, 0))(
+            params, xs, ys, keys)
 
     return jax.jit(cohort)
 
@@ -149,9 +191,41 @@ class FLHistory:
     fairness: List[float] = field(default_factory=list)
     participation: List[float] = field(default_factory=list)
     mean_battery: List[float] = field(default_factory=list)
+    # accuracy of the untrained model, evaluated before round 1 — the pad
+    # value for pre-first-eval rounds (never a fake 0.0)
+    init_acc: float = float("nan")
 
-    def as_dict(self) -> Dict[str, list]:
-        return {k: list(v) for k, v in self.__dict__.items()}
+    def as_dict(self) -> Dict[str, Any]:
+        return {k: (list(v) if isinstance(v, list) else v)
+                for k, v in self.__dict__.items()}
+
+
+def _recharge_step(cfg: FLConfig, pop: ClientPopulation, kloop,
+                   duration_s: float) -> ClientPopulation:
+    """Beyond-paper recharging: a random ``plugged_frac`` of devices gains
+    charge over the round's wall time; recovered dropouts rejoin. Shared by
+    the sync and async server loops."""
+    if cfg.recharge_pct_per_hour <= 0.0:
+        return pop
+    kplug = jax.random.fold_in(kloop, 7)
+    plugged = jax.random.bernoulli(kplug, cfg.plugged_frac,
+                                   (cfg.n_clients,))
+    gain = cfg.recharge_pct_per_hour * duration_s / 3600.0
+    battery = jnp.clip(pop.battery_pct + plugged * gain, 0.0, 100.0)
+    rejoin = pop.dropped & (battery >= cfg.rejoin_pct)
+    return pop.replace(battery_pct=battery, dropped=pop.dropped & ~rejoin)
+
+
+def _record_test_acc(hist: FLHistory, cfg: FLConfig, rnd: int, params,
+                     test_acc_fn) -> None:
+    """Eval every ``eval_every`` rounds (and on the last); other rounds pad
+    with the last real evaluation — the untrained model's ``init_acc``
+    before the first one, never a fake 0.0. Shared by both server loops."""
+    if rnd % cfg.eval_every == 0 or rnd == cfg.rounds:
+        hist.test_acc.append(float(test_acc_fn(params)))
+    else:
+        hist.test_acc.append(hist.test_acc[-1] if hist.test_acc
+                             else hist.init_acc)
 
 
 def _engine_setup(cfg: FLConfig, kpop, model_bytes: float):
@@ -165,12 +239,26 @@ def _engine_setup(cfg: FLConfig, kpop, model_bytes: float):
                           init_battery_high=cfg.init_battery_high,
                           samples_per_client=cfg.samples_per_client)
     sim_steps = cfg.sim_local_steps or cfg.local_steps
-    up_bytes = model_bytes * compression_ratio(cfg.compression)
+    codec_params = ({"sparsity": cfg.compression_sparsity}
+                    if cfg.compression == "topk" else {})
+    up_bytes = model_bytes * compression_ratio(cfg.compression,
+                                               **codec_params)
     energy_model = EnergyModel(busy_fraction=cfg.idle_busy_fraction)
     return pop, sim_steps, up_bytes, energy_model
 
 
-def run_fl(cfg: FLConfig, verbose: bool = False) -> FLHistory:
+def run_fl(cfg: FLConfig, verbose: bool = False,
+           mode: str = "sync") -> FLHistory:
+    """Run the full FL experiment. ``mode="sync"`` is the paper's
+    synchronous round loop; ``mode="async"`` dispatches to the FedBuff-style
+    buffered-asynchronous server (:mod:`repro.federated.async_server`) with
+    ``cfg.buffer_size`` / ``cfg.max_concurrency`` / ``cfg.staleness_power``.
+    """
+    if mode == "async":
+        from repro.federated.async_server import run_fl_async
+        return run_fl_async(cfg, verbose=verbose)
+    if mode != "sync":
+        raise ValueError(f"unknown mode {mode!r}; expected 'sync' or 'async'")
     key = jax.random.PRNGKey(cfg.seed)
     kpop, kdata, kmodel, ktest, kloop = jax.random.split(key, 5)
 
@@ -191,7 +279,8 @@ def run_fl(cfg: FLConfig, verbose: bool = False) -> FLHistory:
     sel_state = SelectorState.create(cfg.selector)
     local_train = _local_train_fn(cfg.model, cfg.local_steps,
                                   cfg.batch_size, cfg.client_lr,
-                                  cfg.fedprox_mu, cfg.compression)
+                                  cfg.fedprox_mu, cfg.compression,
+                                  cfg.compression_sparsity)
 
     @jax.jit
     def test_acc_fn(p):
@@ -199,6 +288,9 @@ def run_fl(cfg: FLConfig, verbose: bool = False) -> FLHistory:
         return (jnp.argmax(logits, -1) == test["y"]).mean()
 
     hist = FLHistory()
+    # evaluate the untrained model once so pre-first-eval rounds report a
+    # real accuracy instead of a fake 0.0 (plots / time-to-accuracy curves)
+    hist.init_acc = float(test_acc_fn(params))
     wall = 0.0
     cum_drop = 0
     last_loss = float("nan")
@@ -223,22 +315,9 @@ def run_fl(cfg: FLConfig, verbose: bool = False) -> FLHistory:
             # K are abandoned — they still paid the energy); the outcome is
             # replaced, not mutated: the pre-cap `succeeded` already fed the
             # dropout accounting above
-            order = np.argsort(outcome.durations)
-            keep = [i for i in order if outcome.succeeded[i]][:cfg.selector.k]
-            mask = np.zeros_like(outcome.succeeded)
-            mask[keep] = True
-            outcome = dataclasses.replace(
-                outcome, succeeded=outcome.succeeded & mask)
+            outcome = cap_stragglers(outcome, cfg.selector.k)
 
-        if cfg.recharge_pct_per_hour > 0.0:
-            kplug = jax.random.fold_in(kloop, 7)
-            plugged = jax.random.bernoulli(kplug, cfg.plugged_frac,
-                                           (cfg.n_clients,))
-            gain = cfg.recharge_pct_per_hour * outcome.round_duration / 3600.0
-            battery = jnp.clip(pop.battery_pct + plugged * gain, 0.0, 100.0)
-            rejoin = pop.dropped & (battery >= cfg.rejoin_pct)
-            pop = pop.replace(battery_pct=battery,
-                              dropped=pop.dropped & ~rejoin)
+        pop = _recharge_step(cfg, pop, kloop, outcome.round_duration)
 
         succ = outcome.selected[outcome.succeeded]
         if len(succ) > 0:
@@ -265,10 +344,7 @@ def run_fl(cfg: FLConfig, verbose: bool = False) -> FLHistory:
         hist.participation.append(float(outcome.succeeded.mean()))
         hist.mean_battery.append(float(pop.battery_pct.mean()))
         hist.train_loss.append(last_loss)
-        if rnd % cfg.eval_every == 0 or rnd == cfg.rounds:
-            hist.test_acc.append(float(test_acc_fn(params)))
-        else:
-            hist.test_acc.append(hist.test_acc[-1] if hist.test_acc else 0.0)
+        _record_test_acc(hist, cfg, rnd, params, test_acc_fn)
         if verbose and rnd % 10 == 0:
             print(f"[{cfg.selector.kind}] r={rnd} acc={hist.test_acc[-1]:.3f} "
                   f"loss={last_loss:.3f} drop={cum_drop} "

@@ -103,6 +103,7 @@ def simulate_round_device(pop: ClientPopulation, sel_mask: jnp.ndarray,
                           rnd, energy_model: EnergyModel,
                           deadline_s: Optional[float] = None,
                           axis_name: Optional[str] = None,
+                          busy_mask: Optional[jnp.ndarray] = None,
                           ) -> Tuple[ClientPopulation, DeviceRoundOutcome]:
     """Pure traced round state update over a (N,) selection mask.
 
@@ -114,24 +115,36 @@ def simulate_round_device(pop: ClientPopulation, sel_mask: jnp.ndarray,
     """
     battery_after = pop.battery_pct - jnp.where(sel_mask, cost, 0.0)
     ran_out = sel_mask & (battery_after <= 0.0)
+    # NOTE: `is not None`, not truthiness — deadline_s=0.0 is a real (if
+    # degenerate) deadline that nobody can meet, not "no deadline".
     missed_deadline = (sel_mask & (t_total > deadline_s)
-                       if deadline_s else jnp.zeros_like(sel_mask))
+                       if deadline_s is not None
+                       else jnp.zeros_like(sel_mask))
     succeeded = sel_mask & ~ran_out & ~missed_deadline
 
     # round wall time: slowest successful participant (or deadline)
     any_sel = _aany(sel_mask, axis_name)
     max_succ = _amax(jnp.where(succeeded, t_total, -jnp.inf), axis_name)
     max_sel = _amax(jnp.where(sel_mask, t_total, -jnp.inf), axis_name)
-    fallback = jnp.float32(deadline_s) if deadline_s else max_sel
+    fallback = (jnp.float32(deadline_s) if deadline_s is not None
+                else max_sel)
     duration = jnp.where(_aany(succeeded, axis_name), max_succ, fallback)
-    if deadline_s:
+    if deadline_s is not None:
         duration = jnp.minimum(duration, jnp.float32(deadline_s))
     duration = jnp.where(any_sel, duration, 0.0)
 
-    # unselected (and dropped-out mid-round) devices drain at idle/busy rate
+    # unselected (and dropped-out mid-round) devices drain at idle/busy
+    # rate; `busy_mask` marks clients that are mid-computation for the whole
+    # window (the async engine's still-in-flight clients) — they pay their
+    # full round cost at completion instead of idling here
     idle_cost = energy_model.idle_cost_pct(pop.category, duration)
+    if busy_mask is None:
+        idle = pop.battery_pct - idle_cost
+    else:
+        idle = jnp.where(busy_mask, pop.battery_pct,
+                         pop.battery_pct - idle_cost)
     battery_new = jnp.clip(
-        jnp.where(sel_mask, battery_after, pop.battery_pct - idle_cost),
+        jnp.where(sel_mask, battery_after, idle),
         0.0, 100.0)
 
     was_dropped = pop.dropped
@@ -397,6 +410,322 @@ def round_cost_table(pop: ClientPopulation, energy_model: EnergyModel,
     if sharding is not None:
         return jax.jit(fn, out_shardings=(sharding, sharding))(pop)
     return jax.jit(fn)(pop)
+
+
+# ------------------------------------------------------------------- async
+# FedBuff-style buffered-asynchronous engine (Nguyen et al., AISTATS'22;
+# the ROADMAP's async open item). Every selected client finishes at its own
+# event-clock time `t_start + t_total(i)` instead of a synchronous barrier;
+# the server aggregates whenever `buffer_size` completions have arrived,
+# damping each delta by 1/(1+staleness)**staleness_power, and immediately
+# refills the freed concurrency slots from the same selector kinds the sync
+# engine uses. One scan step == one server aggregation:
+#
+#   flush:  pop the `buffer_size` earliest completions off the per-client
+#           event clock, debit battery / dropouts via the SAME fused
+#           simulate_round_device core (arrival offsets play the role of
+#           round times; still-in-flight clients are exempt from the idle
+#           drain), advance the server clock to the last arrival, bump the
+#           server version;
+#   refill: select `buffer_size` replacements (in-flight clients are masked
+#           out of the candidate set) and start their event clocks at the
+#           new server time.
+#
+# In the limit buffer_size == max_concurrency == k with staleness_power=0
+# every flush completes exactly the cohort the previous refill started, so
+# the engine reproduces run_rounds_scanned's selection/battery/dropout
+# trajectory (tested in tests/test_async_engine.py).
+
+
+class AsyncEventState(NamedTuple):
+    """Device-resident event bookkeeping for the buffered-async engine.
+
+    ``t_done`` holds each in-flight client's *remaining* seconds measured
+    from the last aggregation point (+inf when idle), not an absolute
+    clock: offsets are what every consumer needs (flush ordering, wall
+    advance, deadline, last_duration), and keeping them relative avoids the
+    ``(clock + t) - clock != t`` float drift an absolute event clock would
+    leak into the sync-parity limit. Each flush advances ``server_clock``
+    by the aggregation's wall time and re-bases the survivors' offsets.
+    """
+
+    t_done: jnp.ndarray          # (N,) f32 remaining seconds; +inf when idle
+    start_version: jnp.ndarray   # (N,) i32 server version when started
+    server_clock: jnp.ndarray    # f32 scalar, absolute seconds
+    server_version: jnp.ndarray  # i32 scalar, aggregations so far
+
+    @classmethod
+    def create(cls, n: int) -> "AsyncEventState":
+        return cls(t_done=jnp.full((n,), jnp.inf, jnp.float32),
+                   start_version=jnp.zeros((n,), jnp.int32),
+                   server_clock=jnp.float32(0.0),
+                   server_version=jnp.int32(0))
+
+    @property
+    def in_flight(self) -> jnp.ndarray:
+        return jnp.isfinite(self.t_done)
+
+
+def _start_clients(astate: AsyncEventState, idx, chosen,
+                   t_total) -> AsyncEventState:
+    """Arm the event clock for the chosen slots (idx into the population).
+    Started clients launch at the current aggregation point, so their
+    remaining time is exactly their round time."""
+    n = astate.t_done.shape[0]
+    tgt = jnp.where(chosen, idx, n)
+    t_done = astate.t_done.at[tgt].set(t_total[idx], mode="drop")
+    start_v = astate.start_version.at[tgt].set(astate.server_version,
+                                               mode="drop")
+    return astate._replace(t_done=t_done, start_version=start_v)
+
+
+def make_async_round_engine(sel_cfg: SelectorConfig,
+                            energy_model: EnergyModel,
+                            model_bytes: float, local_steps: int,
+                            batch_size: int,
+                            buffer_size: Optional[int] = None,
+                            max_concurrency: Optional[int] = None,
+                            staleness_power: float = 0.5,
+                            deadline_s: Optional[float] = None,
+                            up_bytes: Optional[float] = None,
+                            use_pallas: bool = False,
+                            interpret: bool = False):
+    """Traced FedBuff event engine: returns ``(init_fill, step)``.
+
+    ``init_fill(key, pop, sel_state, astate)`` primes ``max_concurrency``
+    concurrency slots (no battery is debited — debits happen at completion)
+    and returns ``(sel_state, astate, idx, chosen)``.
+
+    ``step(key, pop, sel_state, astate, do_refill)`` performs one
+    flush-then-refill event step and returns ``(pop, sel_state, astate,
+    flush, refill)`` where ``flush`` is a dict with the completion batch
+    (``completed``/``comp_chosen``/``succeeded``/``staleness``/
+    ``agg_weight``/``round_duration``/``new_dropouts``/
+    ``energy_spent_pct``) and ``refill`` is ``(idx, chosen)`` for the
+    freshly started clients. ``do_refill=False`` flushes without starting
+    (or advancing selector state for) new clients — the final step of a
+    fixed-length run.
+
+    ``deadline_s`` is a *reporting* deadline: an arrival more than
+    ``deadline_s`` seconds after the previous aggregation is abandoned
+    (it still pays its round energy), mirroring the sync engine's
+    per-round deadline semantics.
+    """
+    import dataclasses as _dc
+
+    buffer_size = sel_cfg.k if buffer_size is None else int(buffer_size)
+    max_concurrency = (sel_cfg.k if max_concurrency is None
+                       else int(max_concurrency))
+    if buffer_size < 1:
+        raise ValueError("buffer_size must be >= 1")
+    if max_concurrency < buffer_size:
+        raise ValueError("max_concurrency must be >= buffer_size "
+                         f"({max_concurrency} < {buffer_size})")
+    fill_cfg = _dc.replace(sel_cfg, k=max_concurrency)
+    refill_cfg = _dc.replace(sel_cfg, k=buffer_size)
+
+    def _select(key, cfg, sel_state, pop, cost, astate):
+        # in-flight clients must not be re-selected: mask them out of the
+        # candidate set through the `dropped` channel (selection-only copy)
+        sel_pop = pop.replace(dropped=pop.dropped | astate.in_flight)
+        return _device_select(key, cfg, sel_state, sel_pop, cost,
+                              use_pallas, interpret)
+
+    def init_fill(key, pop: ClientPopulation, sel_state: SelectorState,
+                  astate: AsyncEventState):
+        t_total, cost = _round_cost(pop, energy_model, model_bytes,
+                                    local_steps, batch_size, up_bytes)
+        idx, chosen, sel_state = _select(key, fill_cfg, sel_state, pop,
+                                         cost, astate)
+        astate = _start_clients(astate, idx, chosen, t_total)
+        return sel_state, astate, idx, chosen
+
+    def step(key, pop: ClientPopulation, sel_state: SelectorState,
+             astate: AsyncEventState, do_refill):
+        n = pop.n
+        t_total, cost = _round_cost(pop, energy_model, model_bytes,
+                                    local_steps, batch_size, up_bytes)
+
+        # ---- flush: the buffer_size earliest arrivals ------------------
+        in_flight = astate.in_flight
+        n_if = jnp.sum(in_flight).astype(jnp.int32)
+        _, cidx = jax.lax.top_k(jnp.where(in_flight, -astate.t_done,
+                                          -jnp.inf), buffer_size)
+        cidx = cidx.astype(jnp.int32)
+        comp_chosen = jnp.arange(buffer_size) < jnp.minimum(buffer_size,
+                                                            n_if)
+        comp_mask = jnp.zeros((n,), bool).at[
+            jnp.where(comp_chosen, cidx, n)].set(True, mode="drop")
+
+        # remaining-time offsets from the previous aggregation point play
+        # the role of the sync engine's per-round times: the slowest
+        # successful arrival advances the wall clock, the deadline abandons
+        # late arrivals, and last_duration records the observed offset
+        busy = in_flight & ~comp_mask
+        rnd = astate.server_version + 1
+        pop, dev = simulate_round_device(pop, comp_mask, astate.t_done,
+                                         cost, rnd, energy_model,
+                                         deadline_s, busy_mask=busy)
+
+        staleness = jnp.maximum(
+            astate.server_version - astate.start_version[cidx], 0)
+        succeeded = dev.succeeded[cidx] & comp_chosen
+        agg_weight = jnp.where(
+            succeeded,
+            (1.0 + staleness.astype(jnp.float32)) ** (-staleness_power),
+            0.0)
+
+        # re-base survivors to the new aggregation point. Clamp at 0: when
+        # a whole flush fails (battery deaths) under a loose deadline_s the
+        # duration falls back to the deadline, which can overshoot a busy
+        # survivor's remaining time — the server outwaited it, so it
+        # arrives at offset 0 next flush (never negative, which would run
+        # the clock backwards and turn idle drain into a battery credit).
+        # inf - duration stays inf for idle slots.
+        any_comp = n_if > 0
+        astate = astate._replace(
+            t_done=jnp.where(comp_mask, jnp.inf,
+                             jnp.maximum(astate.t_done
+                                         - dev.round_duration, 0.0)),
+            server_clock=astate.server_clock + dev.round_duration,
+            server_version=astate.server_version
+            + any_comp.astype(jnp.int32))
+
+        flush = {
+            "completed": cidx,
+            "comp_chosen": comp_chosen,
+            "succeeded": succeeded,
+            "staleness": jnp.where(comp_chosen, staleness, 0),
+            "agg_weight": agg_weight,
+            "round_duration": dev.round_duration,
+            "new_dropouts": dev.new_dropouts,
+            "energy_spent_pct": dev.energy_spent_pct,
+        }
+
+        # ---- refill the freed slots ------------------------------------
+        ridx, rchosen, new_sel_state = _select(key, refill_cfg, sel_state,
+                                               pop, cost, astate)
+        rchosen = rchosen & do_refill
+        sel_state = jax.tree.map(lambda new, old: jnp.where(do_refill, new,
+                                                            old),
+                                 new_sel_state, sel_state.canonical())
+        astate = _start_clients(astate, ridx, rchosen, t_total)
+        return pop, sel_state, astate, flush, (ridx, rchosen)
+
+    return init_fill, step
+
+
+@functools.lru_cache(maxsize=32)
+def _async_scanned_runner(sel_cfg: SelectorConfig, energy_model: EnergyModel,
+                          model_bytes: float, local_steps: int,
+                          batch_size: int, buffer_size: Optional[int],
+                          max_concurrency: Optional[int],
+                          staleness_power: float,
+                          deadline_s: Optional[float],
+                          up_bytes: Optional[float], rounds: int,
+                          use_pallas: bool, interpret: bool):
+    """Cached jitted R-aggregation async scan (event-stepped twin of
+    :func:`_scanned_runner`)."""
+    init_fill, step = make_async_round_engine(
+        sel_cfg, energy_model, model_bytes, local_steps, batch_size,
+        buffer_size, max_concurrency, staleness_power, deadline_s,
+        up_bytes, use_pallas, interpret)
+
+    def scan_step(carry, xs):
+        pop, st, astate = carry
+        pop, st, astate, flush, (ridx, rchosen) = step(
+            xs["key"], pop, st, astate, xs["refill"])
+        out = {
+            **flush,
+            "selected": ridx,
+            "chosen": rchosen,
+            "server_clock": astate.server_clock,
+            "n_inflight": jnp.sum(astate.in_flight).astype(jnp.int32),
+            "mean_battery": jnp.mean(pop.battery_pct),
+            "total_dropped": jnp.sum(pop.dropped).astype(jnp.int32),
+        }
+        return (pop, st, astate), out
+
+    @jax.jit
+    def run(key, pop, st):
+        # the sync engine draws selection keys as split(key, rounds)[r] for
+        # round r — reuse the exact same stream (keys[0] primes the pipe,
+        # keys[r] refills after flush r) so the parity limit reproduces the
+        # sync selection trajectory key-for-key
+        keys = jax.random.split(key, rounds)
+        astate = AsyncEventState.create(pop.n)
+        st, astate, idx0, chosen0 = init_fill(keys[0], pop, st, astate)
+        xs = {
+            "key": jnp.concatenate([keys[1:], keys[-1:]]),
+            # the last flush refills nothing: a fixed-length run is over,
+            # and skipping the call keeps the selector-state trajectory
+            # identical to `rounds` synchronous selections
+            "refill": jnp.arange(rounds) < rounds - 1,
+        }
+        (pop, st, astate), traj = jax.lax.scan(
+            scan_step, (pop, st, astate), xs)
+        # selection trajectory aligned with the sync engine: row r is the
+        # cohort *started* for aggregation r+1 (initial fill + refills).
+        # The fill row is truncated to the refill width; the full
+        # (max_concurrency,) fill is also returned for replay/debugging.
+        traj["fill_selected"] = idx0
+        traj["fill_chosen"] = chosen0
+        traj["selected"] = jnp.concatenate([idx0[None, :buffer_size],
+                                            traj["selected"][:-1]])
+        traj["chosen"] = jnp.concatenate([chosen0[None, :buffer_size],
+                                          traj["chosen"][:-1]])
+        return (pop, st, astate), traj
+
+    return run
+
+
+def run_async_scanned(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
+                      sel_state: SelectorState, energy_model: EnergyModel,
+                      model_bytes: float, local_steps: int, batch_size: int,
+                      rounds: int,
+                      buffer_size: Optional[int] = None,
+                      max_concurrency: Optional[int] = None,
+                      staleness_power: float = 0.5,
+                      deadline_s: Optional[float] = None,
+                      up_bytes: Optional[float] = None,
+                      use_pallas: Optional[bool] = None,
+                      interpret: Optional[bool] = None,
+                      ) -> Tuple[ClientPopulation, SelectorState,
+                                 Dict[str, jnp.ndarray]]:
+    """FedBuff-style asynchronous twin of :func:`run_rounds_scanned`:
+    ``rounds`` server aggregations advanced inside one event-stepped
+    ``jax.lax.scan``.
+
+    The trajectory holds, per aggregation: the completion batch
+    (``completed (R,B)``, ``comp_chosen``, ``succeeded``, ``staleness``,
+    ``agg_weight`` — the 1/(1+s)**p damping factors, 0 for failed slots),
+    the refilled cohort (``selected (R,B)``/``chosen``, aligned so row r is
+    the cohort started for aggregation r+1 — in the parity limit identical
+    to the sync trajectory), wall stats (``round_duration`` — seconds
+    between consecutive aggregations, ``server_clock``), and the same
+    dropout/battery fields as the sync scan. ``n_inflight`` tracks
+    concurrency (never exceeds ``max_concurrency``).
+
+    In the parity limit ``buffer_size == max_concurrency == sel_cfg.k``
+    with ``staleness_power=0.0`` this reproduces the sync engine's
+    selection/battery/dropout trajectory within float tolerance. Note the
+    first row of ``selected``/``chosen`` is the initial fill truncated to
+    ``buffer_size`` slots — equal to the full fill in the parity limit.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    run = _async_scanned_runner(
+        sel_cfg, energy_model, float(model_bytes), int(local_steps),
+        int(batch_size),
+        None if buffer_size is None else int(buffer_size),
+        None if max_concurrency is None else int(max_concurrency),
+        float(staleness_power),
+        None if deadline_s is None else float(deadline_s),
+        None if up_bytes is None else float(up_bytes),
+        int(rounds), _auto_pallas(pop.n, use_pallas), interpret)
+    (pop, st, astate), traj = run(key, pop, sel_state.canonical())
+    traj["final_event_state"] = astate
+    return pop, st, traj
 
 
 def run_rounds_sharded(key, sel_cfg: SelectorConfig, pop: ClientPopulation,

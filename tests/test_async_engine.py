@@ -1,0 +1,214 @@
+"""FedBuff-style async round engine: sync-parity limit, staleness
+accounting, concurrency invariants, and the async training server."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_resnet_speech import reduced
+from repro.core import (
+    EnergyModel,
+    SelectorConfig,
+    SelectorState,
+    make_population,
+)
+from repro.federated import (
+    FLConfig,
+    make_async_round_engine,
+    run_async_scanned,
+    run_fl,
+    run_rounds_scanned,
+)
+
+ALL_KINDS = ["eafl", "oort", "eafl-epj", "random"]
+MB, STEPS, BS = 85e6, 400, 20
+
+
+def _pop(rng, n=200):
+    pop = make_population(rng, n, init_battery_low=15.0,
+                          init_battery_high=90.0)
+    return pop.replace(
+        stat_util=jax.random.uniform(jax.random.fold_in(rng, 1), (n,)) * 10)
+
+
+# ----------------------------------------------------------- parity limit
+@pytest.mark.parametrize("kind", ALL_KINDS)
+def test_async_parity_limit_matches_sync(kind, rng):
+    """buffer_size == max_concurrency == k with staleness weighting
+    disabled: the async engine must reproduce the sync scanned engine's
+    selection/battery/dropout trajectory — the acceptance bar."""
+    n, rounds, k = 200, 15, 10
+    em = EnergyModel()
+    cfg = SelectorConfig(kind=kind, k=k)
+    pop0 = _pop(rng, n)
+    key = jax.random.fold_in(rng, 2)
+
+    sp, ss, st = run_rounds_scanned(key, cfg, pop0, SelectorState.create(cfg),
+                                    em, MB, STEPS, BS, rounds)
+    ap, asel, at = run_async_scanned(
+        key, cfg, pop0, SelectorState.create(cfg), em, MB, STEPS, BS, rounds,
+        buffer_size=k, max_concurrency=k, staleness_power=0.0)
+
+    # selection trajectory: key-for-key, index-for-index
+    np.testing.assert_array_equal(np.asarray(st["selected"]),
+                                  np.asarray(at["selected"]))
+    np.testing.assert_array_equal(np.asarray(st["chosen"]),
+                                  np.asarray(at["chosen"]))
+    # every aggregation completes exactly the cohort the refill started
+    for r in range(rounds):
+        sel = set(np.asarray(st["selected"][r])[
+            np.asarray(st["chosen"][r])].tolist())
+        comp = set(np.asarray(at["completed"][r])[
+            np.asarray(at["comp_chosen"][r])].tolist())
+        assert sel == comp, f"round {r}"
+    np.testing.assert_allclose(np.asarray(st["round_duration"]),
+                               np.asarray(at["round_duration"]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(st["mean_battery"]),
+                               np.asarray(at["mean_battery"]),
+                               rtol=1e-6, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(st["total_dropped"]),
+                                  np.asarray(at["total_dropped"]))
+    np.testing.assert_allclose(np.asarray(sp.battery_pct),
+                               np.asarray(ap.battery_pct),
+                               rtol=1e-6, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(sp.dropped),
+                                  np.asarray(ap.dropped))
+    # synchronous completions are never stale, every success weighs 1.0
+    assert int(np.max(np.asarray(at["staleness"]))) == 0
+    succ = np.asarray(at["succeeded"])
+    np.testing.assert_allclose(np.asarray(at["agg_weight"])[succ], 1.0)
+    assert int(ss.round) == int(asel.round) == rounds
+
+
+# ------------------------------------------------------- async semantics
+def test_async_staleness_and_weights(rng):
+    """With buffer < concurrency, clients span aggregations: staleness
+    grows and damping follows 1/(1+s)**p exactly."""
+    cfg = SelectorConfig(kind="eafl", k=10)
+    pop0 = _pop(rng)
+    _, _, t = run_async_scanned(
+        jax.random.fold_in(rng, 2), cfg, pop0, SelectorState.create(cfg),
+        EnergyModel(), MB, STEPS, BS, rounds=30,
+        buffer_size=4, max_concurrency=12, staleness_power=0.5)
+    st = np.asarray(t["staleness"])
+    w = np.asarray(t["agg_weight"])
+    succ = np.asarray(t["succeeded"])
+    assert st.max() > 0, "no staleness observed with buffer < concurrency"
+    np.testing.assert_allclose(w[succ], (1.0 + st[succ]) ** -0.5, rtol=1e-6)
+    assert (w[~succ] == 0.0).all()
+
+
+def test_async_concurrency_and_wall_clock(rng):
+    cfg = SelectorConfig(kind="oort", k=8)
+    pop0 = _pop(rng)
+    _, _, t = run_async_scanned(
+        jax.random.fold_in(rng, 3), cfg, pop0, SelectorState.create(cfg),
+        EnergyModel(), MB, STEPS, BS, rounds=25,
+        buffer_size=3, max_concurrency=9)
+    assert int(np.asarray(t["n_inflight"]).max()) <= 9
+    clock = np.asarray(t["server_clock"])
+    assert (np.diff(clock) >= -1e-6).all()
+    np.testing.assert_allclose(np.diff(clock),
+                               np.asarray(t["round_duration"])[1:],
+                               rtol=1e-5, atol=1e-3)
+    # smaller buffers aggregate more often: per-flush wall time must be
+    # well under the sync round (which waits for the whole cohort)
+    assert np.asarray(t["round_duration"]).mean() > 0.0
+
+
+def test_async_never_reselects_inflight(rng):
+    """A client must not be handed a second model while still training on
+    the first: refills exclude in-flight clients."""
+    cfg = SelectorConfig(kind="random", k=6)
+    pop0 = _pop(rng, n=40)
+    _, _, t = run_async_scanned(
+        jax.random.fold_in(rng, 4), cfg, pop0, SelectorState.create(cfg),
+        EnergyModel(), MB, STEPS, BS, rounds=20,
+        buffer_size=2, max_concurrency=6)
+    R = np.asarray(t["round_duration"]).shape[0]
+    # replay the event stream: the full (max_concurrency,) initial fill,
+    # then one refill after each flush (rows 1.. of `selected`)
+    sel = np.asarray(t["selected"])
+    chosen = np.asarray(t["chosen"])
+    comp = np.asarray(t["completed"])
+    comp_chosen = np.asarray(t["comp_chosen"])
+    inflight = set(np.asarray(t["fill_selected"])[
+        np.asarray(t["fill_chosen"])].tolist())
+    for r in range(R):
+        done = set(comp[r][comp_chosen[r]].tolist())
+        assert done <= inflight, f"flush {r} completed unknown clients"
+        inflight -= done
+        if r + 1 < R:
+            new = set(sel[r + 1][chosen[r + 1]].tolist())
+            assert not (new & inflight), \
+                f"flush {r} refilled already-in-flight clients"
+            inflight |= new
+
+
+def test_async_deadline_clock_never_runs_backwards(rng):
+    """Regression: a flush whose whole batch dies of battery under a loose
+    deadline_s fell back to the full deadline as its duration, rebasing
+    busy survivors to negative offsets — later flushes then reported
+    negative durations, ran the server clock backwards, and turned the
+    idle drain into a battery credit."""
+    n = 60
+    pop = make_population(rng, n, init_battery_low=2.0,
+                          init_battery_high=40.0)
+    pop = pop.replace(stat_util=jax.random.uniform(
+        jax.random.fold_in(rng, 1), (n,)) * 10)
+    cfg = SelectorConfig(kind="eafl", k=8)
+    _, _, t = run_async_scanned(
+        jax.random.fold_in(rng, 2), cfg, pop, SelectorState.create(cfg),
+        EnergyModel(), MB, 1600, BS, rounds=20,
+        buffer_size=2, max_concurrency=8, deadline_s=1e6)
+    assert (np.asarray(t["round_duration"]) >= 0.0).all()
+    assert (np.diff(np.asarray(t["server_clock"])) >= -1e-3).all()
+    # with no recharge model, the population can only lose battery
+    mb = np.asarray(t["mean_battery"])
+    assert (np.diff(mb) <= 1e-6).all()
+
+
+def test_async_engine_validates_knobs(rng):
+    with pytest.raises(ValueError, match="max_concurrency"):
+        make_async_round_engine(SelectorConfig(kind="eafl", k=4),
+                                EnergyModel(), MB, STEPS, BS,
+                                buffer_size=8, max_concurrency=4)
+    with pytest.raises(ValueError, match="buffer_size"):
+        make_async_round_engine(SelectorConfig(kind="eafl", k=4),
+                                EnergyModel(), MB, STEPS, BS, buffer_size=0)
+
+
+# ------------------------------------------------------- training server
+def _cfg(kind="eafl", **kw):
+    base = dict(
+        selector=SelectorConfig(kind=kind, k=4),
+        n_clients=24, rounds=8, local_steps=3, batch_size=8,
+        samples_per_client=24, eval_every=4, eval_samples=70,
+        model=reduced(), input_hw=16,
+        sim_model_bytes=85e6, sim_local_steps=400)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+@pytest.mark.parametrize("kind", ["eafl", "oort", "random"])
+def test_run_fl_async_smoke(kind):
+    h = run_fl(_cfg(kind, buffer_size=2, max_concurrency=6), mode="async")
+    assert len(h.round) == 8
+    for field in (h.wall_hours, h.test_acc, h.cum_dropouts, h.fairness,
+                  h.participation, h.round_duration):
+        assert len(field) == 8
+    assert all(np.isfinite(h.test_acc))
+    assert np.isfinite(h.init_acc)
+    assert all(b >= a for a, b in zip(h.cum_dropouts, h.cum_dropouts[1:]))
+    assert all(b >= a - 1e-9 for a, b in zip(h.wall_hours, h.wall_hours[1:]))
+    assert all(0.0 <= f <= 1.0 for f in h.fairness)
+
+
+def test_run_fl_async_rejects_overcommit():
+    with pytest.raises(ValueError, match="overcommit"):
+        run_fl(_cfg(overcommit=1.5), mode="async")
+
+
+def test_run_fl_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="unknown mode"):
+        run_fl(_cfg(), mode="turbo")

@@ -4,10 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.compression import compress_delta, compression_ratio
+from repro.compression import CODECS, compress_delta, compression_ratio
 from repro.configs.paper_resnet_speech import reduced
-from repro.core import SelectorConfig
-from repro.federated import FLConfig, run_fl
+from repro.core import EnergyModel, SelectorConfig, make_population
+from repro.federated import FLConfig, cap_stragglers, run_fl, simulate_round
 
 
 @pytest.fixture
@@ -38,6 +38,33 @@ def test_topk_keeps_largest(delta):
     kept_min = np.abs(a[nz]).min()
     dropped_max = np.abs(orig[~nz]).max()
     assert kept_min >= dropped_max - 1e-7
+
+
+def test_wire_ratio_single_source_of_truth(delta):
+    """Regression: compression_ratio hardcoded a second copy of the wire
+    ratios (topk's 0.1 assumed sparsity=0.05 and drifted if a caller
+    changed it). The energy simulation's ratio must be exactly what the
+    codec stamps on its results — for EVERY codec."""
+    for name in CODECS:
+        assert compress_delta(name, delta).wire_ratio == \
+            compression_ratio(name), name
+
+
+def test_wire_ratio_tracks_sparsity(delta):
+    for sparsity in (0.01, 0.05, 0.2):
+        r = compress_delta("topk", delta, sparsity=sparsity)
+        assert r.wire_ratio == compression_ratio("topk", sparsity=sparsity)
+        assert r.wire_ratio == pytest.approx(2.0 * sparsity)
+    with pytest.raises(KeyError):
+        compression_ratio("gzip")
+
+
+def test_topk_sparsity_param_changes_kept_count(delta):
+    dense = compress_delta("topk", delta, sparsity=0.2)
+    sparse = compress_delta("topk", delta, sparsity=0.01)
+    nz_dense = int((np.asarray(dense.delta["a"]) != 0).sum())
+    nz_sparse = int((np.asarray(sparse.delta["a"]) != 0).sum())
+    assert nz_sparse < nz_dense
 
 
 def test_none_identity(delta):
@@ -78,3 +105,37 @@ def test_overcommit_caps_aggregated_cohort():
     assert len(h.round) == 6
     # participation counts successes over the over-committed set
     assert all(0.0 <= p <= 1.0 for p in h.participation)
+
+
+def test_overcommit_straggler_cap_accounting(rng):
+    """Direct accounting test for the over-provisioning cap: at most k
+    clients aggregate (the fastest successful ones), pre-cap battery
+    deaths still count as dropouts, and abandoned stragglers still paid
+    their round energy."""
+    k, n_sel = 4, 8
+    n = 32
+    pop = make_population(rng, n)
+    # clients 0-1 die mid-round (pre-cap dropouts); the rest survive
+    batt = np.full((n,), 80.0, np.float32)
+    batt[:2] = 0.01
+    pop = pop.replace(battery_pct=jnp.asarray(batt))
+    em = EnergyModel()
+    sel = np.arange(n_sel)
+    before = np.asarray(pop.battery_pct)
+    new_pop, outcome = simulate_round(pop, sel, em, 85e6, 400, 20, rnd=1)
+    assert int(outcome.succeeded.sum()) > k   # cap actually binds
+
+    capped = cap_stragglers(outcome, k)
+    # at most k clients aggregate, and they are the fastest successes
+    assert int(capped.succeeded.sum()) == k
+    agg_durs = outcome.durations[capped.succeeded]
+    abandoned = outcome.succeeded & ~capped.succeeded
+    assert agg_durs.max() <= outcome.durations[abandoned].min()
+    # pre-cap dropouts still counted (outcome is replaced, not mutated)
+    assert capped.new_dropouts == outcome.new_dropouts
+    assert int(capped.new_dropouts) >= 2
+    # abandoned stragglers (and the dead) still paid round energy
+    drain = (before - np.asarray(new_pop.battery_pct))[sel]
+    assert (drain[np.asarray(abandoned)] > 0).all()
+    assert capped.energy_spent_pct == outcome.energy_spent_pct
+    np.testing.assert_array_equal(capped.durations, outcome.durations)

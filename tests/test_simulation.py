@@ -76,6 +76,39 @@ def test_deadline_caps_round(pop):
     assert out.round_duration <= 1.0 + 1e-6
 
 
+def test_deadline_zero_is_a_deadline_not_disabled(pop):
+    """Regression: `if deadline_s:` treated 0.0 as 'no deadline', silently
+    disabling it. A zero deadline is unmeetable — everyone must fail."""
+    em = EnergyModel()
+    sel = np.arange(8)
+    new_pop, out = simulate_round(pop, sel, em, MB, 10, 20, rnd=1,
+                                  deadline_s=0.0)
+    assert not out.succeeded.any()
+    assert out.round_duration == 0.0
+    # participants still paid their round energy before being abandoned
+    drain = np.asarray(pop.battery_pct) - np.asarray(new_pop.battery_pct)
+    assert (drain[sel] > 0).all()
+
+
+def test_tight_positive_deadline_abandons_everyone(pop):
+    """A deadline below every client's round time: no successes, and the
+    round lasts exactly the deadline (the server waited that long)."""
+    em = EnergyModel()
+    sel = np.arange(8)
+    _, base = simulate_round(pop, sel, em, MB, 10, 20, rnd=1)
+    tight = float(base.durations.min()) * 0.5
+    _, out = simulate_round(pop, sel, em, MB, 10, 20, rnd=1,
+                            deadline_s=tight)
+    assert not out.succeeded.any()
+    assert out.round_duration == pytest.approx(tight)
+    # and a deadline between the fastest and slowest keeps only the fast
+    mid = float(np.median(base.durations))
+    _, out_mid = simulate_round(pop, sel, em, MB, 10, 20, rnd=1,
+                                deadline_s=mid)
+    expect = base.succeeded & (base.durations <= mid)
+    np.testing.assert_array_equal(out_mid.succeeded, expect)
+
+
 def test_participation_bookkeeping(pop):
     em = EnergyModel()
     sel = np.asarray([3, 7, 11])
