@@ -11,10 +11,13 @@ buffered-asynchronous server instead of the synchronous barrier (knobs:
 ``--buffer-size``, ``--max-concurrency``, ``--staleness-power``), emitting
 the same dropout / fairness / accuracy-vs-wall-clock curves plus a
 time-to-accuracy summary, so sync and async runs are directly comparable.
+The default ``--mode auto`` goes through the repo's unified dispatcher
+(``repro.federated.resolve_aggregation``): setting an async-only knob is
+the async opt-in, otherwise the run is synchronous.
 
 Run standalone for the full-scale version:
   PYTHONPATH=src python -m benchmarks.fl_comparison --rounds 150 --clients 200
-  PYTHONPATH=src python -m benchmarks.fl_comparison --mode async --buffer-size 5
+  PYTHONPATH=src python -m benchmarks.fl_comparison --buffer-size 5   # async
 """
 from __future__ import annotations
 
@@ -25,7 +28,7 @@ from typing import Dict, Optional
 
 from repro.configs.paper_resnet_speech import reduced
 from repro.core import SelectorConfig
-from repro.federated import FLConfig, FLHistory, run_fl
+from repro.federated import FLConfig, FLHistory, resolve_aggregation, run_fl
 
 # the paper's setup (Sec. 5): K=10, lr=0.05, B=20, f=0.25, YoGi
 PAPER_SCALE = dict(
@@ -68,7 +71,7 @@ def make_config(kind: str, rounds: int, clients: int, seed: int = 0,
 
 def run_comparison(rounds: int, clients: int, seed: int = 0,
                    fast: bool = False, verbose: bool = False,
-                   mode: str = "sync", **async_kw) -> Dict[str, FLHistory]:
+                   mode: str = "auto", **async_kw) -> Dict[str, FLHistory]:
     out = {}
     for kind in ("eafl", "oort", "random"):
         cfg = make_config(kind, rounds, clients, seed, fast, **async_kw)
@@ -114,31 +117,54 @@ def main():
                     help="rounds (sync) / server aggregations (async)")
     ap.add_argument("--clients", type=int, default=200)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--mode", choices=["sync", "async"], default="sync")
+    ap.add_argument("--mode", choices=["auto", "sync", "async"],
+                    default="auto",
+                    help="auto = async iff an async knob is set "
+                         "(the unified dispatcher's rule)")
     ap.add_argument("--buffer-size", type=int, default=None,
                     help="async: aggregate every N arrivals (default k)")
     ap.add_argument("--max-concurrency", type=int, default=None,
                     help="async: in-flight client cap (default k)")
-    ap.add_argument("--staleness-power", type=float, default=0.5,
-                    help="async: delta damping 1/(1+staleness)**p")
+    ap.add_argument("--staleness-power", type=float, default=None,
+                    help="async: delta damping 1/(1+staleness)**p "
+                         "(default 0.5; async-only, so passing it under "
+                         "--mode auto opts the run into async)")
     ap.add_argument("--acc-target", type=float, default=None,
                     help="time-to-accuracy target (default: 0.9x best final)")
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--out", default="experiments/fl_comparison.json")
     args = ap.parse_args()
 
+    # resolve once so the emitted json records what actually ran; every
+    # async-only CLI knob is an async opt-in under --mode auto (and an
+    # error under a forced --mode sync — never silently dropped)
+    if args.mode == "sync":
+        dropped = [f for f, v in (("--buffer-size", args.buffer_size),
+                                  ("--max-concurrency",
+                                   args.max_concurrency),
+                                  ("--staleness-power",
+                                   args.staleness_power))
+                   if v is not None]
+        if dropped:
+            ap.error(f"async-only knob(s) {'/'.join(dropped)} have no "
+                     f"effect with --mode sync")
+    mode = resolve_aggregation(args.mode, args.buffer_size,
+                               args.max_concurrency)
+    if args.staleness_power is not None:
+        mode = "async"
     async_kw = {}
-    if args.mode == "async":
+    if mode == "async":
         async_kw = dict(buffer_size=args.buffer_size,
                         max_concurrency=args.max_concurrency,
-                        staleness_power=args.staleness_power)
+                        staleness_power=(0.5 if args.staleness_power is None
+                                         else args.staleness_power))
     results = run_comparison(args.rounds, args.clients, args.seed,
-                             fast=args.fast, verbose=True, mode=args.mode,
+                             fast=args.fast, verbose=True, mode=mode,
                              **async_kw)
     summary = summarize(results, args.acc_target)
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
-        json.dump({"mode": args.mode, "summary": summary,
+        json.dump({"mode": mode, "summary": summary,
                    "history": {k: h.as_dict() for k, h in results.items()},
                    "rounds": args.rounds, "clients": args.clients,
                    "seed": args.seed, **async_kw}, f)

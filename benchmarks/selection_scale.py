@@ -26,7 +26,12 @@ runs in its own invocation and MERGES its rows into an existing output:
   PYTHONPATH=src python -m benchmarks.selection_scale                # 1-dev legs
   PYTHONPATH=src python -m benchmarks.selection_scale --devices 8    # sharded
 
-Writes ``BENCH_selection.json`` and prints one row per (N, leg).
+Writes ``BENCH_selection.json`` and prints one row per (N, leg). Every
+write also stamps each row with ``auto_engine`` — the engine the unified
+``repro.federated.run_rounds`` dispatcher would pick for that
+(N, device_count) — plus the cutover rule, so the engine-selection table
+in ``docs/architecture.md`` is regenerable from this file
+(``--annotate`` refreshes the stamps without re-timing anything).
 """
 from __future__ import annotations
 
@@ -48,8 +53,8 @@ from repro.core import EnergyModel, SelectorConfig, SelectorState, \
     make_population
 from repro.core.selection import _device_select, make_sharded_select_step, \
     select_host
-from repro.federated.simulation import _round_cost, \
-    predicted_round_cost_pct, round_cost_table
+from repro.federated.simulation import ENGINE_CUTOVER_N, _round_cost, \
+    predicted_round_cost_pct, resolve_engine, round_cost_table
 
 DEFAULT_SIZES = (10_000, 65_536, 262_144, 1_048_576, 4_194_304)
 # the simulated device workload (ResNet-34-class update, ~500 local epochs)
@@ -152,6 +157,23 @@ def sweep_sharded(sizes, k: int, reps: int, devices=None):
     return rows
 
 
+def _annotate_dispatch(result):
+    """Record, per row, the engine `repro.federated.run_rounds` would have
+    auto-picked for that (N, device_count) — so the docs' cutover claim is
+    regenerable from this file instead of hand-maintained. Rows measured
+    without a sharded leg resolve against device_count=1 (always the
+    scanned engine)."""
+    for row in result.get("rows", []):
+        row["auto_engine"] = resolve_engine(
+            row["n"], row.get("device_count", 1), mode="auto")
+    result["dispatch"] = {
+        "cutover_n": ENGINE_CUTOVER_N,
+        "rule": "sharded iff device_count > 1 and n >= cutover_n "
+                "(async twins follow the same placement rule)",
+    }
+    return result
+
+
 def _merge_sharded(out_path: str, sharded_rows, n_dev: int, k: int):
     """Fold sharded rows into an existing result file (matching on n/k);
     purely additive so pre-sharded readers keep working."""
@@ -191,8 +213,20 @@ def main():
                          "sharded leg and merges its rows into --out")
     ap.add_argument("--fast", action="store_true",
                     help="small sizes only (CI smoke)")
+    ap.add_argument("--annotate", action="store_true",
+                    help="no timing: re-read --out and (re)write the "
+                         "dispatcher annotations (auto_engine per row + "
+                         "the cutover rule)")
     ap.add_argument("--out", default="BENCH_selection.json")
     args = ap.parse_args()
+
+    if args.annotate:
+        with open(args.out) as f:
+            result = _annotate_dispatch(json.load(f))
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"annotated {args.out} (cutover_n={ENGINE_CUTOVER_N})")
+        return
 
     sizes = (10_000, 65_536) if args.fast else args.sizes
     if args.devices and args.devices > 1:
@@ -225,6 +259,7 @@ def main():
                                     key=lambda r: (r["n"], r.get("k") or 0))
             if "sharded" in prev:
                 result["sharded"] = prev["sharded"]
+    result = _annotate_dispatch(result)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(f"wrote {args.out}")

@@ -25,11 +25,15 @@ import numpy as np
 from repro.configs.paper_resnet_speech import reduced
 from repro.core import (EnergyModel, SelectorConfig, SelectorState,
                         make_population)
-from repro.federated import (FLConfig, run_async_scanned, run_fl,
-                             run_rounds_scanned)
+from repro.federated import FLConfig, run_fl, run_rounds
 
 
 def parity_demo(rounds: int = 10, n: int = 200, k: int = 10):
+    """Both engines through the unified `run_rounds` front door, forcing
+    one engine per leg (mode="scanned" / "async-scanned"); on a host with
+    >1 device and a fleet-sized population the same call with mode left on
+    "auto" would dispatch to the sharded twins instead — index-for-index
+    identically."""
     key = jax.random.PRNGKey(0)
     cfg = SelectorConfig(kind="eafl", k=k)
     em = EnergyModel()
@@ -38,17 +42,18 @@ def parity_demo(rounds: int = 10, n: int = 200, k: int = 10):
     pop = pop.replace(stat_util=jax.random.uniform(
         jax.random.fold_in(key, 2), (n,)) * 10)
     krun = jax.random.fold_in(key, 3)
-    _, _, sync = run_rounds_scanned(krun, cfg, pop, SelectorState.create(cfg),
-                                    em, 85e6, 400, 20, rounds)
-    _, _, asyn = run_async_scanned(krun, cfg, pop, SelectorState.create(cfg),
-                                   em, 85e6, 400, 20, rounds,
-                                   buffer_size=k, max_concurrency=k,
-                                   staleness_power=0.0)
+    _, _, sync = run_rounds(krun, cfg, pop, SelectorState.create(cfg),
+                            em, 85e6, 400, 20, rounds, mode="scanned")
+    _, _, asyn = run_rounds(krun, cfg, pop, SelectorState.create(cfg),
+                            em, 85e6, 400, 20, rounds, mode="async-scanned",
+                            buffer_size=k, max_concurrency=k,
+                            staleness_power=0.0)
     same_sel = np.array_equal(np.asarray(sync["selected"]),
                               np.asarray(asyn["selected"]))
     same_dur = np.allclose(np.asarray(sync["round_duration"]),
                            np.asarray(asyn["round_duration"]), rtol=1e-6)
-    print(f"[parity] buffer=concurrency=k, damping off -> "
+    print(f"[parity] {sync['engine']} vs {asyn['engine']} "
+          f"(buffer=concurrency=k, damping off) -> "
           f"selection identical: {same_sel}, durations match: {same_dur}")
     assert same_sel and same_dur
 
@@ -77,11 +82,12 @@ def main():
 
     parity_demo()
 
+    # run_fl's default mode="auto" resolves per config: no async knobs ->
+    # the synchronous barrier; buffer_size/max_concurrency set -> FedBuff
     h_sync = run_fl(fl_config(args.kind, args.aggregations))
     h_async = run_fl(fl_config(args.kind, args.aggregations,
                                buffer_size=args.buffer_size,
-                               max_concurrency=args.max_concurrency),
-                     mode="async")
+                               max_concurrency=args.max_concurrency))
     for name, h in (("sync", h_sync), ("async", h_async)):
         print(f"[{name:5s}] {args.aggregations} server updates in "
               f"{h.wall_hours[-1]:.2f}h wall "

@@ -1,0 +1,138 @@
+"""Docs checker: markdown link integrity + snippet smoke-runs.
+
+Three passes over the repo's markdown (README.md, ROADMAP.md, CHANGES.md,
+PAPER.md, PAPERS.md, docs/**/*.md):
+
+  1. LINKS    every intra-repo markdown link ``[text](target)`` must
+              resolve to an existing file (http/mailto/#anchor links are
+              skipped; ``#fragment`` suffixes are stripped first);
+  2. SNIPPETS every fenced ```python block in README.md and docs/ is
+              executed in a subprocess with PYTHONPATH=src — the examples
+              in the architecture guide are real code and must stay
+              runnable (a block whose info string contains ``no-run`` is
+              skipped);
+  3. PATHS    repo paths referenced by the README quickstart's ```bash
+              block (script files and ``python -m`` module targets) must
+              exist.
+
+Exits non-zero with one line per failure; prints a summary on success.
+
+  PYTHONPATH=src python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# group(1) is the full info string ("python", "bash", "python no-run", …)
+FENCE_RE = re.compile(r"^```([^\n]*)\n(.*?)^```\s*$",
+                      re.MULTILINE | re.DOTALL)
+# quickstart tokens that look like repo paths / runnable modules
+PATH_TOKEN_RE = re.compile(
+    r"(?:^|\s)((?:examples|benchmarks|scripts|src|tests|docs)/[\w./-]+)")
+MODULE_TOKEN_RE = re.compile(r"-m\s+((?:repro|benchmarks|examples)[\w.]*)")
+
+SNIPPET_TIMEOUT_S = 300
+
+
+def md_files():
+    top = [f for f in ("README.md", "ROADMAP.md", "CHANGES.md", "PAPER.md",
+                       "PAPERS.md") if os.path.exists(os.path.join(REPO, f))]
+    docs = []
+    for root, _, files in os.walk(os.path.join(REPO, "docs")):
+        docs += [os.path.relpath(os.path.join(root, f), REPO)
+                 for f in files if f.endswith(".md")]
+    return top + sorted(docs)
+
+
+def check_links(rel, text, errors):
+    base = os.path.dirname(os.path.join(REPO, rel))
+    for target in LINK_RE.findall(text):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target) or \
+                target.startswith("#"):
+            continue  # external scheme or in-page anchor
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = os.path.normpath(os.path.join(base, path))
+        if not os.path.exists(resolved):
+            errors.append(f"{rel}: broken link -> {target}")
+
+
+def run_snippets(rel, text, errors):
+    env = dict(os.environ)
+    src = os.path.join(REPO, "src")
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    n = 0
+    for m in FENCE_RE.finditer(text):
+        info, body = m.group(1).strip(), m.group(2)
+        if not info.startswith("python") or "no-run" in info.split():
+            continue
+        n += 1
+        try:
+            r = subprocess.run([sys.executable, "-"], input=body,
+                               text=True, capture_output=True,
+                               timeout=SNIPPET_TIMEOUT_S, cwd=REPO, env=env)
+        except subprocess.TimeoutExpired:
+            errors.append(f"{rel}: python snippet #{n} timed out after "
+                          f"{SNIPPET_TIMEOUT_S}s")
+            continue
+        if r.returncode != 0:
+            tail = (r.stderr or r.stdout).strip().splitlines()[-8:]
+            errors.append(f"{rel}: python snippet #{n} failed:\n    "
+                          + "\n    ".join(tail))
+    return n
+
+
+def check_bash_paths(rel, text, errors):
+    n = 0
+    for m in FENCE_RE.finditer(text):
+        if not m.group(1).strip().startswith("bash"):
+            continue
+        for line in m.group(2).splitlines():
+            for tok in PATH_TOKEN_RE.findall(line):
+                n += 1
+                if not os.path.exists(os.path.join(REPO, tok)):
+                    errors.append(f"{rel}: quickstart references missing "
+                                  f"path {tok}")
+            for mod in MODULE_TOKEN_RE.findall(line):
+                n += 1
+                p = os.path.join(REPO, *mod.split("."))
+                if mod.startswith("repro"):
+                    p = os.path.join(REPO, "src", *mod.split("."))
+                if not (os.path.exists(p + ".py")
+                        or os.path.isdir(p)):
+                    errors.append(f"{rel}: quickstart references missing "
+                                  f"module {mod}")
+    return n
+
+
+def main():
+    errors = []
+    n_links = n_snip = n_paths = 0
+    for rel in md_files():
+        with open(os.path.join(REPO, rel)) as f:
+            text = f.read()
+        n_links += len(LINK_RE.findall(text))
+        check_links(rel, text, errors)
+        if rel == "README.md" or rel.startswith("docs"):
+            n_snip += run_snippets(rel, text, errors)
+            n_paths += check_bash_paths(rel, text, errors)
+    if errors:
+        print("docs check FAILED:")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"docs check OK: {len(md_files())} files, {n_links} links, "
+          f"{n_snip} python snippets run, {n_paths} quickstart paths")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,14 +11,21 @@ from repro.federated.server import (
     run_selection_scanned,
 )
 from repro.federated.simulation import (
+    ENGINE_CUTOVER_N,
+    ENGINES,
     AsyncEventState,
     DeviceRoundOutcome,
     RoundOutcome,
     make_async_round_engine,
     make_round_engine,
+    make_sharded_async_engine,
     predicted_round_cost_pct,
+    resolve_aggregation,
+    resolve_engine,
     round_cost_table,
     run_async_scanned,
+    run_async_sharded,
+    run_rounds,
     run_rounds_scanned,
     run_rounds_sharded,
     simulate_round,
@@ -30,7 +37,11 @@ __all__ = ["make_server_optimizer", "server_update", "weighted_delta",
            "FLConfig", "FLHistory", "cap_stragglers", "run_fl",
            "run_fl_async", "run_selection_scanned",
            "RoundOutcome", "DeviceRoundOutcome", "AsyncEventState",
+           "ENGINE_CUTOVER_N", "ENGINES",
            "make_async_round_engine", "make_round_engine",
-           "predicted_round_cost_pct", "round_cost_table",
-           "run_async_scanned", "run_rounds_scanned", "run_rounds_sharded",
+           "make_sharded_async_engine",
+           "predicted_round_cost_pct", "resolve_aggregation",
+           "resolve_engine", "round_cost_table",
+           "run_async_scanned", "run_async_sharded", "run_rounds",
+           "run_rounds_scanned", "run_rounds_sharded",
            "simulate_round", "simulate_round_device"]

@@ -82,11 +82,19 @@ class _SnapshotRing:
 def run_fl_async(cfg: FLConfig, verbose: bool = False) -> FLHistory:
     """Buffered-asynchronous FL: ``cfg.rounds`` server aggregations.
 
+    Reached via ``run_fl(cfg, mode="async")`` — or automatically by
+    ``run_fl``'s default ``mode="auto"`` whenever ``cfg.buffer_size`` /
+    ``cfg.max_concurrency`` is set (the dispatcher's async opt-in rule,
+    :func:`repro.federated.resolve_aggregation`).
+
     One history row per aggregation (``round_duration`` is the wall time
     between consecutive aggregations, so ``wall_hours`` is directly
     comparable with the sync loop's). ``cfg.buffer_size`` /
     ``cfg.max_concurrency`` default to ``selector.k`` — the sync-parity
-    regime — and ``cfg.staleness_power`` damps stale deltas.
+    regime — and ``cfg.staleness_power`` damps stale deltas. Training is
+    host-looped on one device; the engine underneath is the same event
+    core as ``run_async_scanned``/``run_async_sharded``, so the
+    selection/energy trajectory matches the engine-only scans.
     """
     if cfg.overcommit != 1.0:
         raise ValueError("overcommit is a synchronous-barrier knob; the "

@@ -36,9 +36,10 @@ from repro.federated.aggregation import (
     weighted_delta,
 )
 from repro.federated.simulation import (
+    ENGINES,
     predicted_round_cost_pct,
-    run_rounds_scanned,
-    run_rounds_sharded,
+    resolve_aggregation,
+    run_rounds,
     simulate_round,
 )
 from repro.models.resnet import init_resnet, resnet_forward, resnet_loss
@@ -95,12 +96,16 @@ class FLConfig:
     # successful ones; stragglers beyond K are abandoned (still pay energy)
     overcommit: float = 1.0
     # --- async (FedBuff-style) round engine knobs -----------------------
-    # run_fl(mode="async") / run_async_scanned: each client completes at
-    # its own event-clock time; the server aggregates every `buffer_size`
-    # arrivals with 1/(1+staleness)**staleness_power damping and refills
-    # freed concurrency slots from the selector. None -> selector.k (the
-    # sync-parity limit; with staleness_power=0.0 the async engine then
-    # reproduces the synchronous trajectory exactly).
+    # run_fl / run_async_scanned / run_async_sharded: each client
+    # completes at its own event-clock time; the server aggregates every
+    # `buffer_size` arrivals with 1/(1+staleness)**staleness_power damping
+    # and refills freed concurrency slots from the selector. None ->
+    # selector.k (the sync-parity limit; with staleness_power=0.0 the
+    # async engine then reproduces the synchronous trajectory exactly).
+    # Setting buffer_size or max_concurrency is ALSO the async opt-in for
+    # the "auto" dispatchers (run_fl, run_rounds, resolve_engine): the
+    # knobs have no synchronous meaning, so a config that sets one runs
+    # async unless mode="sync" forces otherwise.
     buffer_size: Optional[int] = None
     max_concurrency: Optional[int] = None
     staleness_power: float = 0.5
@@ -248,17 +253,35 @@ def _engine_setup(cfg: FLConfig, kpop, model_bytes: float):
 
 
 def run_fl(cfg: FLConfig, verbose: bool = False,
-           mode: str = "sync") -> FLHistory:
-    """Run the full FL experiment. ``mode="sync"`` is the paper's
-    synchronous round loop; ``mode="async"`` dispatches to the FedBuff-style
-    buffered-asynchronous server (:mod:`repro.federated.async_server`) with
-    ``cfg.buffer_size`` / ``cfg.max_concurrency`` / ``cfg.staleness_power``.
+           mode: str = "auto") -> FLHistory:
+    """Run the full FL experiment (REAL training on one host device).
+
+    ``mode`` resolves through the same dispatcher as the engine-level
+    :func:`repro.federated.run_rounds` (``resolve_aggregation``):
+    ``"sync"`` is the paper's synchronous round loop, ``"async"`` the
+    FedBuff-style buffered-asynchronous server
+    (:mod:`repro.federated.async_server`, knobs ``cfg.buffer_size`` /
+    ``cfg.max_concurrency`` / ``cfg.staleness_power``), and the default
+    ``"auto"`` picks async exactly when ``cfg.buffer_size`` or
+    ``cfg.max_concurrency`` is set (``staleness_power`` alone does not
+    opt in — it has a meaningful default and is only consulted once the
+    async loop runs). Both loops share the population, energy model, and
+    fused round core, so their histories are directly comparable (and in
+    the ``buffer_size == max_concurrency == k, staleness_power=0`` limit
+    the async loop's selection/battery/dropout trajectory reproduces the
+    sync loop's).
     """
+    if mode in ENGINES:
+        # run_fl is the single-host training loop — it has no sharded
+        # variant, so accepting an engine name here would silently run
+        # something else than asked for
+        raise ValueError(
+            f"run_fl takes 'auto'/'sync'/'async', not the engine name "
+            f"{mode!r}; force engines via repro.federated.run_rounds")
+    mode = resolve_aggregation(mode, cfg.buffer_size, cfg.max_concurrency)
     if mode == "async":
         from repro.federated.async_server import run_fl_async
         return run_fl_async(cfg, verbose=verbose)
-    if mode != "sync":
-        raise ValueError(f"unknown mode {mode!r}; expected 'sync' or 'async'")
     key = jax.random.PRNGKey(cfg.seed)
     kpop, kdata, kmodel, ktest, kloop = jax.random.split(key, 5)
 
@@ -355,7 +378,7 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
 def run_selection_scanned(cfg: FLConfig, rounds: Optional[int] = None,
                           use_pallas: Optional[bool] = None,
                           n_shards: Optional[int] = None,
-                          mesh=None,
+                          mesh=None, mode: str = "auto",
                           ) -> Tuple[ClientPopulation, Dict[str, Any]]:
     """The device-resident fast path: selection + energy + battery advanced
     for ``rounds`` rounds inside one ``jax.lax.scan`` (no training — the
@@ -364,9 +387,13 @@ def run_selection_scanned(cfg: FLConfig, rounds: Optional[int] = None,
 
     Uses the same population, energy model, and simulated device workload
     as :func:`run_fl`, so its battery/dropout trajectories match the host
-    loop within float tolerance. With ``n_shards``/``mesh`` the scan runs
-    on the sharded engine (population split over a `clients` mesh,
-    ``run_rounds_sharded``) with an identical selection trajectory.
+    loop within float tolerance. Dispatch goes through the unified
+    :func:`repro.federated.run_rounds` front door: ``mode`` (default
+    ``"auto"``) plus ``cfg``'s async knobs and the population size pick
+    among the scanned / sharded / async engines (``n_shards``/``mesh``
+    force the sharded variant); the selection trajectory is
+    index-identical whichever engine runs, and the engine actually chosen
+    is reported in the returned dict's ``"engine"`` key.
     """
     key = jax.random.PRNGKey(cfg.seed)
     kpop, _kdata, kmodel, _ktest, kloop = jax.random.split(key, 5)
@@ -377,17 +404,11 @@ def run_selection_scanned(cfg: FLConfig, rounds: Optional[int] = None,
         model_bytes = sum(x.size for x in jax.tree.leaves(params)) * 4.0
     pop, sim_steps, up_bytes, energy_model = _engine_setup(cfg, kpop,
                                                            model_bytes)
-    if n_shards is not None or mesh is not None:
-        final_pop, final_state, traj = run_rounds_sharded(
-            kloop, cfg.selector, pop, SelectorState.create(cfg.selector),
-            energy_model, model_bytes, sim_steps, cfg.batch_size,
-            rounds or cfg.rounds, deadline_s=cfg.deadline_s,
-            up_bytes=up_bytes, use_pallas=use_pallas, mesh=mesh,
-            n_shards=n_shards)
-    else:
-        final_pop, final_state, traj = run_rounds_scanned(
-            kloop, cfg.selector, pop, SelectorState.create(cfg.selector),
-            energy_model, model_bytes, sim_steps, cfg.batch_size,
-            rounds or cfg.rounds, deadline_s=cfg.deadline_s,
-            up_bytes=up_bytes, use_pallas=use_pallas)
+    final_pop, final_state, traj = run_rounds(
+        kloop, cfg.selector, pop, SelectorState.create(cfg.selector),
+        energy_model, model_bytes, sim_steps, cfg.batch_size,
+        rounds or cfg.rounds, mode=mode, deadline_s=cfg.deadline_s,
+        up_bytes=up_bytes, use_pallas=use_pallas,
+        buffer_size=cfg.buffer_size, max_concurrency=cfg.max_concurrency,
+        staleness_power=cfg.staleness_power, mesh=mesh, n_shards=n_shards)
     return final_pop, {"state": final_state, **traj}

@@ -34,6 +34,7 @@ from repro.core.selection import (
     SelectorState,
     _auto_pallas,
     _device_select,
+    _merge_topk,
     _rank_bits,
     _shard_select,
     _slot_gather,
@@ -284,14 +285,22 @@ def run_rounds_scanned(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
                        ) -> Tuple[ClientPopulation, SelectorState,
                                   Dict[str, jnp.ndarray]]:
     """Advance selection + energy + battery state for ``rounds`` rounds
-    inside one ``jax.lax.scan`` — the device-resident fast path.
+    inside one ``jax.lax.scan`` — the single-device fast path (no mesh;
+    the whole population lives on the default device).
 
     Returns ``(final_pop, final_state, trajectory)`` where the trajectory
     holds per-round arrays: ``selected (R,k)``, ``chosen (R,k)``,
     ``succeeded (R,k)`` (per selected slot), ``round_duration (R,)``,
     ``new_dropouts (R,)``, ``energy_spent_pct (R,)``, ``mean_battery (R,)``
-    and ``total_dropped (R,)``. Matches the per-round host loop
-    (``select`` + ``simulate_round``) within float tolerance.
+    and ``total_dropped (R,)``.
+
+    Equivalence contract: matches the per-round host loop (``select`` +
+    ``simulate_round``) within float tolerance
+    (``tests/test_round_engine.py``), and is the index-for-index parity
+    reference for :func:`run_rounds_sharded` and (via the ``buffer_size ==
+    max_concurrency == k, staleness_power=0`` limit)
+    :func:`run_async_scanned`. Prefer the :func:`run_rounds` front door
+    unless you need this engine specifically.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -437,8 +446,39 @@ def round_cost_table(pop: ClientPopulation, energy_model: EnergyModel,
 # trajectory (tested in tests/test_async_engine.py).
 
 
+def _async_knobs(sel_cfg: SelectorConfig, buffer_size: Optional[int],
+                 max_concurrency: Optional[int]):
+    """Normalise + validate the FedBuff knobs (shared by the scanned and
+    sharded async engines so their defaults/validation cannot drift).
+
+    Returns ``(buffer_size, max_concurrency, fill_cfg, refill_cfg)`` where
+    ``fill_cfg``/``refill_cfg`` are the selector configs used to prime the
+    concurrency slots (k = max_concurrency) and to refill after each flush
+    (k = buffer_size)."""
+    import dataclasses as _dc
+
+    buffer_size = sel_cfg.k if buffer_size is None else int(buffer_size)
+    max_concurrency = (sel_cfg.k if max_concurrency is None
+                       else int(max_concurrency))
+    if buffer_size < 1:
+        raise ValueError("buffer_size must be >= 1")
+    if max_concurrency < buffer_size:
+        raise ValueError("max_concurrency must be >= buffer_size "
+                         f"({max_concurrency} < {buffer_size})")
+    fill_cfg = _dc.replace(sel_cfg, k=max_concurrency)
+    refill_cfg = _dc.replace(sel_cfg, k=buffer_size)
+    return buffer_size, max_concurrency, fill_cfg, refill_cfg
+
+
 class AsyncEventState(NamedTuple):
     """Device-resident event bookkeeping for the buffered-async engine.
+
+    The per-client leaves (``t_done``, ``start_version``) are (N,) arrays
+    that live wherever the population lives: on one device for the
+    scanned engine, or sharded over the `clients` mesh axis for
+    :func:`run_async_sharded` / :func:`make_sharded_async_engine` (the
+    scalars stay replicated). Both engines advance the same state
+    transition, so the event trajectory is engine-independent.
 
     ``t_done`` holds each in-flight client's *remaining* seconds measured
     from the last aggregation point (+inf when idle), not an absolute
@@ -490,7 +530,8 @@ def make_async_round_engine(sel_cfg: SelectorConfig,
                             up_bytes: Optional[float] = None,
                             use_pallas: bool = False,
                             interpret: bool = False):
-    """Traced FedBuff event engine: returns ``(init_fill, step)``.
+    """Traced FedBuff event engine, single-device (the sharded twin is
+    :func:`make_sharded_async_engine`): returns ``(init_fill, step)``.
 
     ``init_fill(key, pop, sel_state, astate)`` primes ``max_concurrency``
     concurrency slots (no battery is debited — debits happen at completion)
@@ -511,18 +552,8 @@ def make_async_round_engine(sel_cfg: SelectorConfig,
     (it still pays its round energy), mirroring the sync engine's
     per-round deadline semantics.
     """
-    import dataclasses as _dc
-
-    buffer_size = sel_cfg.k if buffer_size is None else int(buffer_size)
-    max_concurrency = (sel_cfg.k if max_concurrency is None
-                       else int(max_concurrency))
-    if buffer_size < 1:
-        raise ValueError("buffer_size must be >= 1")
-    if max_concurrency < buffer_size:
-        raise ValueError("max_concurrency must be >= buffer_size "
-                         f"({max_concurrency} < {buffer_size})")
-    fill_cfg = _dc.replace(sel_cfg, k=max_concurrency)
-    refill_cfg = _dc.replace(sel_cfg, k=buffer_size)
+    buffer_size, max_concurrency, fill_cfg, refill_cfg = _async_knobs(
+        sel_cfg, buffer_size, max_concurrency)
 
     def _select(key, cfg, sel_state, pop, cost, astate):
         # in-flight clients must not be re-selected: mask them out of the
@@ -694,7 +725,9 @@ def run_async_scanned(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
                                  Dict[str, jnp.ndarray]]:
     """FedBuff-style asynchronous twin of :func:`run_rounds_scanned`:
     ``rounds`` server aggregations advanced inside one event-stepped
-    ``jax.lax.scan``.
+    ``jax.lax.scan``, single-device (no mesh — for fleet-scale populations
+    use :func:`run_async_sharded`, index-for-index identical over a
+    `clients` mesh, or let :func:`run_rounds` pick).
 
     The trajectory holds, per aggregation: the completion batch
     (``completed (R,B)``, ``comp_chosen``, ``succeeded``, ``staleness``,
@@ -739,15 +772,20 @@ def run_rounds_sharded(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
                        mesh=None, n_shards: Optional[int] = None,
                        ) -> Tuple[ClientPopulation, SelectorState,
                                   Dict[str, jnp.ndarray]]:
-    """Sharded twin of :func:`run_rounds_scanned` over a `clients` mesh.
+    """Sharded twin of :func:`run_rounds_scanned` over a 1-D `clients`
+    mesh (``mesh``/``n_shards``, default: all visible devices).
 
     Pads the population to a multiple of the mesh size (pad clients are
     dead and never selected), shards it with the hoisted cost table, and
-    scans fully sharded. The selection trajectory (``selected``/``chosen``)
-    is index-for-index identical to :func:`run_rounds_scanned`; summed
-    stats (``energy_spent_pct``, ``mean_battery``) match within float
+    scans fully sharded. Parity contract: the selection trajectory
+    (``selected``/``chosen``) is index-for-index identical to
+    :func:`run_rounds_scanned` on the same key (verified under 1/2/8
+    virtual devices by ``repro.launch.sharded_check``); summed stats
+    (``energy_spent_pct``, ``mean_battery``) match within float
     reduction-order tolerance. The returned population is trimmed back to
-    the real client count.
+    the real client count. Worth it above ~:data:`ENGINE_CUTOVER_N`
+    clients — below that, collective latency dominates and
+    :func:`run_rounds` picks the single-device engine instead.
     """
     from repro.launch.mesh import make_client_mesh
     from repro.launch.sharding import population_sharding
@@ -772,4 +810,502 @@ def run_rounds_sharded(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
     (fpop, st), traj = run(key, padded, sel_state.canonical(), t_total, cost)
     if fpop.n != n_real:
         fpop = jax.tree.map(lambda x: x[:n_real], fpop)
+    return fpop, st, traj
+
+
+# ----------------------------------------------------------- sharded async
+# The FedBuff event engine over the same 1-D `clients` mesh as the sync
+# sharded engine: AsyncEventState's per-client leaves (event clocks,
+# in-flight versions) stay shard-resident next to the population, the
+# flush's buffer_size-earliest-arrivals pick runs as the same two-level
+# tournament `_shard_select` uses (per-shard top-k of -t_done -> all-gather
+# -> tiny global top-k, tie-identical to single-device lax.top_k), and the
+# battery/dropout debit reuses `simulate_round_device` with psum/pmax
+# collectives. Everything the single-device async step computes per client
+# is elementwise, and every cross-shard reduction is either exactly
+# associative (pmax durations, pmin/pmax norm stats) or a one-owner-per-slot
+# psum gather, so the trajectory is index-for-index identical to
+# `run_async_scanned` (checked under 1/2/8 virtual devices by
+# `repro.launch.sharded_check --async`).
+
+
+def _slot_gather_i32(x_loc, idx, mask, base, axis_name: str):
+    """Integer twin of ``selection._slot_gather``: one shard owns each of
+    the (k,) global ``idx`` slots, so a psum of int32 reassembles the
+    replicated values exactly (no float round-trip for version counters)."""
+    n_loc = x_loc.shape[0]
+    in_range = mask & (idx >= base) & (idx < base + n_loc)
+    loc = jnp.clip(idx - base, 0, n_loc - 1)
+    vals = jnp.where(in_range, x_loc[loc].astype(jnp.int32), 0)
+    return jax.lax.psum(vals, axis_name)
+
+
+def _start_clients_shard(astate: AsyncEventState, idx, chosen, t_total,
+                         base) -> AsyncEventState:
+    """Shard-local :func:`_start_clients`: arm the event clocks of the
+    chosen slots this shard owns (global ``idx``, local ``t_total``)."""
+    n_loc = t_total.shape[0]
+    loc = jnp.clip(idx - base, 0, n_loc - 1)
+    own = chosen & (idx >= base) & (idx < base + n_loc)
+    tgt = jnp.where(own, loc, n_loc)
+    t_done = astate.t_done.at[tgt].set(t_total[loc], mode="drop")
+    start_v = astate.start_version.at[tgt].set(astate.server_version,
+                                               mode="drop")
+    return astate._replace(t_done=t_done, start_version=start_v)
+
+
+def _shard_async_fill(key, sel_state, astate, pop, t_total, cost, bits, *,
+                      fill_cfg, axis_name, n_real, use_pallas, interpret):
+    """Shard-local initial fill: prime ``max_concurrency`` slots (no debit
+    — debits happen at completion), twin of the scanned ``init_fill``."""
+    n_loc = cost.shape[0]
+    base = (jax.lax.axis_index(axis_name) * n_loc).astype(jnp.int32)
+    sel_pop = pop.replace(dropped=pop.dropped | astate.in_flight)
+    idx, chosen, sel_state = _shard_select(
+        key, sel_state, sel_pop, cost, bits, cfg=fill_cfg,
+        axis_name=axis_name, n_real=n_real, use_pallas=use_pallas,
+        interpret=interpret)
+    astate = _start_clients_shard(astate, idx, chosen, t_total, base)
+    return sel_state, astate, idx, chosen
+
+
+def _shard_async_step(key, sel_state, astate, pop, t_total, cost, bits,
+                      do_refill, *, refill_cfg, buffer_size: int,
+                      staleness_power: float, energy_model, deadline_s,
+                      axis_name, n_real: int, n_pad: int, use_pallas,
+                      interpret):
+    """Shard-local flush-then-refill event step (call under ``shard_map``).
+
+    Mirrors the scanned engine's ``step`` operation-for-operation: the
+    per-client arithmetic is elementwise on this shard's slice (bitwise
+    identical to the unsharded run), and the only cross-shard traffic is
+    the flush/refill candidate merges, the one-owner-per-slot gathers for
+    staleness/success, and the scalar psum/pmax round stats.
+    """
+    n_loc = cost.shape[0]
+    base = (jax.lax.axis_index(axis_name) * n_loc).astype(jnp.int32)
+
+    # ---- flush: the buffer_size earliest arrivals, two-level merge -----
+    in_flight = astate.in_flight
+    n_if = jax.lax.psum(jnp.sum(in_flight), axis_name).astype(jnp.int32)
+    b_loc = min(buffer_size, n_loc)
+    g = jnp.where(in_flight, -astate.t_done, -jnp.inf)
+    cidx = _merge_topk(g, buffer_size, b_loc, base, axis_name) \
+        .astype(jnp.int32)
+    comp_chosen = jnp.arange(buffer_size) < jnp.minimum(buffer_size, n_if)
+    own = comp_chosen & (cidx >= base) & (cidx < base + n_loc)
+    comp_mask = jnp.zeros((n_loc,), bool).at[
+        jnp.where(own, cidx - base, n_loc)].set(True, mode="drop")
+
+    busy = in_flight & ~comp_mask
+    rnd = astate.server_version + 1
+    pop, dev = simulate_round_device(pop, comp_mask, astate.t_done, cost,
+                                     rnd, energy_model, deadline_s,
+                                     axis_name=axis_name, busy_mask=busy)
+
+    start_v = _slot_gather_i32(astate.start_version, cidx, comp_chosen,
+                               base, axis_name)
+    staleness = jnp.maximum(astate.server_version - start_v, 0)
+    succeeded = (_slot_gather(dev.succeeded, cidx, comp_chosen, base,
+                              axis_name) > 0) & comp_chosen
+    agg_weight = jnp.where(
+        succeeded,
+        (1.0 + staleness.astype(jnp.float32)) ** (-staleness_power),
+        0.0)
+
+    # re-base survivors to the new aggregation point (see the scanned
+    # engine for the clamp-at-0 rationale); round_duration is already the
+    # global pmax, so the rebase is bitwise identical across engines
+    any_comp = n_if > 0
+    astate = astate._replace(
+        t_done=jnp.where(comp_mask, jnp.inf,
+                         jnp.maximum(astate.t_done
+                                     - dev.round_duration, 0.0)),
+        server_clock=astate.server_clock + dev.round_duration,
+        server_version=astate.server_version + any_comp.astype(jnp.int32))
+
+    flush = {
+        "completed": cidx,
+        "comp_chosen": comp_chosen,
+        "succeeded": succeeded,
+        "staleness": jnp.where(comp_chosen, staleness, 0),
+        "agg_weight": agg_weight,
+        "round_duration": dev.round_duration,
+        "new_dropouts": dev.new_dropouts,
+        "energy_spent_pct": dev.energy_spent_pct,
+    }
+
+    # ---- refill the freed slots ----------------------------------------
+    sel_pop = pop.replace(dropped=pop.dropped | astate.in_flight)
+    ridx, rchosen, new_sel_state = _shard_select(
+        key, sel_state, sel_pop, cost, bits, cfg=refill_cfg,
+        axis_name=axis_name, n_real=n_real, use_pallas=use_pallas,
+        interpret=interpret)
+    rchosen = rchosen & do_refill
+    sel_state = jax.tree.map(lambda new, old: jnp.where(do_refill, new,
+                                                        old),
+                             new_sel_state, sel_state)
+    astate = _start_clients_shard(astate, ridx, rchosen, t_total, base)
+
+    stats = {
+        "n_inflight": (jax.lax.psum(jnp.sum(astate.in_flight), axis_name)
+                       .astype(jnp.int32)),
+        "mean_battery": _asum(pop.battery_pct, axis_name) / n_real,
+        "total_dropped": (_asum(pop.dropped, axis_name)
+                          .astype(jnp.int32) - n_pad),
+    }
+    return pop, sel_state, astate, flush, (ridx, rchosen), stats
+
+
+def make_sharded_async_engine(sel_cfg: SelectorConfig,
+                              energy_model: EnergyModel,
+                              mesh, n_real: int,
+                              buffer_size: Optional[int] = None,
+                              max_concurrency: Optional[int] = None,
+                              staleness_power: float = 0.5,
+                              deadline_s: Optional[float] = None,
+                              use_pallas: bool = False,
+                              interpret: bool = False,
+                              axis_name: Optional[str] = None):
+    """Sharded twin of :func:`make_async_round_engine` over a 1-D `clients`
+    mesh: returns ``(init_fill, step)`` operating on a population (and
+    :class:`AsyncEventState`) padded to the mesh size and sharded over
+    ``axis_name``, with the round-invariant cost table hoisted to the
+    caller (:func:`round_cost_table`) instead of recomputed per event.
+
+    ``init_fill(key, pop, sel_state, astate, t_total, cost)`` and
+    ``step(key, pop, sel_state, astate, t_total, cost, do_refill)`` have
+    the scanned engine's contracts plus a trailing per-step ``stats`` dict
+    (``n_inflight`` / ``mean_battery`` / ``total_dropped`` via psum);
+    outputs are index-for-index identical to the single-device engine on
+    the unpadded population (pad clients are dead and never selected).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    if axis_name is None:
+        axis_name = mesh.axis_names[0]
+    buffer_size, max_concurrency, fill_cfg, refill_cfg = _async_knobs(
+        sel_cfg, buffer_size, max_concurrency)
+    n_shards = mesh.shape[axis_name]
+    n_padded = n_real + (-n_real) % n_shards
+    n_pad = n_padded - n_real
+    spec = P(axis_name)
+    astate_spec = AsyncEventState(t_done=spec, start_version=spec,
+                                  server_clock=P(), server_version=P())
+
+    fill_body = shard_map(
+        partial(_shard_async_fill, fill_cfg=fill_cfg, axis_name=axis_name,
+                n_real=n_real, use_pallas=use_pallas, interpret=interpret),
+        mesh=mesh,
+        in_specs=(P(), P(), astate_spec, spec, spec, spec, spec),
+        out_specs=(P(), astate_spec, P(), P()),
+        check_rep=False)
+    step_body = shard_map(
+        partial(_shard_async_step, refill_cfg=refill_cfg,
+                buffer_size=buffer_size, staleness_power=staleness_power,
+                energy_model=energy_model, deadline_s=deadline_s,
+                axis_name=axis_name, n_real=n_real, n_pad=n_pad,
+                use_pallas=use_pallas, interpret=interpret),
+        mesh=mesh,
+        in_specs=(P(), P(), astate_spec, spec, spec, spec, spec, P()),
+        out_specs=(spec, P(), astate_spec, P(), P(), P()),
+        check_rep=False)
+
+    def _bits(key):
+        # prefix-stable sharded rank bits (partitionable threefry): the
+        # first n_real values equal the single-device stream
+        return jax.lax.with_sharding_constraint(
+            _rank_bits(key, n_padded), NamedSharding(mesh, spec))
+
+    def init_fill(key, pop, sel_state, astate, t_total, cost):
+        return fill_body(key, sel_state, astate, pop, t_total, cost,
+                         _bits(key))
+
+    def step(key, pop, sel_state, astate, t_total, cost, do_refill):
+        pop, sel_state, astate, flush, refill, stats = step_body(
+            key, sel_state, astate, pop, t_total, cost, _bits(key),
+            do_refill)
+        return pop, sel_state, astate, flush, refill, stats
+
+    return init_fill, step
+
+
+@functools.lru_cache(maxsize=16)
+def _sharded_async_runner(sel_cfg: SelectorConfig, energy_model: EnergyModel,
+                          buffer_size: Optional[int],
+                          max_concurrency: Optional[int],
+                          staleness_power: float,
+                          deadline_s: Optional[float], rounds: int,
+                          use_pallas: bool, interpret: bool,
+                          mesh, n_real: int, axis_name: str):
+    """Cached jitted R-aggregation sharded async scan (event-stepped twin
+    of :func:`_sharded_scanned_runner`; key/trajectory layout identical to
+    :func:`_async_scanned_runner`)."""
+    init_fill, step = make_sharded_async_engine(
+        sel_cfg, energy_model, mesh, n_real, buffer_size, max_concurrency,
+        staleness_power, deadline_s, use_pallas, interpret, axis_name)
+    b = buffer_size if buffer_size is not None else sel_cfg.k
+    n_shards = mesh.shape[axis_name]
+    n_padded = n_real + (-n_real) % n_shards
+
+    @jax.jit
+    def run(key, pop, st, t_total, cost):
+        # same key stream as the scanned async runner (and therefore the
+        # sync engines): keys[0] primes the pipe, keys[r] refills flush r
+        keys = jax.random.split(key, rounds)
+        astate = AsyncEventState.create(n_padded)
+        st, astate, idx0, chosen0 = init_fill(keys[0], pop, st, astate,
+                                              t_total, cost)
+
+        def scan_step(carry, xs):
+            pop, st, astate = carry
+            pop, st, astate, flush, (ridx, rchosen), stats = step(
+                xs["key"], pop, st, astate, t_total, cost, xs["refill"])
+            out = {
+                **flush,
+                "selected": ridx,
+                "chosen": rchosen,
+                "server_clock": astate.server_clock,
+                **stats,
+            }
+            return (pop, st, astate), out
+
+        xs = {
+            "key": jnp.concatenate([keys[1:], keys[-1:]]),
+            "refill": jnp.arange(rounds) < rounds - 1,
+        }
+        (pop, st, astate), traj = jax.lax.scan(
+            scan_step, (pop, st, astate), xs)
+        traj["fill_selected"] = idx0
+        traj["fill_chosen"] = chosen0
+        traj["selected"] = jnp.concatenate([idx0[None, :b],
+                                            traj["selected"][:-1]])
+        traj["chosen"] = jnp.concatenate([chosen0[None, :b],
+                                          traj["chosen"][:-1]])
+        return (pop, st, astate), traj
+
+    return run
+
+
+def run_async_sharded(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
+                      sel_state: SelectorState, energy_model: EnergyModel,
+                      model_bytes: float, local_steps: int, batch_size: int,
+                      rounds: int,
+                      buffer_size: Optional[int] = None,
+                      max_concurrency: Optional[int] = None,
+                      staleness_power: float = 0.5,
+                      deadline_s: Optional[float] = None,
+                      up_bytes: Optional[float] = None,
+                      use_pallas: Optional[bool] = None,
+                      interpret: Optional[bool] = None,
+                      mesh=None, n_shards: Optional[int] = None,
+                      ) -> Tuple[ClientPopulation, SelectorState,
+                                 Dict[str, jnp.ndarray]]:
+    """Sharded twin of :func:`run_async_scanned` over a 1-D `clients` mesh
+    — the FedBuff event engine without the single-device bottleneck.
+
+    Expects (or builds, via ``mesh``/``n_shards``) a 1-D ``clients`` mesh;
+    the population is padded to the mesh size (pad clients are dead, never
+    selected, never in flight), sharded with the hoisted round-invariant
+    cost table, and the whole flush/refill event scan runs sharded.
+
+    Parity contract: the trajectory — selection, completion order,
+    staleness, damping weights, wall clock — is index-for-index identical
+    to :func:`run_async_scanned` on the same key (per-client arithmetic is
+    elementwise on shards, durations merge via exactly-associative pmax,
+    slot gathers have one owner per slot); summed scalar stats
+    (``energy_spent_pct``, ``mean_battery``) match within float
+    reduction-order tolerance. Verified under 1/2/8 virtual devices by
+    ``repro.launch.sharded_check``. The returned population and
+    ``final_event_state`` are trimmed back to the real client count.
+    """
+    from repro.launch.mesh import make_client_mesh
+    from repro.launch.sharding import population_sharding
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if mesh is None:
+        mesh = make_client_mesh(n_shards)
+    axis_name = mesh.axis_names[0]
+    n_real = pop.n
+    shard = population_sharding(mesh, axis_name)
+    padded = jax.device_put(pad_population(pop, mesh.shape[axis_name]),
+                            shard)
+    t_total, cost = round_cost_table(padded, energy_model, model_bytes,
+                                     local_steps, batch_size, up_bytes,
+                                     sharding=shard)
+    run = _sharded_async_runner(
+        sel_cfg, energy_model,
+        None if buffer_size is None else int(buffer_size),
+        None if max_concurrency is None else int(max_concurrency),
+        float(staleness_power),
+        None if deadline_s is None else float(deadline_s), int(rounds),
+        _auto_pallas(n_real, use_pallas), interpret, mesh, n_real,
+        axis_name)
+    (fpop, st, astate), traj = run(key, padded, sel_state.canonical(),
+                                   t_total, cost)
+    if fpop.n != n_real:
+        fpop = jax.tree.map(lambda x: x[:n_real], fpop)
+        astate = astate._replace(t_done=astate.t_done[:n_real],
+                                 start_version=astate.start_version[:n_real])
+    traj["final_event_state"] = astate
+    return fpop, st, traj
+
+
+# -------------------------------------------------------------- dispatcher
+# One front door over the four round engines. The measured boundary comes
+# from BENCH_selection.json (PR 2/3): below ~262k clients the sharded
+# step's collective latency dominates its per-shard win
+# (speedup_sharded_vs_jit 0.3-0.5), above it the sharded engine pulls
+# ahead (1.1x at 262k, 2.6x at 4.2M on 8 virtual CPU devices). Because
+# every engine pair is index-for-index identical on the same key,
+# switching engines at the boundary is free.
+
+#: Population size at/above which a multi-device host dispatches to the
+#: sharded engines (the measured ~256k cutover; override per call).
+ENGINE_CUTOVER_N = 262_144
+
+SYNC_ENGINES = ("scanned", "sharded")
+ASYNC_ENGINES = ("async-scanned", "async-sharded")
+ENGINES = SYNC_ENGINES + ASYNC_ENGINES
+
+
+def resolve_aggregation(mode: str, buffer_size: Optional[int] = None,
+                        max_concurrency: Optional[int] = None) -> str:
+    """Resolve a user-facing mode string to ``"sync"`` or ``"async"``.
+
+    ``mode="auto"`` picks ``"async"`` exactly when an async-only knob
+    (``buffer_size`` / ``max_concurrency``) is set — the knobs have no
+    synchronous meaning, so setting one IS the async opt-in. Explicit
+    ``"sync"``/``"async"`` pass through; engine names map to their family.
+    """
+    if mode in ("sync", "async"):
+        return mode
+    if mode in SYNC_ENGINES:
+        return "sync"
+    if mode in ASYNC_ENGINES:
+        return "async"
+    if mode == "auto":
+        return ("async" if buffer_size is not None
+                or max_concurrency is not None else "sync")
+    raise ValueError(f"unknown mode {mode!r}; expected 'auto', 'sync', "
+                     f"'async', or one of {ENGINES}")
+
+
+def resolve_engine(n: int, device_count: Optional[int] = None, *,
+                   mode: str = "auto",
+                   buffer_size: Optional[int] = None,
+                   max_concurrency: Optional[int] = None,
+                   cutover_n: Optional[int] = None) -> str:
+    """Pick the round engine for a population of ``n`` clients.
+
+    Two orthogonal decisions:
+
+    - **family** (sync vs async) from ``mode`` and the async knobs, via
+      :func:`resolve_aggregation` (``mode`` may also force one of the four
+      engine names directly, which short-circuits everything);
+    - **placement** (single-device scan vs `clients`-mesh shard_map):
+      sharded iff ``device_count > 1`` and ``n >= cutover_n`` (default
+      :data:`ENGINE_CUTOVER_N`, the measured ~256k boundary where the
+      sharded step starts beating the single-device jit step —
+      ``BENCH_selection.json``).
+
+    Returns one of ``"scanned" | "sharded" | "async-scanned" |
+    "async-sharded"``. All four produce index-identical trajectories in
+    their overlap (see ``docs/architecture.md``), so the pick is purely a
+    performance decision.
+    """
+    if mode in ENGINES:
+        return mode
+    family = resolve_aggregation(mode, buffer_size, max_concurrency)
+    if device_count is None:
+        device_count = jax.device_count()
+    if cutover_n is None:
+        cutover_n = ENGINE_CUTOVER_N
+    sharded = device_count > 1 and n >= cutover_n
+    if family == "async":
+        return "async-sharded" if sharded else "async-scanned"
+    return "sharded" if sharded else "scanned"
+
+
+def run_rounds(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
+               sel_state: SelectorState, energy_model: EnergyModel,
+               model_bytes: float, local_steps: int, batch_size: int,
+               rounds: int, *,
+               mode: str = "auto",
+               deadline_s: Optional[float] = None,
+               up_bytes: Optional[float] = None,
+               use_pallas: Optional[bool] = None,
+               interpret: Optional[bool] = None,
+               buffer_size: Optional[int] = None,
+               max_concurrency: Optional[int] = None,
+               staleness_power: float = 0.5,
+               mesh=None, n_shards: Optional[int] = None,
+               cutover_n: Optional[int] = None,
+               ) -> Tuple[ClientPopulation, SelectorState, Dict]:
+    """Unified front door over the four round engines.
+
+    Dispatches among :func:`run_rounds_scanned`, :func:`run_rounds_sharded`,
+    :func:`run_async_scanned` and :func:`run_async_sharded` via
+    :func:`resolve_engine`: ``mode`` picks the family (``"auto"`` infers
+    async from ``buffer_size``/``max_concurrency``; ``"sync"``/``"async"``
+    force a family; one of the four engine names forces that engine), and
+    population size vs ``cutover_n`` on a multi-device host picks
+    single-device vs sharded. Passing ``mesh``/``n_shards`` explicitly
+    upgrades an auto-resolved single-device engine to its sharded twin on
+    that mesh.
+
+    All engines in a family return the same trajectory layout, and the
+    sync/async families coincide in the ``buffer_size == max_concurrency
+    == k, staleness_power=0`` limit, so every dispatch decision is
+    behavior-preserving on the same key (the parity contracts of the
+    underlying engines). The chosen engine name is recorded in the
+    returned trajectory as ``traj["engine"]``.
+    """
+    if mesh is not None:
+        device_count = mesh.shape[mesh.axis_names[0]]
+    elif n_shards is not None:
+        device_count = n_shards
+    else:
+        device_count = jax.device_count()
+    engine = resolve_engine(pop.n, device_count, mode=mode,
+                            buffer_size=buffer_size,
+                            max_concurrency=max_concurrency,
+                            cutover_n=cutover_n)
+    if mesh is not None or n_shards is not None:
+        if mode in ("scanned", "async-scanned"):
+            # a forced engine name always wins — don't silently override
+            # it with the mesh, and don't silently ignore the mesh either
+            raise ValueError(
+                f"mode={mode!r} forces a single-device engine but "
+                f"mesh/n_shards was passed; drop one of the two")
+        # a family-level mode with an explicit mesh: use the mesh
+        engine = {"scanned": "sharded",
+                  "async-scanned": "async-sharded"}.get(engine, engine)
+    if engine in SYNC_ENGINES and (buffer_size is not None
+                                   or max_concurrency is not None):
+        raise ValueError(
+            f"async knobs (buffer_size/max_concurrency) with the "
+            f"synchronous {engine!r} engine; use mode='async' or drop "
+            f"the knobs")
+
+    common = dict(deadline_s=deadline_s, up_bytes=up_bytes,
+                  use_pallas=use_pallas, interpret=interpret)
+    async_kw = dict(buffer_size=buffer_size,
+                    max_concurrency=max_concurrency,
+                    staleness_power=staleness_power)
+    args = (key, sel_cfg, pop, sel_state, energy_model, model_bytes,
+            local_steps, batch_size, rounds)
+    if engine == "scanned":
+        fpop, st, traj = run_rounds_scanned(*args, **common)
+    elif engine == "sharded":
+        fpop, st, traj = run_rounds_sharded(*args, **common, mesh=mesh,
+                                            n_shards=n_shards)
+    elif engine == "async-scanned":
+        fpop, st, traj = run_async_scanned(*args, **common, **async_kw)
+    else:
+        fpop, st, traj = run_async_sharded(*args, **common, **async_kw,
+                                           mesh=mesh, n_shards=n_shards)
+    traj["engine"] = engine
     return fpop, st, traj

@@ -18,7 +18,13 @@ single-device reference on N virtual CPU devices (the same
   - k larger than the per-shard client count;
   - the Pallas per-shard leg against the single-device Pallas leg;
   - the R-round scanned trajectory (``run_rounds_sharded`` vs
-    ``run_rounds_scanned``), index-for-index on selected/chosen/succeeded.
+    ``run_rounds_scanned``), index-for-index on selected/chosen/succeeded;
+  - the ASYNC parity matrix (``run_async_sharded`` vs
+    ``run_async_scanned``): every selector kind under a buffered regime
+    (B < C, staleness damping on) and under the B == C == k,
+    staleness_power=0 sync-reproduction limit, plus a deadline-abandon
+    case — completion order, staleness, damping weights, event clocks and
+    the wall clock must all be index-for-index / bitwise identical.
 
 Exits non-zero on the first mismatch; prints ``parity OK`` when the whole
 matrix passes.
@@ -34,7 +40,12 @@ import numpy as np
 from repro.core import EnergyModel, SelectorConfig, SelectorState, \
     make_population
 from repro.core.selection import make_sharded_select_step, select_device
-from repro.federated.simulation import run_rounds_scanned, run_rounds_sharded
+from repro.federated.simulation import (
+    run_async_scanned,
+    run_async_sharded,
+    run_rounds_scanned,
+    run_rounds_sharded,
+)
 from repro.launch.mesh import make_client_mesh
 
 ALL_KINDS = ("eafl", "oort", "eafl-epj", "random")
@@ -72,6 +83,63 @@ def _check_step(label, mesh, cfg, pop, pred, key, rounds=4,
         for f in ("epsilon", "pacer_T", "util_ema"):
             a, b = float(getattr(st_ref, f)), float(getattr(st_sh, f))
             assert a == b, f"{label} r{r}: state.{f} {a} != {b}"
+    print(f"  {label}: OK")
+
+
+def _check_async(label, mesh, cfg, pop, key, em, rounds=4,
+                 buffer_size=None, max_concurrency=None,
+                 staleness_power=0.5, deadline_s=None,
+                 require_abandoned=False, local_steps=400):
+    """run_async_sharded vs run_async_scanned on the same key: the full
+    event trajectory must match — exact on everything except the psum'd
+    scalar stats (reduction-order ulp). ``require_abandoned`` guards a
+    deadline case against going vacuous: some chosen completion must have
+    actually failed (deadline/battery), or the case isn't testing the
+    abandonment branch at all."""
+    kw = dict(energy_model=em, model_bytes=85e6, local_steps=local_steps,
+              batch_size=20, rounds=rounds, buffer_size=buffer_size,
+              max_concurrency=max_concurrency,
+              staleness_power=staleness_power, deadline_s=deadline_s)
+    p1, s1, t1 = run_async_scanned(key, cfg, pop,
+                                   SelectorState.create(cfg), **kw)
+    p2, s2, t2 = run_async_sharded(key, cfg, pop,
+                                   SelectorState.create(cfg), mesh=mesh,
+                                   **kw)
+    exact = ("completed", "comp_chosen", "succeeded", "staleness",
+             "selected", "chosen", "fill_selected", "fill_chosen",
+             "total_dropped", "n_inflight")
+    for f in exact:
+        assert np.array_equal(np.asarray(t1[f]), np.asarray(t2[f])), \
+            f"{label}: async trajectory diverged on {f}\n" \
+            f"{np.asarray(t1[f])}\n{np.asarray(t2[f])}"
+    for f in ("round_duration", "server_clock", "agg_weight"):
+        np.testing.assert_allclose(np.asarray(t1[f]), np.asarray(t2[f]),
+                                   rtol=0, err_msg=f"{label}: {f}")
+    np.testing.assert_allclose(np.asarray(t1["mean_battery"]),
+                               np.asarray(t2["mean_battery"]), rtol=1e-6,
+                               err_msg=f"{label}: mean_battery")
+    np.testing.assert_allclose(np.asarray(t1["energy_spent_pct"]),
+                               np.asarray(t2["energy_spent_pct"]),
+                               rtol=1e-6, err_msg=f"{label}: energy")
+    np.testing.assert_allclose(np.asarray(p1.battery_pct),
+                               np.asarray(p2.battery_pct), rtol=1e-6,
+                               err_msg=f"{label}: battery")
+    assert np.array_equal(np.asarray(p1.dropped), np.asarray(p2.dropped)), \
+        f"{label}: dropped diverged"
+    e1, e2 = t1["final_event_state"], t2["final_event_state"]
+    np.testing.assert_allclose(np.asarray(e1.t_done), np.asarray(e2.t_done),
+                               rtol=0, err_msg=f"{label}: t_done")
+    assert np.array_equal(np.asarray(e1.start_version),
+                          np.asarray(e2.start_version)), \
+        f"{label}: start_version diverged"
+    assert int(e1.server_version) == int(e2.server_version)
+    for f in ("epsilon", "pacer_T", "util_ema"):
+        a, b = float(getattr(s1, f)), float(getattr(s2, f))
+        assert a == b, f"{label}: state.{f} {a} != {b}"
+    if require_abandoned:
+        failed = np.asarray(t1["comp_chosen"]) & ~np.asarray(t1["succeeded"])
+        assert failed.any(), \
+            f"{label}: no arrival was abandoned — the case is vacuous"
     print(f"  {label}: OK")
 
 
@@ -167,6 +235,40 @@ def main():
     assert np.array_equal(np.asarray(p1.dropped), np.asarray(p2.dropped))
     assert float(s1.util_ema) == float(s2.util_ema)
     print("  scan trajectory: OK")
+
+    # -- async parity matrix ----------------------------------------------
+    # buffered regime (B < C, damping on) on a padded population, and the
+    # B == C == k / staleness_power=0 sync-reproduction limit, per kind
+    n = args.n
+    pop = _mixed_pop(key, n).replace(dropped=jnp.zeros((n,), bool))
+    kasync = jax.random.fold_in(key, 6)
+    for kind in ALL_KINDS:
+        cfg = SelectorConfig(kind=kind, k=10)
+        _check_async(f"async buffered {kind}", mesh, cfg, pop, kasync, em,
+                     rounds=args.rounds, buffer_size=3, max_concurrency=9)
+        _check_async(f"async sync-limit {kind}", mesh, cfg, pop, kasync,
+                     em, rounds=args.rounds, buffer_size=10,
+                     max_concurrency=10, staleness_power=0.0)
+
+    # deadlines, both failure shapes: (a) a tight deadline that actually
+    # abandons arrivals (400 s cuts through this workload's flush-offset
+    # distribution — require_abandoned guards the case against going
+    # vacuous if the population drifts), and (b) the whole-flush-dies
+    # regression regime (drained batteries under a loose deadline) that
+    # exercises the duration fallback / clamp-at-0 rebase path
+    _check_async("async tight-deadline eafl", mesh,
+                 SelectorConfig(kind="eafl", k=10), pop, kasync, em,
+                 rounds=args.rounds, buffer_size=3, max_concurrency=9,
+                 deadline_s=400.0, require_abandoned=True)
+    low = make_population(key, 256, init_battery_low=1.0,
+                          init_battery_high=12.0).replace(
+        stat_util=jax.random.uniform(jax.random.fold_in(key, 8),
+                                     (256,)) * 10)
+    _check_async("async flush-dies eafl", mesh,
+                 SelectorConfig(kind="eafl", k=8), low, kasync, em,
+                 rounds=args.rounds, buffer_size=2, max_concurrency=8,
+                 deadline_s=1e6, require_abandoned=True,
+                 local_steps=1600)
 
     print(f"parity OK ({s} shards)")
 

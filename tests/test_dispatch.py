@@ -1,0 +1,215 @@
+"""Unified `run_rounds` dispatcher: engine resolution across
+(population size, device count, mode, async knobs), forced-engine
+overrides producing index-identical trajectories, and the FLConfig-level
+auto mode in `run_fl` / `run_selection_scanned`."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.paper_resnet_speech import reduced
+from repro.core import (
+    EnergyModel,
+    SelectorConfig,
+    SelectorState,
+    make_population,
+)
+from repro.federated import (
+    ENGINE_CUTOVER_N,
+    ENGINES,
+    FLConfig,
+    resolve_aggregation,
+    resolve_engine,
+    run_fl,
+    run_rounds,
+    run_selection_scanned,
+)
+
+MB, STEPS, BS = 85e6, 400, 20
+
+
+# ------------------------------------------------------------- resolution
+@pytest.mark.parametrize("n,devices,mode,knobs,expected", [
+    # single device: always the scanned engines, any N
+    (1_000, 1, "auto", {}, "scanned"),
+    (10_000_000, 1, "auto", {}, "scanned"),
+    (10_000_000, 1, "auto", {"buffer_size": 4}, "async-scanned"),
+    # multi-device: the measured ~256k cutover decides
+    (10_000, 8, "auto", {}, "scanned"),
+    (65_536, 8, "auto", {}, "scanned"),
+    (ENGINE_CUTOVER_N - 1, 8, "auto", {}, "scanned"),
+    (ENGINE_CUTOVER_N, 8, "auto", {}, "sharded"),
+    (4_194_304, 8, "auto", {}, "sharded"),
+    (4_194_304, 2, "auto", {}, "sharded"),
+    # async family rides the same placement rule
+    (10_000, 8, "auto", {"buffer_size": 4}, "async-scanned"),
+    (ENGINE_CUTOVER_N, 8, "auto", {"max_concurrency": 32},
+     "async-sharded"),
+    (ENGINE_CUTOVER_N, 8, "async", {}, "async-sharded"),
+    (10_000, 8, "async", {}, "async-scanned"),
+    # explicit family: sync ignores... no knobs, just family
+    (ENGINE_CUTOVER_N, 8, "sync", {}, "sharded"),
+    (1_000, 4, "sync", {}, "scanned"),
+])
+def test_resolve_engine_matrix(n, devices, mode, knobs, expected):
+    assert resolve_engine(n, devices, mode=mode, **knobs) == expected
+
+
+def test_resolve_engine_forced_names_short_circuit():
+    # a forced engine name wins regardless of N / device count
+    for name in ENGINES:
+        assert resolve_engine(7, 1, mode=name) == name
+        assert resolve_engine(10_000_000, 64, mode=name) == name
+
+
+def test_resolve_engine_cutover_override():
+    assert resolve_engine(1_000, 8, cutover_n=500) == "sharded"
+    assert resolve_engine(499, 8, cutover_n=500) == "scanned"
+    assert resolve_engine(1_000_000, 8, cutover_n=2_000_000) == "scanned"
+
+
+def test_resolve_aggregation():
+    assert resolve_aggregation("auto") == "sync"
+    assert resolve_aggregation("auto", buffer_size=3) == "async"
+    assert resolve_aggregation("auto", max_concurrency=12) == "async"
+    assert resolve_aggregation("sync", buffer_size=3) == "sync"
+    assert resolve_aggregation("async") == "async"
+    assert resolve_aggregation("sharded") == "sync"
+    assert resolve_aggregation("async-sharded") == "async"
+    with pytest.raises(ValueError, match="unknown mode"):
+        resolve_aggregation("turbo")
+
+
+def test_run_rounds_rejects_bad_combinations(rng):
+    pop = make_population(rng, 32)
+    args = (rng, SelectorConfig(kind="eafl", k=4), pop,
+            SelectorState.create(SelectorConfig(kind="eafl", k=4)),
+            EnergyModel(), MB, STEPS, BS, 2)
+    with pytest.raises(ValueError, match="unknown mode"):
+        run_rounds(*args, mode="warp")
+    with pytest.raises(ValueError, match="async knobs"):
+        run_rounds(*args, mode="scanned", buffer_size=2)
+    with pytest.raises(ValueError, match="async knobs"):
+        run_rounds(*args, mode="sync", max_concurrency=8)
+    # a forced single-device engine name and an explicit mesh contradict
+    # each other — neither may be silently ignored
+    with pytest.raises(ValueError, match="single-device"):
+        run_rounds(*args, mode="scanned", n_shards=1)
+    with pytest.raises(ValueError, match="single-device"):
+        run_rounds(*args, mode="async-scanned", n_shards=1, buffer_size=2)
+
+
+# --------------------------------------------- forced-engine trajectories
+def _pop(rng, n=128):
+    pop = make_population(rng, n, init_battery_low=15.0,
+                          init_battery_high=90.0)
+    return pop.replace(
+        stat_util=jax.random.uniform(jax.random.fold_in(rng, 1), (n,)) * 10)
+
+
+def _run(rng, mode, **kw):
+    cfg = SelectorConfig(kind="eafl", k=8)
+    return run_rounds(rng, cfg, _pop(rng), SelectorState.create(cfg),
+                      EnergyModel(), MB, STEPS, BS, 5, mode=mode, **kw)
+
+
+def test_forced_sync_engines_are_index_identical(rng):
+    """mode="scanned" vs mode="sharded" (1-shard in-process mesh): the
+    dispatcher's placement choice must never change the trajectory."""
+    p1, s1, t1 = _run(rng, "scanned")
+    p2, s2, t2 = _run(rng, "sharded")
+    assert t1["engine"] == "scanned" and t2["engine"] == "sharded"
+    for f in ("selected", "chosen", "succeeded", "total_dropped"):
+        np.testing.assert_array_equal(np.asarray(t1[f]), np.asarray(t2[f]))
+    np.testing.assert_allclose(np.asarray(p1.battery_pct),
+                               np.asarray(p2.battery_pct), rtol=1e-6)
+    assert float(s1.util_ema) == float(s2.util_ema)
+
+
+def test_forced_async_engines_are_index_identical(rng):
+    kw = dict(buffer_size=3, max_concurrency=9, staleness_power=0.5)
+    p1, s1, t1 = _run(rng, "async-scanned", **kw)
+    p2, s2, t2 = _run(rng, "async-sharded", **kw)
+    assert t1["engine"] == "async-scanned"
+    assert t2["engine"] == "async-sharded"
+    for f in ("completed", "comp_chosen", "succeeded", "staleness",
+              "selected", "chosen", "n_inflight", "total_dropped"):
+        np.testing.assert_array_equal(np.asarray(t1[f]), np.asarray(t2[f]))
+    np.testing.assert_allclose(np.asarray(t1["server_clock"]),
+                               np.asarray(t2["server_clock"]), rtol=0)
+    np.testing.assert_allclose(np.asarray(p1.battery_pct),
+                               np.asarray(p2.battery_pct), rtol=1e-6)
+    assert np.array_equal(np.asarray(p1.dropped), np.asarray(p2.dropped))
+
+
+def test_auto_resolves_to_scanned_on_one_device_and_matches_forced(rng):
+    # this CPU test process sees exactly one device, so auto == scanned
+    _, _, t_auto = _run(rng, "auto")
+    _, _, t_forced = _run(rng, "scanned")
+    assert t_auto["engine"] == "scanned"
+    np.testing.assert_array_equal(np.asarray(t_auto["selected"]),
+                                  np.asarray(t_forced["selected"]))
+
+
+def test_auto_with_async_knobs_runs_async(rng):
+    _, _, t = _run(rng, "auto", buffer_size=3, max_concurrency=9)
+    assert t["engine"] == "async-scanned"
+    assert "staleness" in t and "server_clock" in t
+
+
+def test_explicit_mesh_upgrades_auto_to_sharded(rng):
+    """Handing run_rounds a mesh (or n_shards) is an instruction to use
+    it, even below the cutover."""
+    from repro.launch.mesh import make_client_mesh
+    _, _, t = _run(rng, "auto", mesh=make_client_mesh(1))
+    assert t["engine"] == "sharded"
+    _, _, t = _run(rng, "auto", n_shards=1, buffer_size=2,
+                   max_concurrency=8)
+    assert t["engine"] == "async-sharded"
+
+
+# --------------------------------------------------- FLConfig-level auto
+def _flcfg(**kw):
+    base = dict(
+        selector=SelectorConfig(kind="eafl", k=4),
+        n_clients=16, rounds=4, local_steps=2, batch_size=8,
+        samples_per_client=16, eval_every=4, eval_samples=40,
+        model=reduced(), input_hw=16,
+        sim_model_bytes=85e6, sim_local_steps=400)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def test_run_fl_auto_matches_explicit_modes():
+    """run_fl's default mode="auto" must route a knob-free config to the
+    sync loop and a buffered config to the async loop — bit-identical to
+    forcing the mode explicitly (same seeds, same loop)."""
+    h_auto = run_fl(_flcfg())
+    h_sync = run_fl(_flcfg(), mode="sync")
+    assert h_auto.wall_hours == h_sync.wall_hours
+    assert h_auto.test_acc == h_sync.test_acc
+
+    acfg = dict(buffer_size=2, max_concurrency=6)
+    h_auto = run_fl(_flcfg(**acfg))
+    h_async = run_fl(_flcfg(**acfg), mode="async")
+    assert h_auto.wall_hours == h_async.wall_hours
+    assert h_auto.test_acc == h_async.test_acc
+    # the async loop's wall clock is the event clock, not a round barrier:
+    # histories from the two families genuinely differ
+    assert h_auto.wall_hours != h_sync.wall_hours
+
+
+def test_run_fl_rejects_engine_names():
+    # run_fl is the single-host training loop: an engine name would be
+    # silently collapsed to its family, so it must be rejected instead
+    for name in ENGINES:
+        with pytest.raises(ValueError, match="engine name"):
+            run_fl(_flcfg(), mode=name)
+
+
+def test_run_selection_scanned_reports_engine():
+    pop, traj = run_selection_scanned(_flcfg(), rounds=3)
+    assert traj["engine"] == "scanned"
+    pop, traj = run_selection_scanned(_flcfg(buffer_size=2), rounds=3)
+    assert traj["engine"] == "async-scanned"
+    pop, traj = run_selection_scanned(_flcfg(), rounds=3, n_shards=1)
+    assert traj["engine"] == "sharded"

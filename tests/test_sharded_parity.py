@@ -101,12 +101,13 @@ def test_sharded_scan_matches_scanned_one_shard(rng):
 @pytest.mark.parametrize("devices", ["1", "2", "8"])
 def test_sharded_parity_matrix_subprocess(devices):
     """The full matrix (all kinds, ties, dropped shards, k > n_shard,
-    padded final shard, Pallas leg, scan trajectory) under real multi-shard
+    padded final shard, Pallas leg, scan trajectory, async buffered /
+    sync-limit / deadline event trajectories) under real multi-shard
     meshes."""
     env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
     r = subprocess.run(
         [sys.executable, "-m", "repro.launch.sharded_check",
          "--devices", devices, "--rounds", "3"],
-        capture_output=True, text=True, timeout=420, cwd=REPO, env=env)
+        capture_output=True, text=True, timeout=600, cwd=REPO, env=env)
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
     assert f"parity OK ({devices} shards)" in r.stdout
