@@ -1,3 +1,9 @@
+from __future__ import annotations
+
+from repro.host_devices import force_host_device_count_from_argv
+
+force_host_device_count_from_argv()  # must precede the first jax import
+
 """The paper's evaluation (Sec. 5): EAFL vs Oort vs Random.
 
 One experiment produces every figure: Fig 3a test accuracy, Fig 3b train
@@ -15,12 +21,20 @@ The default ``--mode auto`` goes through the repo's unified dispatcher
 (``repro.federated.resolve_aggregation``): setting an async-only knob is
 the async opt-in, otherwise the run is synchronous.
 
+``--bench-out FILE`` switches to the training-engine throughput bench
+instead: the same eafl workload at population scale (default 10k clients,
+K=100) through the host reference loop, the fused device-resident scan
+(``run_fl_scanned``) and — when more than one device is visible
+(``--devices N`` forges virtual CPU devices) — the sharded twin, stamping
+wall-clock rounds/s, speedups over host, and (simulated) time-to-accuracy
+per engine.
+
 Run standalone for the full-scale version:
   PYTHONPATH=src python -m benchmarks.fl_comparison --rounds 150 --clients 200
   PYTHONPATH=src python -m benchmarks.fl_comparison --buffer-size 5   # async
+  PYTHONPATH=src python -m benchmarks.fl_comparison \
+      --bench-out BENCH_training.json --devices 8      # engine throughput
 """
-from __future__ import annotations
-
 import argparse
 import json
 import os
@@ -111,6 +125,83 @@ def summarize(results: Dict[str, FLHistory],
     return s
 
 
+def run_training_bench(clients: int, k: int, rounds: int, seed: int,
+                       out: str) -> None:
+    """Throughput bench for the synchronous training engines (host loop /
+    fused scan / sharded scan) on one eafl workload.
+
+    Protocol: the fused engines get one warm run (their jitted R-round
+    program is cached per config, so the timed run measures pure
+    execution); the host loop is timed cold because re-tracing its
+    per-round jits on every invocation IS part of its dispatch cost — the
+    fused engines exist to amortize exactly that. All engines produce
+    parity-level-identical trajectories (tests/test_training_engines.py),
+    so the simulated time-to-accuracy is engine-independent and rounds/s
+    is the whole story."""
+    import time
+
+    import jax
+
+    from repro.federated.server import run_fl_scanned, run_fl_sharded
+
+    # light local workload: at K=100 the vmapped cohort SGD + delta stack
+    # is identical work for every engine (Amdahl), so the bench keeps it
+    # small to expose what the engines actually differ in — per-round
+    # host dispatch, transfers and the host loop's per-invocation re-jit
+    cfg = FLConfig(
+        selector=SelectorConfig(kind="eafl", k=k, f=0.25,
+                                pacer_t0=1500.0, pacer_delta=300.0),
+        n_clients=clients, rounds=rounds, local_steps=1, batch_size=4,
+        samples_per_client=4, eval_every=rounds,
+        eval_samples=140, model=reduced(), input_hw=16, seed=seed,
+        init_battery_low=25.0, init_battery_high=95.0,
+        sim_model_bytes=85e6, sim_local_steps=1600)
+
+    engines = {
+        "host": (lambda c: run_fl(c, engine="host"), False),
+        "scanned": (run_fl_scanned, True),
+    }
+    if jax.device_count() > 1:
+        engines["sharded"] = (run_fl_sharded, True)
+
+    results, hists = {}, {}
+    for name, (fn, warm) in engines.items():
+        if warm:
+            fn(cfg)
+        t0 = time.perf_counter()
+        h = fn(cfg)
+        dt = time.perf_counter() - t0
+        n = len(h.round)
+        hists[name] = h
+        results[name] = {
+            "rounds": n, "wall_s": dt, "rounds_per_s": n / dt,
+            "final_acc": h.test_acc[-1], "sim_wall_hours": h.wall_hours[-1],
+        }
+        print(f"{name:8s} {n} rounds in {dt:7.2f}s  "
+              f"-> {n / dt:7.3f} rounds/s  acc={h.test_acc[-1]:.3f}")
+
+    target = 0.9 * max(r["final_acc"] for r in results.values())
+    hhost = results["host"]
+    for name, h in hists.items():
+        # simulated hours to target — engine-independent up to float
+        # tolerance (trajectory parity), recorded per engine as a check
+        results[name]["sim_hours_to_target"] = time_to_accuracy(h, target)
+        results[name]["speedup_vs_host"] = (results[name]["rounds_per_s"]
+                                            / hhost["rounds_per_s"])
+    payload = {
+        "bench": "training_engines", "clients": clients, "k": k,
+        "rounds": rounds, "seed": seed, "devices": jax.device_count(),
+        "acc_target": target, "engines": results,
+    }
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    for name, r in results.items():
+        if name != "host":
+            print(f"{name} speedup vs host: {r['speedup_vs_host']:.2f}x")
+    print(f"wrote {out}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=150,
@@ -133,7 +224,24 @@ def main():
                     help="time-to-accuracy target (default: 0.9x best final)")
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--out", default="experiments/fl_comparison.json")
+    ap.add_argument("--bench-out", default=None, metavar="FILE",
+                    help="run the training-engine throughput bench (host "
+                         "vs fused vs sharded) and write its json here "
+                         "instead of the selector comparison")
+    ap.add_argument("--bench-clients", type=int, default=10000,
+                    help="bench population size (default 10k)")
+    ap.add_argument("--bench-k", type=int, default=100,
+                    help="bench cohort size (default 100)")
+    ap.add_argument("--bench-rounds", type=int, default=8)
+    ap.add_argument("--devices", type=int, default=None,
+                    help="virtual CPU device count for the bench's "
+                         "sharded leg (set before jax init)")
     args = ap.parse_args()
+
+    if args.bench_out is not None:
+        run_training_bench(args.bench_clients, args.bench_k,
+                           args.bench_rounds, args.seed, args.bench_out)
+        return
 
     # resolve once so the emitted json records what actually ran; every
     # async-only CLI knob is an async opt-in under --mode auto (and an

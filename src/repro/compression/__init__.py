@@ -3,7 +3,8 @@ from repro.compression.codecs import (
     CompressionResult,
     compress_delta,
     compression_ratio,
+    wire_bytes,
 )
 
 __all__ = ["CODECS", "CompressionResult", "compress_delta",
-           "compression_ratio"]
+           "compression_ratio", "wire_bytes"]

@@ -98,3 +98,14 @@ def compression_ratio(name: str, **params) -> float:
     if name not in _RATIOS:
         raise KeyError(f"unknown codec {name!r}; known: {sorted(_RATIOS)}")
     return _RATIOS[name](**params)
+
+
+def wire_bytes(model_bytes: float, name: str, **params) -> float:
+    """Bytes a codec ``name``-encoded update actually puts on the wire.
+
+    The single source of truth tying the energy simulation's upload cost to
+    the codec the aggregation path applies in-scan: both the fused training
+    engines and the host loop derive ``up_bytes`` from this, so the energy
+    charged for an upload and the delta that reaches ``weighted_delta``
+    always describe the same compressed payload."""
+    return float(model_bytes) * compression_ratio(name, **params)

@@ -121,6 +121,22 @@ def pad_population(pop: ClientPopulation, multiple: int) -> ClientPopulation:
         for f in _FIELDS})
 
 
+def scatter_stat_util(pop: ClientPopulation, idx, mask,
+                      stat_util) -> ClientPopulation:
+    """Masked functional scatter of per-slot Oort statistical utilities:
+    slot ``i`` writes ``stat_util[i]`` to client ``idx[i]`` iff ``mask[i]``
+    (masked slots route to index ``n`` and are dropped).
+
+    This is the in-carry form shared by the host training loop (mask all
+    True over the compacted cohort) and the fused/sharded training engines
+    (fixed-width slot axis, ``succeeded`` mask) — one definition so the
+    stat-util trajectory cannot drift between engines. The population
+    pytree stays device-resident throughout."""
+    tgt = jnp.where(mask, idx, pop.n)
+    return pop.replace(
+        stat_util=pop.stat_util.at[tgt].set(stat_util, mode="drop"))
+
+
 def round_times(pop: ClientPopulation, model_bytes: float,
                 local_steps: int, batch_size: int,
                 up_bytes: float = None) -> Dict[str, jnp.ndarray]:

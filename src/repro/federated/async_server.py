@@ -18,6 +18,7 @@ applied to the *current* parameters as a damped pseudo-gradient.
 """
 from __future__ import annotations
 
+import functools
 from typing import Dict
 
 import jax
@@ -25,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import SelectorState, jains_index, stat_utility
+from repro.core.clients import scatter_stat_util
 from repro.data import label_restricted_partition, make_test_set
 from repro.federated.aggregation import (
     make_server_optimizer,
@@ -131,7 +133,16 @@ def run_fl_async(cfg: FLConfig, verbose: bool = False) -> FLHistory:
         staleness_power=cfg.staleness_power, deadline_s=cfg.deadline_s,
         up_bytes=up_bytes)
     init_fill = jax.jit(init_fill)
-    engine_step = jax.jit(engine_step)
+    # pop / sel_state / astate are dead after each step (the loop rebinds
+    # them), so donate their buffers instead of holding two copies
+    engine_step = jax.jit(engine_step, donate_argnums=(1, 2, 3))
+
+    # NOTE: params are NOT donated here — the snapshot ring may still hold
+    # this exact pytree for an in-flight stale client; only the optimizer
+    # state (never snapshotted) is safe to free
+    @functools.partial(jax.jit, donate_argnums=(2,))
+    def server_step(p, agg_delta, o_state):
+        return server_update(p, agg_delta, opt, o_state)
 
     @jax.jit
     def test_acc_fn(p):
@@ -151,7 +162,10 @@ def run_fl_async(cfg: FLConfig, verbose: bool = False) -> FLHistory:
     snapshots.retain(0, params, int(np.asarray(chosen0).sum()))
 
     for agg in range(1, cfg.rounds + 1):
-        kloop, kstep, ktrain = jax.random.split(kloop, 3)
+        # dedicated krecharge (prefix-stable split: kloop/kstep/ktrain are
+        # unchanged vs the historical 3-way split) — recharge randomness
+        # must not alias the carry that seeds aggregation agg+1
+        kloop, kstep, ktrain, krecharge = jax.random.split(kloop, 4)
         pop, sel_state, astate, flush, (ridx, rchosen) = engine_step(
             kstep, pop, sel_state, astate, jnp.bool_(True))
 
@@ -166,7 +180,8 @@ def run_fl_async(cfg: FLConfig, verbose: bool = False) -> FLHistory:
         version_now = int(astate.server_version)
         version_before = version_now - (1 if len(completed) else 0)
 
-        pop = _recharge_step(cfg, pop, kloop, float(flush["round_duration"]))
+        pop = _recharge_step(cfg, pop, krecharge,
+                             float(flush["round_duration"]))
 
         succ = completed[succeeded]
         if len(succ) > 0:
@@ -184,11 +199,10 @@ def run_fl_async(cfg: FLConfig, verbose: bool = False) -> FLHistory:
             weights = (np.asarray(pop.n_samples)[succ].astype(np.float32)
                        * agg_w[succeeded])
             agg_delta = weighted_delta(deltas, jnp.asarray(weights))
-            params, opt_state = server_update(params, agg_delta, opt,
-                                              opt_state)
+            params, opt_state = server_step(params, agg_delta, opt_state)
             su = stat_utility(per_sample, jnp.asarray(weights))
-            pop = pop.replace(
-                stat_util=pop.stat_util.at[jnp.asarray(succ)].set(su))
+            pop = scatter_stat_util(pop, jnp.asarray(succ),
+                                    jnp.ones(len(succ), bool), su)
             last_loss = float(mean_losses.mean())
         for v in staleness:
             snapshots.release(version_before - int(v))

@@ -9,6 +9,7 @@ cohort (the TPU-mesh version of the same cohort step lives in repro.launch).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
@@ -29,6 +30,13 @@ from repro.core import (
     select,
     stat_utility,
 )
+from repro.core.clients import pad_population, scatter_stat_util
+from repro.core.selection import (
+    _auto_pallas,
+    _device_select,
+    _rank_bits,
+    _slot_gather,
+)
 from repro.data import label_restricted_partition, make_test_set
 from repro.federated.aggregation import (
     make_server_optimizer,
@@ -37,10 +45,14 @@ from repro.federated.aggregation import (
 )
 from repro.federated.simulation import (
     ENGINES,
-    predicted_round_cost_pct,
+    TRAIN_ENGINES,
+    _shard_round_step,
     resolve_aggregation,
+    resolve_train_engine,
+    round_cost_table,
     run_rounds,
     simulate_round,
+    simulate_round_device,
 )
 from repro.models.resnet import init_resnet, resnet_forward, resnet_loss
 
@@ -132,16 +144,20 @@ def cap_stragglers(outcome, k: int):
     return dataclasses.replace(outcome, succeeded=outcome.succeeded & mask)
 
 
-def _local_train_fn(model_cfg, local_steps: int, batch_size: int, lr: float,
-                    fedprox_mu: float = 0.0, compression: str = "none",
-                    compression_sparsity: float = 0.05,
-                    params_axis: Optional[int] = None):
-    """Builds the jitted, client-vmapped local training function.
+def _cohort_train_fn(model_cfg, local_steps: int, batch_size: int, lr: float,
+                     fedprox_mu: float = 0.0, compression: str = "none",
+                     compression_sparsity: float = 0.05,
+                     params_axis: Optional[int] = None):
+    """Builds the (un-jitted) client-vmapped local training function.
 
     ``params_axis=None`` broadcasts one global parameter pytree to the whole
     cohort (the sync server). ``params_axis=0`` gives every client its own
     stacked start parameters — the async server trains each completer from
     the (possibly stale) model version it actually downloaded.
+
+    The host loops jit this via :func:`_local_train_fn`; the fused training
+    engines inline the same traced body into their round scan so the
+    per-client arithmetic cannot drift between the two paths.
     """
     from repro.compression import compress_delta
 
@@ -182,7 +198,17 @@ def _local_train_fn(model_cfg, local_steps: int, batch_size: int, lr: float,
         return jax.vmap(one_client, in_axes=(params_axis, 0, 0, 0))(
             params, xs, ys, keys)
 
-    return jax.jit(cohort)
+    return cohort
+
+
+def _local_train_fn(model_cfg, local_steps: int, batch_size: int, lr: float,
+                    fedprox_mu: float = 0.0, compression: str = "none",
+                    compression_sparsity: float = 0.05,
+                    params_axis: Optional[int] = None):
+    """Jitted facade over :func:`_cohort_train_fn` for the host loops."""
+    return jax.jit(_cohort_train_fn(
+        model_cfg, local_steps, batch_size, lr, fedprox_mu, compression,
+        compression_sparsity, params_axis))
 
 
 @dataclass
@@ -205,14 +231,19 @@ class FLHistory:
                 for k, v in self.__dict__.items()}
 
 
-def _recharge_step(cfg: FLConfig, pop: ClientPopulation, kloop,
+def _recharge_step(cfg: FLConfig, pop: ClientPopulation, krecharge,
                    duration_s: float) -> ClientPopulation:
     """Beyond-paper recharging: a random ``plugged_frac`` of devices gains
     charge over the round's wall time; recovered dropouts rejoin. Shared by
-    the sync and async server loops."""
+    the sync and async server loops.
+
+    ``krecharge`` must be a key dedicated to this round's recharge draw —
+    never a key that is also carried into the next round's split (that
+    would correlate the plugged-device draw with round r+1's selection and
+    training randomness)."""
     if cfg.recharge_pct_per_hour <= 0.0:
         return pop
-    kplug = jax.random.fold_in(kloop, 7)
+    kplug = jax.random.fold_in(krecharge, 7)
     plugged = jax.random.bernoulli(kplug, cfg.plugged_frac,
                                    (cfg.n_clients,))
     gain = cfg.recharge_pct_per_hour * duration_s / 3600.0
@@ -237,7 +268,7 @@ def _engine_setup(cfg: FLConfig, kpop, model_bytes: float):
     """Population + simulated-workload knobs shared by :func:`run_fl` and
     :func:`run_selection_scanned` — one definition so the scanned path's
     trajectory-parity claim can't drift from the host loop."""
-    from repro.compression import compression_ratio
+    from repro.compression import wire_bytes
 
     pop = make_population(kpop, cfg.n_clients,
                           init_battery_low=cfg.init_battery_low,
@@ -246,15 +277,14 @@ def _engine_setup(cfg: FLConfig, kpop, model_bytes: float):
     sim_steps = cfg.sim_local_steps or cfg.local_steps
     codec_params = ({"sparsity": cfg.compression_sparsity}
                     if cfg.compression == "topk" else {})
-    up_bytes = model_bytes * compression_ratio(cfg.compression,
-                                               **codec_params)
+    up_bytes = wire_bytes(model_bytes, cfg.compression, **codec_params)
     energy_model = EnergyModel(busy_fraction=cfg.idle_busy_fraction)
     return pop, sim_steps, up_bytes, energy_model
 
 
 def run_fl(cfg: FLConfig, verbose: bool = False,
-           mode: str = "auto") -> FLHistory:
-    """Run the full FL experiment (REAL training on one host device).
+           mode: str = "auto", engine: str = "auto") -> FLHistory:
+    """Run the full FL experiment (REAL training).
 
     ``mode`` resolves through the same dispatcher as the engine-level
     :func:`repro.federated.run_rounds` (``resolve_aggregation``):
@@ -270,18 +300,32 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
     the ``buffer_size == max_concurrency == k, staleness_power=0`` limit
     the async loop's selection/battery/dropout trajectory reproduces the
     sync loop's).
+
+    ``engine`` picks the synchronous *training* engine through
+    :func:`repro.federated.resolve_train_engine`: ``"host"`` is this
+    module's reference Python round loop, ``"scanned"`` the fully fused
+    device-resident scan (:func:`run_fl_scanned`) and ``"sharded"`` its
+    `clients`-mesh twin (:func:`run_fl_sharded`); all three produce the
+    same trajectory within float tolerance (``tests/
+    test_training_engines.py``). The async mode has a single (host) event
+    loop, so forcing a device engine there is an error.
     """
     if mode in ENGINES:
-        # run_fl is the single-host training loop — it has no sharded
-        # variant, so accepting an engine name here would silently run
-        # something else than asked for
+        # run_fl is the training front door — selection-only engine names
+        # go through repro.federated.run_rounds, not here
         raise ValueError(
             f"run_fl takes 'auto'/'sync'/'async', not the engine name "
             f"{mode!r}; force engines via repro.federated.run_rounds")
     mode = resolve_aggregation(mode, cfg.buffer_size, cfg.max_concurrency)
+    engine = resolve_train_engine(
+        cfg.n_clients, jax.device_count(), mode=mode, engine=engine)
     if mode == "async":
         from repro.federated.async_server import run_fl_async
         return run_fl_async(cfg, verbose=verbose)
+    if engine == "scanned":
+        return run_fl_scanned(cfg, verbose=verbose)
+    if engine == "sharded":
+        return run_fl_sharded(cfg, verbose=verbose)
     key = jax.random.PRNGKey(cfg.seed)
     kpop, kdata, kmodel, ktest, kloop = jax.random.split(key, 5)
 
@@ -310,6 +354,21 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
         logits = resnet_forward(cfg.model, p, test["x"])
         return (jnp.argmax(logits, -1) == test["y"]).mean()
 
+    # the round-invariant (time, cost) table: both columns depend only on
+    # immutable population fields, so the per-round predicted_round_cost_pct
+    # recompute was pure dispatch overhead — hoist it through the engines'
+    # round_cost_table and reuse the cost column as the selector's
+    # predicted cost every round
+    t_total, pred_cost = round_cost_table(pop, energy_model, model_bytes,
+                                          sim_steps, cfg.batch_size, up_bytes)
+    del t_total  # the host simulate_round recomputes its own copy
+
+    @functools.partial(jax.jit, donate_argnums=(0, 2))
+    def server_step(p, agg, o_state):
+        # donating params/opt_state means the loop never holds two copies
+        # of model + optimizer state across the update
+        return server_update(p, agg, opt, o_state)
+
     hist = FLHistory()
     # evaluate the untrained model once so pre-first-eval rounds report a
     # real accuracy instead of a fake 0.0 (plots / time-to-accuracy curves)
@@ -319,10 +378,11 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
     last_loss = float("nan")
 
     for rnd in range(1, cfg.rounds + 1):
-        kloop, ksel, ktrain = jax.random.split(kloop, 3)
-        pred_cost = predicted_round_cost_pct(
-            pop, energy_model, model_bytes, sim_steps, cfg.batch_size,
-            up_bytes)
+        # krecharge is a dedicated per-round key: the recharge draw must
+        # not share randomness with the carry that seeds round r+1
+        # (prefix-stable threefry keeps kloop/ksel/ktrain identical to the
+        # historical 3-way split, so only recharge draws moved)
+        kloop, ksel, ktrain, krecharge = jax.random.split(kloop, 4)
         n_pick = int(np.ceil(cfg.selector.k * cfg.overcommit))
         sel_cfg = cfg.selector if n_pick == cfg.selector.k else \
             replace_selector_k(cfg.selector, n_pick)
@@ -340,7 +400,7 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
             # dropout accounting above
             outcome = cap_stragglers(outcome, cfg.selector.k)
 
-        pop = _recharge_step(cfg, pop, kloop, outcome.round_duration)
+        pop = _recharge_step(cfg, pop, krecharge, outcome.round_duration)
 
         succ = outcome.selected[outcome.succeeded]
         if len(succ) > 0:
@@ -350,12 +410,12 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
             deltas, per_sample, mean_losses = local_train(params, xs, ys, keys)
             weights = np.asarray(pop.n_samples)[succ].astype(np.float32)
             agg = weighted_delta(deltas, jnp.asarray(weights))
-            params, opt_state = server_update(params, agg, opt, opt_state)
+            params, opt_state = server_step(params, agg, opt_state)
             # update Oort statistical utility for participants (functional
             # scatter — the population pytree stays device-resident)
             su = stat_utility(per_sample, jnp.asarray(weights))
-            pop = pop.replace(
-                stat_util=pop.stat_util.at[jnp.asarray(succ)].set(su))
+            pop = scatter_stat_util(pop, jnp.asarray(succ),
+                                    jnp.ones(len(succ), bool), su)
             last_loss = float(mean_losses.mean())
 
         wall += outcome.round_duration / 3600.0
@@ -372,6 +432,505 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
             print(f"[{cfg.selector.kind}] r={rnd} acc={hist.test_acc[-1]:.3f} "
                   f"loss={last_loss:.3f} drop={cum_drop} "
                   f"fair={hist.fairness[-1]:.3f} wall={wall:.2f}h")
+    return hist
+
+
+# ------------------------------------------------------- fused training scan
+# The device-resident training engine: one jitted lax.scan advances the FULL
+# round — selection → energy/dropout simulation → masked fixed-width cohort
+# local SGD → compressed aggregation → server update → eval — with params,
+# server optimizer state, the population (incl. Oort stat_util) and the RNG
+# chain all in the scan carry. Zero per-round host transfers: the host sees
+# one device call per experiment instead of ~10 dispatches per round.
+#
+# Parity contract with the host loop (tests/test_training_engines.py):
+#   * the RNG chain is the host chain: `kloop, ksel, ktrain, krecharge =
+#     split(kloop, 4)` per round, and the slot with success-rank j trains
+#     with `split(ktrain, n_slots)[j]` — partitionable threefry is
+#     prefix-stable, so this equals the host's dynamic
+#     `split(ktrain, n_succ)[j]` draw bitwise;
+#   * failed/abandoned slots train dead weight: their deltas enter
+#     `weighted_delta` with weight exactly 0.0, which contributes exactly
+#     0.0 to the normalized tensordot — masked fixed-width aggregation is
+#     arithmetic-identical to the host's compacted dynamic cohort;
+#   * the over-provisioning cap is `lax.top_k` over (-duration | mask),
+#     the device twin of `cap_stragglers`' argsort-and-filter;
+#   * the server update is computed unconditionally but gated with a
+#     `where(any_succ, ...)` — the adaptive optimizers are NOT no-ops on
+#     zero deltas (yogi's sign-based v update, bias-correction t), and the
+#     host loop skips the update entirely on empty cohorts;
+#   * width-sensitive stat reductions happen OUTSIDE the scan, from the
+#     per-slot masks/losses in the trajectory (`_history_from_traj`):
+#     participation in f64 and train_loss as the same compacted-width f32
+#     mean the host takes — an in-scan reduction over the fixed slot axis
+#     would round differently whenever n_slots != n_succ.
+# One host-visible difference remains: the host loop `break`s when
+# selection returns no candidates; the scan always runs `rounds` rounds
+# (the extra rounds are inert — empty cohort, gated update).
+
+
+@functools.lru_cache(maxsize=8)
+def _fused_runner(model_cfg: ResNetConfig, sel_cfg: SelectorConfig,
+                  agg_k: int, energy_model: EnergyModel,
+                  deadline_s: Optional[float], rounds: int, eval_every: int,
+                  local_steps: int, batch_size: int, client_lr: float,
+                  fedprox_mu: float, compression: str, sparsity: float,
+                  server_opt: str, server_lr: float,
+                  recharge_pct_per_hour: float, plugged_frac: float,
+                  rejoin_pct: float, use_pallas: bool, interpret: bool):
+    """Cached jitted R-round fused training scan (hashable statics only,
+    mirroring ``simulation._scanned_runner``). ``sel_cfg.k`` is the
+    over-provisioned slot count ``ceil(k * overcommit)``; ``agg_k`` the
+    aggregation cap (the pre-overcommit k)."""
+    opt = make_server_optimizer(server_opt, server_lr)
+    cohort = _cohort_train_fn(model_cfg, local_steps, batch_size, client_lr,
+                              fedprox_mu, compression, sparsity)
+
+    @functools.partial(jax.jit, donate_argnums=(1, 2, 3, 4))
+    def run(kloop, params, opt_state, pop, st, data_x, data_y,
+            test_x, test_y, t_total, cost):
+        n = pop.n
+
+        def eval_acc(p):
+            logits = resnet_forward(model_cfg, p, test_x)
+            return (jnp.argmax(logits, -1) == test_y).mean()
+
+        init_acc = eval_acc(params)
+
+        def scan_step(carry, do_eval):
+            params, opt_state, pop, st, kloop, last_acc = carry
+            kloop, ksel, ktrain, krecharge = jax.random.split(kloop, 4)
+            idx, chosen, st = _device_select(ksel, sel_cfg, st, pop, cost,
+                                             use_pallas, interpret)
+            sel_mask = jnp.zeros((n,), bool).at[
+                jnp.where(chosen, idx, n)].set(True, mode="drop")
+            pop, dev = simulate_round_device(pop, sel_mask, t_total, cost,
+                                             st.round, energy_model,
+                                             deadline_s)
+            n_slots = idx.shape[0]
+            slot_succ = dev.succeeded[idx] & chosen
+            if n_slots > agg_k:
+                # keep the fastest agg_k successful slots (top_k breaks
+                # duration ties lowest-slot-first, like the host argsort)
+                g = jnp.where(slot_succ, -t_total[idx], -jnp.inf)
+                _, keep_slots = jax.lax.top_k(g, agg_k)
+                keep = jnp.zeros((n_slots,), bool).at[keep_slots].set(True)
+                mask = slot_succ & keep
+            else:
+                mask = slot_succ
+            if recharge_pct_per_hour > 0.0:
+                kplug = jax.random.fold_in(krecharge, 7)
+                plugged = jax.random.bernoulli(kplug, plugged_frac, (n,))
+                gain = recharge_pct_per_hour * dev.round_duration / 3600.0
+                battery = jnp.clip(pop.battery_pct + plugged * gain,
+                                   0.0, 100.0)
+                rejoin = pop.dropped & (battery >= rejoin_pct)
+                pop = pop.replace(battery_pct=battery,
+                                  dropped=pop.dropped & ~rejoin)
+            # masked fixed-width cohort: every slot trains, dead slots are
+            # zero-weighted out of the aggregation; success-rank key
+            # assignment reproduces the host's dynamic split bitwise
+            ranks = jnp.clip(jnp.cumsum(mask) - 1, 0, n_slots - 1)
+            keys = jax.random.split(ktrain, n_slots)[ranks]
+            deltas, per_sample, mean_losses = cohort(
+                params, data_x[idx], data_y[idx], keys)
+            w = jnp.where(mask, pop.n_samples[idx].astype(jnp.float32), 0.0)
+            agg = weighted_delta(deltas, w)
+            new_params, new_opt = server_update(params, agg, opt, opt_state)
+            any_succ = mask.any()
+            params = jax.tree.map(
+                lambda a, b: jnp.where(any_succ, a, b), new_params, params)
+            opt_state = jax.tree.map(
+                lambda a, b: jnp.where(any_succ, a, b), new_opt, opt_state)
+            su = stat_utility(per_sample, w)
+            pop = scatter_stat_util(pop, idx, mask, su)
+            last_acc = jax.lax.cond(do_eval, eval_acc,
+                                    lambda _: last_acc, params)
+            out = {
+                "selected": idx,
+                "chosen": chosen,
+                "succeeded": mask,
+                "round_duration": dev.round_duration,
+                "new_dropouts": dev.new_dropouts,
+                "energy_spent_pct": dev.energy_spent_pct,
+                "mean_battery": jnp.mean(pop.battery_pct),
+                "fairness": jains_index(pop.times_selected),
+                # per-slot losses (masked); the host-facing train_loss is
+                # reduced OUTSIDE the scan over the compacted slots so the
+                # reduction width (and hence f32 rounding) matches the host
+                # loop exactly even when n_slots > agg_k (overcommit)
+                "slot_losses": jnp.where(mask, mean_losses, 0.0),
+                "test_acc": last_acc,
+            }
+            return (params, opt_state, pop, st, kloop, last_acc), out
+
+        rr = jnp.arange(1, rounds + 1)
+        do_eval = ((rr % eval_every) == 0) | (rr == rounds)
+        carry0 = (params, opt_state, pop, st, kloop, init_acc)
+        carry, traj = jax.lax.scan(scan_step, carry0, do_eval)
+        params, opt_state, pop, st = carry[:4]
+        return params, opt_state, pop, st, init_acc, traj
+
+    return run
+
+
+def _fused_setup(cfg: FLConfig):
+    """Shared data/model/population setup for the fused training engines —
+    the exact :func:`run_fl` preamble (same key split, same builders), so
+    engine trajectories start from identical state."""
+    key = jax.random.PRNGKey(cfg.seed)
+    kpop, kdata, kmodel, ktest, kloop = jax.random.split(key, 5)
+    data = label_restricted_partition(
+        kdata, cfg.n_clients, cfg.samples_per_client, cfg.n_classes,
+        cfg.labels_per_client, cfg.input_hw, noise=cfg.data_noise)
+    test = make_test_set(ktest, cfg.eval_samples, cfg.n_classes, cfg.input_hw,
+                         noise=cfg.data_noise)
+    params = init_resnet(kmodel, cfg.model)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    model_bytes = cfg.sim_model_bytes or (n_params * 4.0)
+    opt = make_server_optimizer(cfg.server_opt, cfg.server_lr)
+    opt_state = opt.init(params)
+    pop, sim_steps, up_bytes, energy_model = _engine_setup(cfg, kpop,
+                                                           model_bytes)
+    return (kloop, data, test, params, opt_state, pop, sim_steps, up_bytes,
+            energy_model, model_bytes)
+
+
+def _fused_statics(cfg: FLConfig) -> tuple:
+    """The hashable static tail shared by :func:`_fused_runner` and
+    :func:`_sharded_fused_runner`."""
+    n_pick = int(np.ceil(cfg.selector.k * cfg.overcommit))
+    sel_cfg = cfg.selector if n_pick == cfg.selector.k else \
+        replace_selector_k(cfg.selector, n_pick)
+    return (sel_cfg, int(cfg.selector.k),
+            EnergyModel(busy_fraction=cfg.idle_busy_fraction),
+            None if cfg.deadline_s is None else float(cfg.deadline_s),
+            int(cfg.rounds), int(cfg.eval_every), int(cfg.local_steps),
+            int(cfg.batch_size), float(cfg.client_lr), float(cfg.fedprox_mu),
+            cfg.compression, float(cfg.compression_sparsity),
+            cfg.server_opt, float(cfg.server_lr),
+            float(cfg.recharge_pct_per_hour), float(cfg.plugged_frac),
+            float(cfg.rejoin_pct))
+
+
+def _reject_async_knobs(cfg: FLConfig, name: str) -> None:
+    if cfg.buffer_size is not None or cfg.max_concurrency is not None:
+        raise ValueError(
+            f"{name} is a synchronous engine; cfg.buffer_size / "
+            f"cfg.max_concurrency opt into the async server — use "
+            f"run_fl(cfg) and let the dispatcher route it")
+
+
+def _history_from_traj(cfg: FLConfig, init_acc: float, traj) -> FLHistory:
+    """Assemble :class:`FLHistory` from a fused-engine trajectory. The only
+    host float work is the f64 wall-clock accumulation, done exactly like
+    the host loop (per-round /3600 then cumulative sum)."""
+    hist = FLHistory(init_acc=init_acc)
+    dur = np.asarray(traj["round_duration"])
+    hist.round = list(range(1, cfg.rounds + 1))
+    hist.wall_hours = [float(x) for x in
+                       np.cumsum(dur.astype(np.float64) / 3600.0)]
+    hist.round_duration = [float(x) for x in dur]
+    hist.cum_dropouts = [int(x) for x in
+                         np.cumsum(np.asarray(traj["new_dropouts"]))]
+    # participation in f64 from the per-slot masks — bitwise-equal to the
+    # host loop's `float(outcome.succeeded.mean())` over the cohort
+    n_succ = np.asarray(traj["succeeded"]).sum(axis=1).astype(np.float64)
+    n_sel = np.asarray(traj["chosen"]).sum(axis=1).astype(np.float64)
+    hist.participation = [float(x) for x in
+                          n_succ / np.maximum(n_sel, 1.0)]
+    # train_loss: reduce the compacted per-slot losses with the SAME jnp
+    # f32 mean the host loop uses (`mean_losses.mean()` over the dynamic
+    # cohort) — reducing in-scan over the fixed slot axis would associate
+    # the f32 sum differently whenever n_slots != n_succ. Empty rounds
+    # retain the previous loss, like the host loop's `last_loss`.
+    slot_losses = np.asarray(traj["slot_losses"])
+    succ_mask = np.asarray(traj["succeeded"])
+    last_loss = float("nan")
+    hist.train_loss = []
+    for r in range(slot_losses.shape[0]):
+        m = succ_mask[r]
+        if m.any():
+            last_loss = float(jnp.asarray(slot_losses[r][m]).mean())
+        hist.train_loss.append(last_loss)
+    for name in ("test_acc", "fairness", "mean_battery"):
+        setattr(hist, name, [float(x) for x in np.asarray(traj[name])])
+    return hist
+
+
+def _print_fused_history(cfg: FLConfig, hist: FLHistory) -> None:
+    """Post-hoc twin of the host loop's every-10-rounds progress line (the
+    fused engines have nothing to print per round — that's the point)."""
+    for rnd in range(10, cfg.rounds + 1, 10):
+        i = rnd - 1
+        print(f"[{cfg.selector.kind}] r={rnd} acc={hist.test_acc[i]:.3f} "
+              f"loss={hist.train_loss[i]:.3f} drop={hist.cum_dropouts[i]} "
+              f"fair={hist.fairness[i]:.3f} wall={hist.wall_hours[i]:.2f}h")
+
+
+def run_fl_scanned(cfg: FLConfig, verbose: bool = False) -> FLHistory:
+    """:func:`run_fl`, fully device-resident: all ``cfg.rounds`` rounds of
+    REAL training run inside one jitted ``lax.scan`` (selection → energy
+    simulation → masked cohort local SGD → compressed aggregation → server
+    update → eval), with zero per-round host transfers. Trajectory parity
+    with the host loop is the contract — see the module comment above
+    :func:`_fused_runner` and ``tests/test_training_engines.py``."""
+    _reject_async_knobs(cfg, "run_fl_scanned")
+    (kloop, data, test, params, opt_state, pop, sim_steps, up_bytes,
+     energy_model, model_bytes) = _fused_setup(cfg)
+    t_total, cost = round_cost_table(pop, energy_model, model_bytes,
+                                     sim_steps, cfg.batch_size, up_bytes)
+    run = _fused_runner(cfg.model, *_fused_statics(cfg),
+                        _auto_pallas(cfg.n_clients, None),
+                        jax.default_backend() != "tpu")
+    params, opt_state, pop, st, init_acc, traj = run(
+        kloop, params, opt_state, pop,
+        SelectorState.create(cfg.selector).canonical(),
+        data["x"], data["y"], test["x"], test["y"], t_total, cost)
+    hist = _history_from_traj(cfg, float(init_acc), traj)
+    if verbose:
+        _print_fused_history(cfg, hist)
+    return hist
+
+
+# ---------------------------------------------------- sharded training twin
+# run_fl_scanned over the 1-D `clients` mesh the selection tournament lives
+# on. Per round, inside one shard_map body:
+#   selection+simulation run shard-local (`simulation._shard_round_step`,
+#   index-for-index identical to the single-device step), the cohort's
+#   per-slot training data is reassembled with one-owner-per-slot psum
+#   gathers, and the slot axis is then split EVENLY across shards — each
+#   shard runs local SGD for n_slots/S slots (true data parallelism over
+#   the cohort) and contributes its partial weighted delta via a psum.
+# The server update + eval run on replicated params in the outer scan body.
+#
+# Parity contract vs run_fl_scanned: selection indices, success masks and
+# battery/dropout trajectories are index-for-index / bitwise identical
+# (same rank-bit streams, same elementwise battery math, exactly
+# associative pmax durations); the aggregated delta differs in the last
+# ulp (psum of per-shard partial tensordots reorders the weighted
+# reduction), so params — and everything downstream (acc/loss/stat-util)
+# — match within float tolerance rather than bitwise
+# (`launch/sharded_check.py --train`).
+
+
+@functools.lru_cache(maxsize=4)
+def _sharded_fused_runner(model_cfg: ResNetConfig, sel_cfg: SelectorConfig,
+                          agg_k: int, energy_model: EnergyModel,
+                          deadline_s: Optional[float], rounds: int,
+                          eval_every: int, local_steps: int, batch_size: int,
+                          client_lr: float, fedprox_mu: float,
+                          compression: str, sparsity: float,
+                          server_opt: str, server_lr: float,
+                          recharge_pct_per_hour: float, plugged_frac: float,
+                          rejoin_pct: float, use_pallas: bool,
+                          interpret: bool, mesh, n_real: int,
+                          axis_name: str):
+    """Cached jitted R-round sharded fused training scan (statics mirror
+    :func:`_fused_runner` plus the mesh geometry)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    opt = make_server_optimizer(server_opt, server_lr)
+    cohort = _cohort_train_fn(model_cfg, local_steps, batch_size, client_lr,
+                              fedprox_mu, compression, sparsity)
+    n_shards = mesh.shape[axis_name]
+    n_padded = n_real + (-n_real) % n_shards
+    n_slots = min(sel_cfg.k, n_real)
+    pad_s = (-n_slots) % n_shards
+    n_slots_pad = n_slots + pad_s
+    n_per = n_slots_pad // n_shards
+    spec, rep = P(axis_name), P()
+
+    def _pad_slots(a, fill=0):
+        if pad_s == 0:
+            return a
+        return jnp.concatenate(
+            [a, jnp.full((pad_s,) + a.shape[1:], fill, a.dtype)])
+
+    def body(ksel, ktrain, st, params, pop, x_loc, y_loc, t_total, cost,
+             bits, u_rech):
+        n_loc = cost.shape[0]
+        shard_i = jax.lax.axis_index(axis_name)
+        base = (shard_i * n_loc).astype(jnp.int32)
+        pop, st, idx, chosen, slot_succ, dev = _shard_round_step(
+            ksel, st, pop, t_total, cost, bits, sel_cfg=sel_cfg,
+            energy_model=energy_model, deadline_s=deadline_s,
+            use_pallas=use_pallas, interpret=interpret,
+            axis_name=axis_name, n_real=n_real)
+        if n_slots > agg_k:
+            slot_dur = _slot_gather(t_total, idx, chosen, base, axis_name)
+            g = jnp.where(slot_succ, -slot_dur, -jnp.inf)
+            _, keep_slots = jax.lax.top_k(g, agg_k)
+            keep = jnp.zeros((n_slots,), bool).at[keep_slots].set(True)
+            mask = slot_succ & keep
+        else:
+            mask = slot_succ
+        if recharge_pct_per_hour > 0.0:
+            # pre-generated sharded uniform stream (prefix-stable: the
+            # first n_real draws equal the single-device bernoulli's);
+            # pad clients are masked out so they can never recharge-rejoin
+            real = (base + jnp.arange(n_loc)) < n_real
+            plugged = (u_rech < plugged_frac) & real
+            gain = recharge_pct_per_hour * dev.round_duration / 3600.0
+            battery = jnp.clip(pop.battery_pct + plugged * gain, 0.0, 100.0)
+            rejoin = pop.dropped & (battery >= rejoin_pct)
+            pop = pop.replace(battery_pct=battery,
+                              dropped=pop.dropped & ~rejoin)
+        # --- cohort gather: one shard owns each slot's client ------------
+        own = (idx >= base) & (idx < base + n_loc)
+        loc = jnp.clip(idx - base, 0, n_loc - 1)
+
+        def gather_data(a_loc):
+            shape = (own.shape[0],) + (1,) * (a_loc.ndim - 1)
+            vals = jnp.where(own.reshape(shape), a_loc[loc],
+                             jnp.zeros((), a_loc.dtype))
+            return jax.lax.psum(vals, axis_name)
+
+        xg = _pad_slots(gather_data(x_loc))          # (n_slots_pad, M, ...)
+        yg = _pad_slots(gather_data(y_loc))
+        wg = _slot_gather(pop.n_samples, idx, mask, base, axis_name)
+        ranks = jnp.clip(jnp.cumsum(mask) - 1, 0, n_slots - 1)
+        keys = _pad_slots(jax.random.split(ktrain, n_slots)[ranks])
+        wg_p = _pad_slots(wg)
+        # --- even slot split: shard i trains slots [i*n_per, (i+1)*n_per)
+        sl = shard_i * n_per
+        x_sl = jax.lax.dynamic_slice_in_dim(xg, sl, n_per)
+        y_sl = jax.lax.dynamic_slice_in_dim(yg, sl, n_per)
+        k_sl = jax.lax.dynamic_slice_in_dim(keys, sl, n_per)
+        w_sl = jax.lax.dynamic_slice_in_dim(wg_p, sl, n_per)
+        deltas, per_sample, mean_losses = cohort(params, x_sl, y_sl, k_sl)
+        # partial weighted delta: normalize by the GLOBAL weight sum, then
+        # psum the per-shard partial tensordots (weighted_delta's math,
+        # reduction split across shards)
+        wn = wg_p / jnp.maximum(jnp.sum(wg), 1e-9)
+        wn_sl = jax.lax.dynamic_slice_in_dim(wn, sl, n_per)
+        agg = jax.tree.map(
+            lambda d: jax.lax.psum(
+                jnp.tensordot(wn_sl.astype(d.dtype), d, axes=1), axis_name),
+            deltas)
+        # replicated per-slot stats (all_gather in shard order == slot order)
+        su = jax.lax.all_gather(
+            stat_utility(per_sample, w_sl), axis_name).reshape(-1)
+        losses = jax.lax.all_gather(mean_losses, axis_name).reshape(-1)
+        mask_p = _pad_slots(mask)
+        own_p = _pad_slots(own)
+        loc_p = _pad_slots(loc)
+        pop = scatter_stat_util(pop, loc_p, mask_p & own_p, su)
+        ts = pop.times_selected.astype(jnp.float32)
+        s1 = jax.lax.psum(jnp.sum(ts), axis_name)
+        s2 = jax.lax.psum(jnp.sum(jnp.square(ts)), axis_name)
+        stats = {
+            "selected": idx,
+            "chosen": chosen,
+            "succeeded": mask,
+            "round_duration": dev.round_duration,
+            "new_dropouts": dev.new_dropouts,
+            "energy_spent_pct": dev.energy_spent_pct,
+            "mean_battery": (jax.lax.psum(jnp.sum(pop.battery_pct),
+                                          axis_name) / n_real),
+            "fairness": jnp.where(s2 > 0,
+                                  jnp.square(s1) / (n_real * s2), 1.0),
+            "any_succ": mask.any(),
+            # masked per-slot losses; train_loss is reduced host-side over
+            # the compacted slots (see _fused_runner / _history_from_traj)
+            "slot_losses": jnp.where(mask, losses[:n_slots], 0.0),
+        }
+        return pop, st, agg, stats
+
+    smapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(rep, rep, rep, rep, spec, spec, spec, spec, spec, spec,
+                  spec),
+        out_specs=(spec, rep, rep, rep), check_rep=False)
+
+    @functools.partial(jax.jit, donate_argnums=(1, 2, 3, 4))
+    def run(kloop, params, opt_state, pop, st, data_x, data_y,
+            test_x, test_y, t_total, cost):
+        def eval_acc(p):
+            logits = resnet_forward(model_cfg, p, test_x)
+            return (jnp.argmax(logits, -1) == test_y).mean()
+
+        init_acc = eval_acc(params)
+        shard = NamedSharding(mesh, spec)
+
+        def scan_step(carry, do_eval):
+            params, opt_state, pop, st, kloop, last_acc = carry
+            kloop, ksel, ktrain, krecharge = jax.random.split(kloop, 4)
+            # prefix-stable sharded streams: rank bits for selection, a
+            # uniform stream for the recharge bernoulli (u < p)
+            bits = jax.lax.with_sharding_constraint(
+                _rank_bits(ksel, n_padded), shard)
+            kplug = jax.random.fold_in(krecharge, 7)
+            u_rech = jax.lax.with_sharding_constraint(
+                jax.random.uniform(kplug, (n_padded,)), shard)
+            pop, st, agg, stats = smapped(ksel, ktrain, st, params, pop,
+                                          data_x, data_y, t_total, cost,
+                                          bits, u_rech)
+            new_params, new_opt = server_update(params, agg, opt, opt_state)
+            any_succ = stats.pop("any_succ")
+            params = jax.tree.map(
+                lambda a, b: jnp.where(any_succ, a, b), new_params, params)
+            opt_state = jax.tree.map(
+                lambda a, b: jnp.where(any_succ, a, b), new_opt, opt_state)
+            last_acc = jax.lax.cond(do_eval, eval_acc,
+                                    lambda _: last_acc, params)
+            out = dict(stats, test_acc=last_acc)
+            return (params, opt_state, pop, st, kloop, last_acc), out
+
+        rr = jnp.arange(1, rounds + 1)
+        do_eval = ((rr % eval_every) == 0) | (rr == rounds)
+        carry0 = (params, opt_state, pop, st, kloop, init_acc)
+        carry, traj = jax.lax.scan(scan_step, carry0, do_eval)
+        params, opt_state, pop, st = carry[:4]
+        return params, opt_state, pop, st, init_acc, traj
+
+    return run
+
+
+def run_fl_sharded(cfg: FLConfig, verbose: bool = False, mesh=None,
+                   n_shards: Optional[int] = None) -> FLHistory:
+    """:func:`run_fl_scanned` on the `clients` mesh: population, data and
+    simulation shard-resident, cohort local SGD data-parallel across
+    shards, weighted deltas psum-merged. Defaults to a mesh over all
+    visible devices (virtual CPU devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count``)."""
+    from repro.launch.mesh import make_client_mesh
+    from repro.launch.sharding import population_sharding
+
+    _reject_async_knobs(cfg, "run_fl_sharded")
+    if mesh is None:
+        mesh = make_client_mesh(n_shards)
+    axis_name = mesh.axis_names[0]
+    (kloop, data, test, params, opt_state, pop, sim_steps, up_bytes,
+     energy_model, model_bytes) = _fused_setup(cfg)
+    n_real = pop.n
+    sharding = population_sharding(mesh, axis_name)
+    pop = jax.device_put(pad_population(pop, mesh.shape[axis_name]),
+                         sharding)
+    pad = pop.n - n_real
+
+    def pad_clients(a):
+        if pad:
+            a = jnp.concatenate(
+                [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)])
+        return jax.device_put(a, sharding)
+
+    data_x, data_y = pad_clients(data["x"]), pad_clients(data["y"])
+    t_total, cost = round_cost_table(pop, energy_model, model_bytes,
+                                     sim_steps, cfg.batch_size, up_bytes,
+                                     sharding=sharding)
+    run = _sharded_fused_runner(cfg.model, *_fused_statics(cfg),
+                                _auto_pallas(n_real, None),
+                                jax.default_backend() != "tpu",
+                                mesh, n_real, axis_name)
+    params, opt_state, fpop, st, init_acc, traj = run(
+        kloop, params, opt_state, pop,
+        SelectorState.create(cfg.selector).canonical(),
+        data_x, data_y, test["x"], test["y"], t_total, cost)
+    hist = _history_from_traj(cfg, float(init_acc), traj)
+    if verbose:
+        _print_fused_history(cfg, hist)
     return hist
 
 

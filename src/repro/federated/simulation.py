@@ -1170,6 +1170,39 @@ SYNC_ENGINES = ("scanned", "sharded")
 ASYNC_ENGINES = ("async-scanned", "async-sharded")
 ENGINES = SYNC_ENGINES + ASYNC_ENGINES
 
+#: Training engines behind the ``run_fl`` front door: the reference host
+#: Python round loop, the fused device-resident scan
+#: (``run_fl_scanned``), and its `clients`-mesh shard_map twin
+#: (``run_fl_sharded``).
+TRAIN_ENGINES = ("host", "scanned", "sharded")
+
+
+def resolve_train_engine(n: int, device_count: Optional[int] = None, *,
+                         mode: str = "sync", engine: str = "auto",
+                         cutover_n: Optional[int] = None) -> str:
+    """Pick the *training* engine for ``run_fl``.
+
+    Mirrors :func:`resolve_engine`'s placement logic for the end-to-end
+    training loop: an explicit ``engine`` name passes through (validated
+    against the aggregation family — the async server has a single host
+    event loop, so only ``"host"`` is legal there); ``"auto"`` keeps the
+    reference host loop (the trajectory every test and plot was calibrated
+    on), which callers upgrade to ``"scanned"`` / ``"sharded"`` explicitly
+    or via benchmarks. All three engines produce the same trajectory
+    within float tolerance (``tests/test_training_engines.py``), so the
+    pick is purely a performance decision.
+    """
+    if engine == "auto":
+        return "host"
+    if engine not in TRAIN_ENGINES:
+        raise ValueError(f"unknown training engine {engine!r}; expected "
+                         f"'auto' or one of {TRAIN_ENGINES}")
+    if mode == "async" and engine != "host":
+        raise ValueError(
+            f"the async server has no {engine!r} training engine (single "
+            f"host event loop); drop engine= or use mode='sync'")
+    return engine
+
 
 def resolve_aggregation(mode: str, buffer_size: Optional[int] = None,
                         max_concurrency: Optional[int] = None) -> str:

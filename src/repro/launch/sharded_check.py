@@ -26,10 +26,17 @@ single-device reference on N virtual CPU devices (the same
     case — completion order, staleness, damping weights, event clocks and
     the wall clock must all be index-for-index / bitwise identical.
 
+``--train`` switches to the end-to-end TRAINING parity matrix instead:
+``run_fl_sharded`` vs ``run_fl_scanned`` (4 configs incl. overcommit and
+recharge), exact on selection/dropout/duration bookkeeping and
+tolerance-level on float model stats (psum reduction-order ulp); prints
+``training parity OK``.
+
 Exits non-zero on the first mismatch; prints ``parity OK`` when the whole
 matrix passes.
 
   PYTHONPATH=src python -m repro.launch.sharded_check --devices 8
+  PYTHONPATH=src python -m repro.launch.sharded_check --devices 8 --train
 """
 import argparse
 
@@ -143,6 +150,55 @@ def _check_async(label, mesh, cfg, pop, key, em, rounds=4,
     print(f"  {label}: OK")
 
 
+def _check_training(mesh, rounds):
+    """End-to-end training parity: ``run_fl_sharded`` vs the single-device
+    ``run_fl_scanned`` (itself bitwise-equal to the host loop, see
+    ``tests/test_training_engines.py``). Selection / dropout / duration
+    bookkeeping must be exact — the same clients train on the same rounds
+    — while float model stats get a small tolerance: the sharded twin
+    psums per-shard partial weighted-delta tensordots, which reorders the
+    f32 reduction (last-ulp per round, amplified through training)."""
+    from repro.configs.paper_resnet_speech import reduced
+    from repro.federated import FLConfig
+    from repro.federated.server import run_fl_scanned, run_fl_sharded
+
+    def cfg(kind, **kw):
+        base = dict(
+            selector=SelectorConfig(kind=kind, k=4),
+            n_clients=24, rounds=rounds, local_steps=3, batch_size=8,
+            samples_per_client=24, eval_every=4, eval_samples=70,
+            model=reduced(), input_hw=16)
+        base.update(kw)
+        return FLConfig(**base)
+
+    cases = [
+        ("eafl", cfg("eafl")),
+        ("oort", cfg("oort")),
+        # n_slots > k: the slot-gathered duration top_k cap across shards
+        ("overcommit", cfg("eafl", overcommit=1.5)),
+        # sharded uniform recharge stream + pad-client rejoin masking
+        ("recharge", cfg("random", recharge_pct_per_hour=40.0,
+                         plugged_frac=0.5, init_battery_low=12.0,
+                         init_battery_high=30.0)),
+    ]
+    for label, c in cases:
+        ref = run_fl_scanned(c)
+        sh = run_fl_sharded(c, mesh=mesh)
+        for f in ("cum_dropouts", "participation", "round_duration",
+                  "wall_hours"):
+            assert np.array_equal(np.asarray(getattr(ref, f)),
+                                  np.asarray(getattr(sh, f))), \
+                f"training {label}: {f} diverged"
+        for f in ("test_acc", "train_loss", "fairness", "mean_battery"):
+            a = np.asarray(getattr(ref, f), dtype=np.float64)
+            b = np.asarray(getattr(sh, f), dtype=np.float64)
+            nan = np.isnan(a) & np.isnan(b)
+            np.testing.assert_allclose(a[~nan], b[~nan], atol=5e-4, rtol=0,
+                                       err_msg=f"training {label}: {f}")
+        assert abs(ref.init_acc - sh.init_acc) <= 5e-4
+        print(f"  training {label}: OK")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--devices", type=int, default=None,
@@ -151,6 +207,10 @@ def main():
                     help="population size for the main matrix (default "
                          "intentionally not divisible by 2 or 8)")
     ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--train", action="store_true",
+                    help="run the end-to-end TRAINING parity matrix "
+                         "(run_fl_sharded vs run_fl_scanned) instead of "
+                         "the selection/async matrix")
     args = ap.parse_args()
 
     # validate the requested count against what jax actually initialised
@@ -158,6 +218,10 @@ def main():
     mesh = make_client_mesh(args.devices)
     s = mesh.shape["clients"]
     print(f"devices={len(jax.devices())} mesh_shards={s}")
+    if args.train:
+        _check_training(mesh, max(args.rounds, 4))
+        print(f"training parity OK ({s} shards)")
+        return
     key = jax.random.PRNGKey(7)
     em = EnergyModel()
 

@@ -97,6 +97,30 @@ def test_sharded_scan_matches_scanned_one_shard(rng):
     assert int(s2.round) == rounds
 
 
+def test_fused_training_sharded_one_shard():
+    """End-to-end training twin: on a 1-shard mesh the sharded scan's
+    collectives all reduce over a single shard, so run_fl_sharded must
+    already be BITWISE equal to run_fl_scanned (the tolerance in the
+    multi-shard matrix exists only for psum reduction reordering)."""
+    from repro.configs.paper_resnet_speech import reduced
+    from repro.federated import FLConfig
+    from repro.federated.server import run_fl_scanned, run_fl_sharded
+    cfg = FLConfig(selector=SelectorConfig(kind="eafl", k=4),
+                   n_clients=24, rounds=6, local_steps=3, batch_size=8,
+                   samples_per_client=24, eval_every=4, eval_samples=70,
+                   model=reduced(), input_hw=16, overcommit=1.5)
+    ref = run_fl_scanned(cfg)
+    sh = run_fl_sharded(cfg, mesh=make_client_mesh(1))
+    assert ref.init_acc == sh.init_acc
+    for f in ("test_acc", "train_loss", "fairness", "participation",
+              "mean_battery", "cum_dropouts", "wall_hours",
+              "round_duration"):
+        a = np.asarray(getattr(ref, f), dtype=np.float64)
+        b = np.asarray(getattr(sh, f), dtype=np.float64)
+        nan = np.isnan(a) & np.isnan(b)
+        assert np.array_equal(a[~nan], b[~nan]), f"{f} diverged"
+
+
 # --------------------------------------------------------------- subprocess
 @pytest.mark.parametrize("devices", ["1", "2", "8"])
 def test_sharded_parity_matrix_subprocess(devices):
@@ -111,3 +135,17 @@ def test_sharded_parity_matrix_subprocess(devices):
         capture_output=True, text=True, timeout=600, cwd=REPO, env=env)
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
     assert f"parity OK ({devices} shards)" in r.stdout
+
+
+@pytest.mark.parametrize("devices", ["1", "2", "8"])
+def test_sharded_training_parity_subprocess(devices):
+    """End-to-end TRAINING parity (run_fl_sharded vs run_fl_scanned)
+    under real multi-shard meshes — `sharded_check --train` (eafl / oort /
+    overcommit / recharge configs)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.sharded_check",
+         "--devices", devices, "--rounds", "4", "--train"],
+        capture_output=True, text=True, timeout=900, cwd=REPO, env=env)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert f"training parity OK ({devices} shards)" in r.stdout

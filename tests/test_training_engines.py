@@ -1,0 +1,107 @@
+"""Device-resident training engines: host run_fl vs fused run_fl_scanned.
+
+The parity contract (docs/architecture.md "Device-resident training") is
+BITWISE on this backend: success-rank training-key assignment, masked
+fixed-width aggregation and the host-side f64/compacted-f32 stat
+reductions reproduce the host loop's trajectory exactly, not just within
+tolerance. The sharded twin's tolerance-level parity is covered by
+tests/test_sharded_parity.py and repro.launch.sharded_check --train.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.paper_resnet_speech import reduced
+from repro.core import SelectorConfig
+from repro.federated import (
+    TRAIN_ENGINES,
+    FLConfig,
+    resolve_train_engine,
+    run_fl,
+    run_fl_scanned,
+)
+
+HIST_FIELDS = ("test_acc", "train_loss", "fairness", "participation",
+               "mean_battery", "cum_dropouts", "wall_hours",
+               "round_duration")
+
+
+def _cfg(kind, **kw):
+    base = dict(
+        selector=SelectorConfig(kind=kind, k=4),
+        n_clients=24, rounds=8, local_steps=3, batch_size=8,
+        samples_per_client=24, eval_every=4, eval_samples=70,
+        model=reduced(), input_hw=16)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _assert_bitwise(host, fused):
+    """Identical trajectories; the scan runs all cfg.rounds even after the
+    host loop's empty-selection break, so compare the host-length prefix."""
+    nh = len(host.round)
+    assert len(fused.round) >= nh
+    assert host.init_acc == fused.init_acc
+    for field in HIST_FIELDS:
+        a = np.asarray(getattr(host, field), dtype=np.float64)
+        b = np.asarray(getattr(fused, field), dtype=np.float64)[:nh]
+        both_nan = np.isnan(a) & np.isnan(b)
+        assert np.array_equal(a[~both_nan], b[~both_nan]), \
+            f"{field} diverged: {a} vs {b}"
+
+
+@pytest.mark.parametrize("kind", ["eafl", "oort", "random", "eafl-epj"])
+def test_fused_matches_host_all_kinds(kind):
+    cfg = _cfg(kind)
+    _assert_bitwise(run_fl(cfg), run_fl_scanned(cfg))
+
+
+@pytest.mark.parametrize("name,kw", [
+    # overcommit: n_slots > k exercises the in-scan top_k straggler cap
+    ("overcommit", dict(overcommit=1.5)),
+    # codec in the training path + recharge/rejoin inside the scan
+    ("topk+recharge", dict(compression="topk", compression_sparsity=0.25,
+                           recharge_pct_per_hour=40.0, plugged_frac=0.5,
+                           init_battery_low=12.0, init_battery_high=30.0)),
+])
+def test_fused_matches_host_hard_cases(name, kw):
+    cfg = _cfg("eafl", **kw)
+    _assert_bitwise(run_fl(cfg), run_fl_scanned(cfg))
+
+
+def test_recharge_key_is_isolated():
+    """Regression (run_fl RNG bug): the recharge draw must come from a
+    dedicated per-round key, not the loop carry — an *inert* recharge
+    model (enabled, but plugged_frac=0 so no battery ever moves) must
+    leave the whole trajectory bitwise unchanged."""
+    plain = run_fl(_cfg("eafl"))
+    inert = run_fl(_cfg("eafl", recharge_pct_per_hour=50.0,
+                        plugged_frac=0.0))
+    _assert_bitwise(plain, inert)
+    # same invariant inside the fused scan (static recharge gate is ON,
+    # the bernoulli is drawn, and it still must not shift anything)
+    _assert_bitwise(plain, run_fl_scanned(
+        _cfg("eafl", recharge_pct_per_hour=50.0, plugged_frac=0.0)))
+
+
+def test_run_fl_engine_dispatch():
+    cfg = _cfg("oort", rounds=3)
+    via_front_door = run_fl(cfg, engine="scanned")
+    _assert_bitwise(run_fl(cfg, engine="host"), via_front_door)
+    _assert_bitwise(via_front_door, run_fl_scanned(cfg))
+
+
+def test_resolve_train_engine():
+    assert resolve_train_engine(200) == "host"  # auto keeps the reference
+    for e in TRAIN_ENGINES:
+        assert resolve_train_engine(200, engine=e) == e
+    with pytest.raises(ValueError, match="unknown training engine"):
+        resolve_train_engine(200, engine="turbo")
+    with pytest.raises(ValueError, match="async"):
+        resolve_train_engine(200, mode="async", engine="scanned")
+
+
+def test_fused_rejects_async_knobs():
+    with pytest.raises(ValueError, match="synchronous engine"):
+        run_fl_scanned(_cfg("eafl", buffer_size=3))
+    with pytest.raises(ValueError, match="async"):
+        run_fl(_cfg("eafl", max_concurrency=8), engine="scanned")
