@@ -126,7 +126,8 @@ def summarize(results: Dict[str, FLHistory],
 
 
 def run_training_bench(clients: int, k: int, rounds: int, seed: int,
-                       out: str) -> None:
+                       out: str,
+                       checkpoint_every: Optional[int] = None) -> None:
     """Throughput bench for the synchronous training engines (host loop /
     fused scan / sharded scan) on one eafl workload.
 
@@ -137,7 +138,16 @@ def run_training_bench(clients: int, k: int, rounds: int, seed: int,
     fused engines exist to amortize exactly that. All engines produce
     parity-level-identical trajectories (tests/test_training_engines.py),
     so the simulated time-to-accuracy is engine-independent and rounds/s
-    is the whole story."""
+    is the whole story.
+
+    ``checkpoint_every=N`` adds the elastic leg per engine: the same run
+    snapshotting its carry every N rounds (amortized save cost = the
+    wall-clock delta over the plain run / snapshots written) and a
+    restore timed by resuming the final snapshot (zero rounds left — the
+    measured time IS the load/rebuild cost), both stamped into the
+    json."""
+    import dataclasses
+    import tempfile
     import time
 
     import jax
@@ -180,6 +190,36 @@ def run_training_bench(clients: int, k: int, rounds: int, seed: int,
         print(f"{name:8s} {n} rounds in {dt:7.2f}s  "
               f"-> {n / dt:7.3f} rounds/s  acc={h.test_acc[-1]:.3f}")
 
+        if checkpoint_every:
+            with tempfile.TemporaryDirectory() as tmp:
+                path = os.path.join(tmp, "ck_{round}.msgpack")
+                ecfg = dataclasses.replace(
+                    cfg, checkpoint_path=path,
+                    checkpoint_every=checkpoint_every)
+                if warm:  # same protocol: compile the segmented scans once
+                    fn(ecfg)
+                t0 = time.perf_counter()
+                fn(ecfg)
+                dt_ck = time.perf_counter() - t0
+                saved = [r for r in range(1, rounds + 1)
+                         if r % checkpoint_every == 0 or r == rounds]
+                final = path.format(round=saved[-1])
+                t0 = time.perf_counter()
+                fn(dataclasses.replace(cfg, resume_from=final))
+                dt_rs = time.perf_counter() - t0
+                results[name].update({
+                    "checkpoint_every": checkpoint_every,
+                    "snapshots": len(saved),
+                    "ckpt_wall_s": dt_ck,
+                    "save_cost_s": max(dt_ck - dt, 0.0) / len(saved),
+                    "snapshot_bytes": os.path.getsize(final),
+                    "restore_wall_s": dt_rs,
+                })
+                print(f"{'':8s} elastic: {len(saved)} snapshots "
+                      f"({results[name]['snapshot_bytes'] / 1e6:.1f} MB) "
+                      f"save~{results[name]['save_cost_s'] * 1e3:.0f} ms "
+                      f"restore {dt_rs * 1e3:.0f} ms")
+
     target = 0.9 * max(r["final_acc"] for r in results.values())
     hhost = results["host"]
     for name, h in hists.items():
@@ -191,6 +231,7 @@ def run_training_bench(clients: int, k: int, rounds: int, seed: int,
     payload = {
         "bench": "training_engines", "clients": clients, "k": k,
         "rounds": rounds, "seed": seed, "devices": jax.device_count(),
+        "checkpoint_every": checkpoint_every,
         "acc_target": target, "engines": results,
     }
     os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
@@ -233,6 +274,11 @@ def main():
     ap.add_argument("--bench-k", type=int, default=100,
                     help="bench cohort size (default 100)")
     ap.add_argument("--bench-rounds", type=int, default=8)
+    ap.add_argument("--checkpoint-every", type=int, default=None,
+                    metavar="N",
+                    help="bench: add the elastic leg — snapshot the "
+                         "engine carry every N rounds and stamp the "
+                         "save/restore cost into the json")
     ap.add_argument("--devices", type=int, default=None,
                     help="virtual CPU device count for the bench's "
                          "sharded leg (set before jax init)")
@@ -240,8 +286,12 @@ def main():
 
     if args.bench_out is not None:
         run_training_bench(args.bench_clients, args.bench_k,
-                           args.bench_rounds, args.seed, args.bench_out)
+                           args.bench_rounds, args.seed, args.bench_out,
+                           checkpoint_every=args.checkpoint_every)
         return
+    if args.checkpoint_every is not None:
+        ap.error("--checkpoint-every is a bench knob (use with "
+                 "--bench-out); the comparison runs un-checkpointed")
 
     # resolve once so the emitted json records what actually ran; every
     # async-only CLI knob is an async opt-in under --mode auto (and an

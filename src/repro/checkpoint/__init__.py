@@ -1,3 +1,9 @@
-from repro.checkpoint.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint.checkpoint import (CheckpointError, load_checkpoint,
+                                         save_checkpoint)
+from repro.checkpoint.engine import (CarryCheckpointer, checkpoint_path_for,
+                                     load_engine_checkpoint,
+                                     save_engine_checkpoint, segment_bounds)
 
-__all__ = ["load_checkpoint", "save_checkpoint"]
+__all__ = ["CarryCheckpointer", "CheckpointError", "checkpoint_path_for",
+           "load_checkpoint", "load_engine_checkpoint",
+           "save_checkpoint", "save_engine_checkpoint", "segment_bounds"]

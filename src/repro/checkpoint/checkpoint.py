@@ -2,10 +2,19 @@
 
 Arrays are serialized as (dtype, shape, raw bytes); the pytree structure is
 encoded as nested dicts/lists. Round/step metadata rides along.
+
+Files are framed with a magic + version + CRC32 header and written
+atomically (tmp + ``os.replace``), so a reader never observes a
+half-written file and a truncated or bit-flipped checkpoint fails with a
+:class:`CheckpointError` instead of a deep msgpack traceback. The elastic
+round engines rely on this contract: a resume either restores the exact
+carry or refuses loudly.
 """
 from __future__ import annotations
 
 import os
+import struct
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -14,6 +23,17 @@ import msgpack
 import numpy as np
 
 _ARR = "__arr__"
+
+# File framing: magic, u32 format version, u64 payload length, u32 CRC32
+# of the payload. Everything after the header is one msgpack document.
+_MAGIC = b"EAFLCKPT"
+_VERSION = 1
+_HEADER = struct.Struct("<8sIQI")
+
+
+class CheckpointError(RuntimeError):
+    """Checkpoint file is missing, truncated, corrupt, or belongs to an
+    incompatible run (metadata mismatch on resume)."""
 
 
 def _pack(obj):
@@ -43,19 +63,69 @@ def _unpack(obj):
     return obj
 
 
-def save_checkpoint(path: str, params: Any, step: int = 0,
-                    extra: Optional[Dict[str, Any]] = None) -> None:
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    payload = {"step": step, "params": _pack(params),
-               "extra": _pack(extra or {})}
+def _write_atomic(path: str, payload: bytes) -> None:
+    """Write header+payload to ``path`` via tmp + rename; fsync before the
+    rename so a crash leaves either the old file or the complete new one."""
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    header = _HEADER.pack(_MAGIC, _VERSION, len(payload),
+                          zlib.crc32(payload) & 0xFFFFFFFF)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
-        f.write(msgpack.packb(payload, use_bin_type=True))
+        f.write(header)
+        f.write(payload)
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, path)
 
 
+def _read_verified(path: str) -> Any:
+    """Read ``path``, verify framing + CRC, return the decoded payload."""
+    try:
+        with open(path, "rb") as f:
+            raw = f.read()
+    except OSError as e:
+        raise CheckpointError(f"cannot read checkpoint {path!r}: {e}") from e
+    if len(raw) < _HEADER.size:
+        raise CheckpointError(
+            f"checkpoint {path!r} is truncated: {len(raw)} bytes is smaller "
+            f"than the {_HEADER.size}-byte header")
+    magic, version, length, crc = _HEADER.unpack_from(raw)
+    if magic != _MAGIC:
+        raise CheckpointError(
+            f"{path!r} is not a checkpoint file (bad magic {magic!r})")
+    if version != _VERSION:
+        raise CheckpointError(
+            f"checkpoint {path!r} has format version {version}; this build "
+            f"reads version {_VERSION}")
+    payload = raw[_HEADER.size:]
+    if len(payload) != length:
+        raise CheckpointError(
+            f"checkpoint {path!r} is truncated: header promises {length} "
+            f"payload bytes, found {len(payload)}")
+    if zlib.crc32(payload) & 0xFFFFFFFF != crc:
+        raise CheckpointError(
+            f"checkpoint {path!r} failed its CRC32 integrity check "
+            f"(corrupt payload)")
+    try:
+        return msgpack.unpackb(payload, raw=False, strict_map_key=False)
+    except Exception as e:  # malformed msgpack that still passed CRC
+        raise CheckpointError(
+            f"checkpoint {path!r} payload does not decode: {e}") from e
+
+
+def save_checkpoint(path: str, params: Any, step: int = 0,
+                    extra: Optional[Dict[str, Any]] = None) -> None:
+    payload = {"step": step, "params": _pack(params),
+               "extra": _pack(extra or {})}
+    _write_atomic(path, msgpack.packb(payload, use_bin_type=True))
+
+
 def load_checkpoint(path: str) -> Tuple[Any, int, Dict[str, Any]]:
-    with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
+    payload = _read_verified(path)
+    if not isinstance(payload, dict) or "params" not in payload:
+        raise CheckpointError(
+            f"checkpoint {path!r} has no 'params' entry (is it an engine "
+            f"checkpoint? use load_engine_checkpoint)")
     return (_unpack(payload["params"]), payload["step"],
             _unpack(payload["extra"]))

@@ -1,0 +1,168 @@
+"""Engine-carry checkpoints: atomic snapshots of a round engine's full
+scan carry plus its trajectory-so-far, and the matching resume side.
+
+A carry checkpoint has three parts:
+
+* ``state`` — a dict of named pytrees (params, optimizer state,
+  ``ClientPopulation``, ``SelectorState``, RNG keys, async event clocks).
+  Only the *leaves* are stored; on load they are substituted back into a
+  caller-supplied template pytree, so registered dataclass/NamedTuple
+  nodes round-trip without custom serializers. Leaf shape and dtype are
+  checked against the template — a checkpoint from a different
+  population size or model fails with :class:`CheckpointError` instead
+  of silently reshaping.
+* ``data`` — plain packable host data (trajectory arrays accumulated so
+  far, history lists, wall-clock scalars). Returned verbatim.
+* ``meta`` — a flat dict identifying the run (seed, engine, selector,
+  rounds, …). On load the caller passes the meta of the run it is about
+  to continue; any mismatch is a :class:`CheckpointError`. This is what
+  stops a checkpoint from one configuration from silently steering a
+  different one.
+
+All floats round-trip through raw bytes (no text formatting), so a
+restored carry is bit-identical to the live one — the foundation of the
+restart-parity contract (resume at round r == uninterrupted run).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+from repro.checkpoint.checkpoint import (CheckpointError, _pack, _read_verified,
+                                         _unpack, _write_atomic)
+
+
+def checkpoint_path_for(path: str, rnd: int) -> str:
+    """Resolve a checkpoint path template for round ``rnd``.
+
+    A literal ``{round}`` in ``path`` expands to the round number (one
+    file per checkpoint, useful for kill-at-round-r testing); without it
+    the same file is atomically overwritten each time (latest-only)."""
+    return path.format(round=rnd) if "{round}" in path else path
+
+
+def save_engine_checkpoint(path: str, *, rnd: int,
+                           state: Dict[str, Any],
+                           data: Optional[Dict[str, Any]] = None,
+                           meta: Optional[Dict[str, Any]] = None) -> None:
+    """Atomically snapshot an engine carry at (completed) round ``rnd``."""
+    packed_state = {}
+    for name, tree in state.items():
+        packed_state[name] = [_pack(np.asarray(leaf))
+                              for leaf in jax.tree.leaves(tree)]
+    payload = {
+        "kind": "engine-carry",
+        "round": int(rnd),
+        "state": packed_state,
+        "data": _pack(dict(data or {})),
+        "meta": _pack(dict(meta or {})),
+    }
+    _write_atomic(path, msgpack.packb(payload, use_bin_type=True))
+
+
+def load_engine_checkpoint(path: str, templates: Dict[str, Any],
+                           expect_meta: Optional[Dict[str, Any]] = None,
+                           ) -> Tuple[int, Dict[str, Any], Dict[str, Any],
+                                      Dict[str, Any]]:
+    """Restore an engine carry saved by :func:`save_engine_checkpoint`.
+
+    ``templates`` maps each state name to a pytree with the structure,
+    shapes and dtypes the resuming run would have built fresh; stored
+    leaves are substituted into it. Returns ``(round, state, data, meta)``.
+    Raises :class:`CheckpointError` on framing/CRC failure, missing or
+    mismatched state components, or ``expect_meta`` disagreement."""
+    payload = _read_verified(path)
+    if not isinstance(payload, dict) or payload.get("kind") != "engine-carry":
+        raise CheckpointError(
+            f"{path!r} is not an engine-carry checkpoint "
+            f"(kind={payload.get('kind') if isinstance(payload, dict) else None!r})")
+    meta = _unpack(payload.get("meta") or {})
+    if expect_meta:
+        bad = [f"{k}: checkpoint has {meta.get(k)!r}, run expects {v!r}"
+               for k, v in expect_meta.items() if meta.get(k) != v]
+        if bad:
+            raise CheckpointError(
+                f"checkpoint {path!r} belongs to a different run — "
+                + "; ".join(bad))
+    stored = payload.get("state", {})
+    state: Dict[str, Any] = {}
+    for name, template in templates.items():
+        if name not in stored:
+            raise CheckpointError(
+                f"checkpoint {path!r} has no state component {name!r} "
+                f"(has {sorted(stored)})")
+        leaves = [_unpack(entry) for entry in stored[name]]
+        t_leaves, treedef = jax.tree.flatten(template)
+        if len(leaves) != len(t_leaves):
+            raise CheckpointError(
+                f"checkpoint {path!r} state {name!r} has {len(leaves)} "
+                f"leaves, template expects {len(t_leaves)}")
+        restored = []
+        for i, (loaded, tmpl) in enumerate(zip(leaves, t_leaves)):
+            la, ta = np.asarray(loaded), np.asarray(tmpl)
+            if la.shape != ta.shape or la.dtype != ta.dtype:
+                raise CheckpointError(
+                    f"checkpoint {path!r} state {name!r} leaf {i}: stored "
+                    f"{la.dtype}{list(la.shape)} does not match template "
+                    f"{ta.dtype}{list(ta.shape)}")
+            restored.append(jnp.asarray(la))
+        state[name] = jax.tree.unflatten(treedef, restored)
+    return int(payload["round"]), state, _unpack(payload["data"]), meta
+
+
+def segment_bounds(start: int, total: int, every: Optional[int],
+                   ) -> Iterator[Tuple[int, int]]:
+    """Split rounds ``(start, total]`` into scan segments ``(a, b]`` that
+    break at absolute multiples of ``every`` (checkpoint boundaries stay
+    aligned whether the run started at 0 or resumed mid-way). ``every``
+    of ``None``/0 yields one segment."""
+    if total < 0 or start > total:
+        raise ValueError(f"bad segment range start={start} total={total}")
+    if not every or every <= 0:
+        if start < total:
+            yield (start, total)
+        return
+    a = start
+    while a < total:
+        b = min(total, (a // every + 1) * every)
+        yield (a, b)
+        a = b
+
+
+class CarryCheckpointer:
+    """Cadence + path bookkeeping for periodic engine-carry snapshots.
+
+    ``path`` may contain ``{round}`` (one file per snapshot) or not
+    (atomic latest-only overwrite). A snapshot is due every ``every``
+    completed rounds and always at the final round, so a finished run
+    leaves a resumable artifact behind."""
+
+    def __init__(self, path: str, every: int, total_rounds: int,
+                 meta: Optional[Dict[str, Any]] = None):
+        if not path:
+            raise ValueError("checkpoint_every is set but checkpoint_path "
+                             "is empty")
+        if every <= 0:
+            raise ValueError(f"checkpoint_every must be positive, got {every}")
+        self.path = path
+        self.every = every
+        self.total = total_rounds
+        self.meta = dict(meta or {})
+
+    def due(self, rnd: int) -> bool:
+        return rnd % self.every == 0 or rnd == self.total
+
+    def path_for(self, rnd: int) -> str:
+        return checkpoint_path_for(self.path, rnd)
+
+    def save(self, rnd: int, state: Dict[str, Any],
+             data: Optional[Dict[str, Any]] = None) -> str:
+        out = self.path_for(rnd)
+        save_engine_checkpoint(out, rnd=rnd, state=state, data=data,
+                               meta=self.meta)
+        return out

@@ -25,13 +25,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import load_engine_checkpoint
 from repro.core import SelectorState, jains_index, stat_utility
 from repro.core.clients import scatter_stat_util
 from repro.data import label_restricted_partition, make_test_set
 from repro.federated.aggregation import (
+    finite_rows,
     make_server_optimizer,
     server_update,
+    tree_finite,
     weighted_delta,
+    zero_nonfinite_rows,
 )
 from repro.federated.server import (
     FLConfig,
@@ -40,9 +44,11 @@ from repro.federated.server import (
     _local_train_fn,
     _recharge_step,
     _record_test_acc,
+    _train_meta,
 )
 from repro.federated.simulation import (
     AsyncEventState,
+    _make_checkpointer,
     make_async_round_engine,
 )
 from repro.models.resnet import init_resnet, resnet_forward
@@ -101,6 +107,11 @@ def run_fl_async(cfg: FLConfig, verbose: bool = False) -> FLHistory:
     if cfg.overcommit != 1.0:
         raise ValueError("overcommit is a synchronous-barrier knob; the "
                          "async engine refills slots continuously instead")
+    if cfg.faults is not None and cfg.faults.active:
+        raise ValueError(
+            "fault injection is defined per synchronous round; the async "
+            "event engine has no per-round fault boundary — run faults "
+            "through run_fl(mode='sync') / the sync round engines")
     key = jax.random.PRNGKey(cfg.seed)
     kpop, kdata, kmodel, ktest, kloop = jax.random.split(key, 5)
 
@@ -149,19 +160,49 @@ def run_fl_async(cfg: FLConfig, verbose: bool = False) -> FLHistory:
         logits = resnet_forward(cfg.model, p, test["x"])
         return (jnp.argmax(logits, -1) == test["y"]).mean()
 
-    hist = FLHistory()
-    hist.init_acc = float(test_acc_fn(params))
-    cum_drop = 0
-    last_loss = float("nan")
-
-    # ---- prime the concurrency slots (server version 0) -----------------
-    kloop, kfill = jax.random.split(kloop)
+    meta = _train_meta(cfg, "train-async")
+    meta.update(buffer_size=(None if cfg.buffer_size is None
+                             else int(cfg.buffer_size)),
+                max_concurrency=(None if cfg.max_concurrency is None
+                                 else int(cfg.max_concurrency)),
+                staleness_power=float(cfg.staleness_power))
+    ck = _make_checkpointer(cfg.checkpoint_path, cfg.checkpoint_every,
+                            cfg.rounds, meta)
+    start = 0
     snapshots = _SnapshotRing()
-    sel_state, astate, idx0, chosen0 = init_fill(kfill, pop, sel_state,
-                                                 astate)
-    snapshots.retain(0, params, int(np.asarray(chosen0).sum()))
+    if cfg.resume_from:
+        # two-phase restore: the base carry first, then — once the data
+        # block says which parameter versions were live in the snapshot
+        # ring — the ring entries themselves (each is a params-shaped tree)
+        templates = {"params": params, "opt_state": opt_state, "pop": pop,
+                     "st": sel_state, "astate": astate, "kloop": kloop}
+        start, state, saved, _ = load_engine_checkpoint(
+            cfg.resume_from, templates, expect_meta=meta)
+        ring = [(int(v), int(r)) for v, r in saved["ring"]]
+        _, rstate, _, _ = load_engine_checkpoint(
+            cfg.resume_from, {f"ring_{v}": params for v, _ in ring})
+        params, opt_state, pop = (state["params"], state["opt_state"],
+                                  state["pop"])
+        sel_state, astate, kloop = (state["st"], state["astate"],
+                                    state["kloop"])
+        for v, refs in ring:
+            snapshots.retain(v, rstate[f"ring_{v}"], refs)
+        hist = FLHistory(**saved["hist"])
+        cum_drop = int(saved["cum_drop"])
+        last_loss = float(saved["last_loss"])
+    else:
+        hist = FLHistory()
+        hist.init_acc = float(test_acc_fn(params))
+        cum_drop = 0
+        last_loss = float("nan")
 
-    for agg in range(1, cfg.rounds + 1):
+        # ---- prime the concurrency slots (server version 0) -------------
+        kloop, kfill = jax.random.split(kloop)
+        sel_state, astate, idx0, chosen0 = init_fill(kfill, pop, sel_state,
+                                                     astate)
+        snapshots.retain(0, params, int(np.asarray(chosen0).sum()))
+
+    for agg in range(start + 1, cfg.rounds + 1):
         # dedicated krecharge (prefix-stable split: kloop/kstep/ktrain are
         # unchanged vs the historical 3-way split) — recharge randomness
         # must not alias the carry that seeds aggregation agg+1
@@ -184,6 +225,8 @@ def run_fl_async(cfg: FLConfig, verbose: bool = False) -> FLHistory:
                              float(flush["round_duration"]))
 
         succ = completed[succeeded]
+        skipped = 1
+        n_quar = 0
         if len(succ) > 0:
             starts = (version_before - staleness[succeeded]).tolist()
             start_params = jax.tree.map(
@@ -195,14 +238,23 @@ def run_fl_async(cfg: FLConfig, verbose: bool = False) -> FLHistory:
             deltas, per_sample, mean_losses = local_train(start_params, xs,
                                                           ys, keys)
             # FedBuff aggregation: staleness-damped, sample-weighted mean of
-            # the buffered deltas applied to the CURRENT params
+            # the buffered deltas applied to the CURRENT params. A buffered
+            # delta that arrives non-finite (a diverged stale client) is
+            # quarantined — weight AND row zeroed, so the mean renormalizes
+            # over the surviving buffer entries — and the whole update is
+            # skipped if nothing finite remains
             weights = (np.asarray(pop.n_samples)[succ].astype(np.float32)
                        * agg_w[succeeded])
-            agg_delta = weighted_delta(deltas, jnp.asarray(weights))
-            params, opt_state = server_step(params, agg_delta, opt_state)
-            su = stat_utility(per_sample, jnp.asarray(weights))
-            pop = scatter_stat_util(pop, jnp.asarray(succ),
-                                    jnp.ones(len(succ), bool), su)
+            finite = finite_rows(deltas)
+            w = jnp.where(finite, jnp.asarray(weights), 0.0)
+            agg_delta = weighted_delta(zero_nonfinite_rows(deltas, finite),
+                                       w)
+            n_quar = int(jnp.sum(~finite))
+            if bool(finite.any()) and bool(tree_finite(agg_delta)):
+                params, opt_state = server_step(params, agg_delta, opt_state)
+                skipped = 0
+            su = stat_utility(per_sample, w)
+            pop = scatter_stat_util(pop, jnp.asarray(succ), finite, su)
             last_loss = float(mean_losses.mean())
         for v in staleness:
             snapshots.release(version_before - int(v))
@@ -220,6 +272,9 @@ def run_fl_async(cfg: FLConfig, verbose: bool = False) -> FLHistory:
                                   if len(succeeded) else 0.0)
         hist.mean_battery.append(float(pop.battery_pct.mean()))
         hist.train_loss.append(last_loss)
+        hist.retries.append(0)  # transient faults are sync-engine-only
+        hist.quarantined.append(n_quar)
+        hist.update_skipped.append(skipped)
         _record_test_acc(hist, cfg, agg, params, test_acc_fn)
         if verbose and agg % 10 == 0:
             print(f"[{cfg.selector.kind}/async] agg={agg} "
@@ -227,6 +282,19 @@ def run_fl_async(cfg: FLConfig, verbose: bool = False) -> FLHistory:
                   f"drop={cum_drop} fair={hist.fairness[-1]:.3f} "
                   f"wall={hist.wall_hours[-1]:.2f}h "
                   f"stale_max={int(staleness.max()) if len(staleness) else 0}")
+        if ck and ck.due(agg):
+            # the carry plus the refcounted snapshot ring: each live params
+            # version rides as its own state entry, the (version, refcount)
+            # table in data tells the resume which entries to expect
+            state = {"params": params, "opt_state": opt_state, "pop": pop,
+                     "st": sel_state, "astate": astate, "kloop": kloop}
+            for v in sorted(snapshots._params):
+                state[f"ring_{v}"] = snapshots._params[v]
+            ck.save(agg, state,
+                    {"hist": hist.as_dict(), "cum_drop": cum_drop,
+                     "last_loss": last_loss,
+                     "ring": [[int(v), int(snapshots._refs[v])]
+                              for v in sorted(snapshots._params)]})
         # population exhausted: nothing in flight and nothing refillable
         if len(completed) == 0 and n_refilled == 0 \
                 and not bool(np.asarray(astate.in_flight).any()):

@@ -1,0 +1,134 @@
+"""Deterministic, seed-driven transient client faults.
+
+EAFL already models *energy* failure (battery drain, missed deadlines,
+stochastic dropout). This layer adds the transient faults a real fleet
+sees on top of that physics:
+
+* **crash-before-upload** — the client finishes local work but its
+  upload never lands. With ``max_retries > 0`` it re-attempts; each
+  retry costs ``retry_backoff_s`` wall-clock (counted against the round
+  deadline) and ``retry_cost_frac`` of the round's energy (charged to
+  the battery like any other work).
+* **straggle** — the round takes ``straggle_factor ×`` its clean
+  duration, so a straggler can blow past the deadline it would
+  otherwise make.
+* **corrupt update** — the upload arrives but its delta is garbage
+  (non-finite). The server's quarantine gate must catch it.
+
+Every draw is keyed ONLY on ``(FaultConfig.seed, round, client)`` via
+``fold_in`` — independent of the engine's own RNG chain, of population
+padding (threefry streams are prefix-stable, so the first ``n`` draws
+match under any padded ``n``), and of which engine runs the round.
+That makes the fault schedule a pure function of the seed: host,
+scanned, and sharded engines reproduce the identical schedule, which is
+what the determinism tests assert.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["FaultConfig", "FaultDraw", "apply_faults", "fault_streams"]
+
+#: uniform streams drawn per round: crash, retry, straggle, corrupt
+N_FAULT_STREAMS = 4
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    """Transient-fault injection knobs. Frozen + hashable so it can ride
+    in the jit static args of the fused runners."""
+    seed: int = 0
+    crash_prob: float = 0.0        # P(upload lost) per selected client/round
+    max_retries: int = 0           # re-attempts before the round is lost
+    retry_backoff_s: float = 30.0  # wall-clock added per retry
+    retry_cost_frac: float = 0.1   # energy surcharge per retry (× round cost)
+    straggle_prob: float = 0.0     # P(transient slowdown)
+    straggle_factor: float = 3.0   # duration multiplier when straggling
+    corrupt_prob: float = 0.0      # P(non-finite update delta)
+
+    def __post_init__(self):
+        for name in ("crash_prob", "straggle_prob", "corrupt_prob"):
+            p = getattr(self, name)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name}={p} is not a probability")
+        if self.crash_prob >= 1.0 and self.max_retries > 0:
+            raise ValueError("crash_prob=1.0 with retries never terminates")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries={self.max_retries} < 0")
+
+    @property
+    def active(self) -> bool:
+        return (self.crash_prob > 0.0 or self.straggle_prob > 0.0
+                or self.corrupt_prob > 0.0)
+
+
+class FaultDraw(NamedTuple):
+    """Per-client fault outcome for one round (all shape ``(n,)``)."""
+    fail: jnp.ndarray      # bool: upload lost after exhausting retries
+    retries: jnp.ndarray   # int32: upload re-attempts actually made
+    corrupt: jnp.ndarray   # bool: delta goes non-finite if the client trains
+
+
+def fault_streams(fcfg: FaultConfig, rnd, n: int) -> Tuple[jnp.ndarray, ...]:
+    """The round's ``N_FAULT_STREAMS`` uniform streams, each ``(n,)``.
+
+    ``rnd`` is the 1-based round number (post-selection
+    ``SelectorState.round``, identical across engines); may be traced."""
+    kf = jax.random.fold_in(jax.random.PRNGKey(fcfg.seed), rnd)
+    return tuple(jax.random.uniform(jax.random.fold_in(kf, j), (n,))
+                 for j in range(N_FAULT_STREAMS))
+
+
+def apply_faults(fcfg: FaultConfig, t_total: jnp.ndarray, cost: jnp.ndarray,
+                 streams: Tuple[jnp.ndarray, ...],
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, FaultDraw]:
+    """Fold one round of faults into clean durations/costs.
+
+    Returns ``(t_eff, cost_eff, draw)``: effective per-client duration
+    (straggle multiplier + retry backoff), effective energy cost (retry
+    surcharge), and the :class:`FaultDraw`. Branches on the *static*
+    config only, so inactive fault classes add zero ops to the trace."""
+    u_crash, u_retry, u_straggle, u_corrupt = streams
+    n = t_total.shape[0]
+    no = jnp.zeros((n,), dtype=bool)
+    t_eff, cost_eff = t_total, cost
+    fail, retries = no, jnp.zeros((n,), dtype=jnp.int32)
+
+    if fcfg.straggle_prob > 0.0:
+        straggle = u_straggle < fcfg.straggle_prob
+        t_eff = jnp.where(straggle, t_eff * fcfg.straggle_factor, t_eff)
+
+    if fcfg.crash_prob > 0.0:
+        crashed = u_crash < fcfg.crash_prob
+        if fcfg.max_retries > 0:
+            # Inverse-CDF geometric: each re-attempt independently fails
+            # with crash_prob, so P(>= j failed retries) = crash_prob**j.
+            extra = jnp.floor(jnp.log(jnp.maximum(u_retry, 1e-12))
+                              / jnp.log(fcfg.crash_prob)).astype(jnp.int32)
+            retries = jnp.where(crashed,
+                                jnp.minimum(extra + 1, fcfg.max_retries),
+                                0)
+            fail = crashed & (extra >= fcfg.max_retries)
+            t_eff = t_eff + retries.astype(t_eff.dtype) * fcfg.retry_backoff_s
+            cost_eff = cost_eff * (1.0 + retries.astype(cost_eff.dtype)
+                                   * fcfg.retry_cost_frac)
+        else:
+            fail = crashed
+
+    corrupt = (u_corrupt < fcfg.corrupt_prob) if fcfg.corrupt_prob > 0.0 else no
+    return t_eff, cost_eff, FaultDraw(fail=fail, retries=retries,
+                                      corrupt=corrupt)
+
+
+def faults_for_round(fcfg: Optional[FaultConfig], rnd, t_total, cost,
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                Optional[FaultDraw]]:
+    """Convenience: streams + apply in one call; identity when inactive."""
+    if fcfg is None or not fcfg.active:
+        return t_total, cost, None
+    streams = fault_streams(fcfg, rnd, t_total.shape[0])
+    return apply_faults(fcfg, t_total, cost, streams)

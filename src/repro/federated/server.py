@@ -37,15 +37,28 @@ from repro.core.selection import (
     _rank_bits,
     _slot_gather,
 )
+from repro.checkpoint import load_engine_checkpoint, segment_bounds
 from repro.data import label_restricted_partition, make_test_set
 from repro.federated.aggregation import (
+    finite_rows,
     make_server_optimizer,
     server_update,
+    tree_finite,
     weighted_delta,
+    zero_nonfinite_rows,
+)
+from repro.federated.faults import (
+    N_FAULT_STREAMS,
+    FaultConfig,
+    apply_faults,
+    fault_streams,
+    faults_for_round,
 )
 from repro.federated.simulation import (
     ENGINES,
     TRAIN_ENGINES,
+    _concat_traj,
+    _make_checkpointer,
     _shard_round_step,
     resolve_aggregation,
     resolve_train_engine,
@@ -121,6 +134,19 @@ class FLConfig:
     buffer_size: Optional[int] = None
     max_concurrency: Optional[int] = None
     staleness_power: float = 0.5
+    # --- elastic fault tolerance ----------------------------------------
+    # faults: deterministic seed-driven transient client faults
+    # (repro.federated.faults) — crash-before-upload with retries,
+    # stragglers, corrupted (non-finite) updates. checkpoint_path turns on
+    # atomic engine-carry snapshots (a literal `{round}` in the path makes
+    # one file per snapshot), checkpoint_every sets the cadence (default:
+    # final round only), and resume_from restores a snapshot and continues
+    # mid-trajectory — bitwise-identically for the host/scanned/sharded
+    # engines (restart parity, tests/test_elastic.py).
+    faults: Optional[FaultConfig] = None
+    checkpoint_path: Optional[str] = None
+    checkpoint_every: Optional[int] = None
+    resume_from: Optional[str] = None
 
 
 def replace_selector_k(sel: SelectorConfig, k: int) -> SelectorConfig:
@@ -222,6 +248,14 @@ class FLHistory:
     fairness: List[float] = field(default_factory=list)
     participation: List[float] = field(default_factory=list)
     mean_battery: List[float] = field(default_factory=list)
+    # --- fault/elasticity accounting (repro.federated.faults) -----------
+    # retries: upload re-attempts actually made by the round's cohort;
+    # quarantined: clients whose delta the server discarded as non-finite;
+    # update_skipped: 1 when the round applied NO server update (empty
+    # cohort, or the whole aggregate was quarantined)
+    retries: List[int] = field(default_factory=list)
+    quarantined: List[int] = field(default_factory=list)
+    update_skipped: List[int] = field(default_factory=list)
     # accuracy of the untrained model, evaluated before round 1 — the pad
     # value for pre-first-eval rounds (never a fake 0.0)
     init_acc: float = float("nan")
@@ -280,6 +314,32 @@ def _engine_setup(cfg: FLConfig, kpop, model_bytes: float):
     up_bytes = wire_bytes(model_bytes, cfg.compression, **codec_params)
     energy_model = EnergyModel(busy_fraction=cfg.idle_busy_fraction)
     return pop, sim_steps, up_bytes, energy_model
+
+
+def _train_meta(cfg: FLConfig, family: str) -> Dict[str, Any]:
+    """Checkpoint identity for a TRAINING run. ``family`` groups engines
+    whose carries are interchangeable: ``"train-sync"`` for the fused
+    scanned/sharded twins (the sharded engine saves the population trimmed
+    to ``n_clients``, so its snapshots are portable across device counts
+    and across the two engines), ``"train-host"`` for the reference host
+    loop (its checkpoint also carries the python-side FLHistory), and
+    ``"train-async"`` for the event-driven async server (which adds the
+    snapshot-ring versions)."""
+    return {
+        "family": family,
+        "n_clients": int(cfg.n_clients),
+        "rounds": int(cfg.rounds),
+        "kind": cfg.selector.kind,
+        "k": int(cfg.selector.k),
+        "seed": int(cfg.seed),
+        "deadline_s": (None if cfg.deadline_s is None
+                       else float(cfg.deadline_s)),
+        "overcommit": float(cfg.overcommit),
+        "compression": cfg.compression,
+        "server_opt": cfg.server_opt,
+        "faults": (None if cfg.faults is None
+                   else dataclasses.asdict(cfg.faults)),
+    }
 
 
 def run_fl(cfg: FLConfig, verbose: bool = False,
@@ -369,15 +429,32 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
         # of model + optimizer state across the update
         return server_update(p, agg, opt, o_state)
 
-    hist = FLHistory()
-    # evaluate the untrained model once so pre-first-eval rounds report a
-    # real accuracy instead of a fake 0.0 (plots / time-to-accuracy curves)
-    hist.init_acc = float(test_acc_fn(params))
-    wall = 0.0
-    cum_drop = 0
-    last_loss = float("nan")
+    meta = _train_meta(cfg, "train-host")
+    ck = _make_checkpointer(cfg.checkpoint_path, cfg.checkpoint_every,
+                            cfg.rounds, meta)
+    start = 0
+    if cfg.resume_from:
+        templates = {"params": params, "opt_state": opt_state, "pop": pop,
+                     "st": sel_state.canonical(), "kloop": kloop}
+        start, state, saved, _ = load_engine_checkpoint(
+            cfg.resume_from, templates, expect_meta=meta)
+        params, opt_state, pop = (state["params"], state["opt_state"],
+                                  state["pop"])
+        sel_state, kloop = state["st"], state["kloop"]
+        hist = FLHistory(**saved["hist"])
+        wall = float(saved["wall"])
+        cum_drop = int(saved["cum_drop"])
+        last_loss = float(saved["last_loss"])
+    else:
+        hist = FLHistory()
+        # evaluate the untrained model once so pre-first-eval rounds report
+        # a real accuracy instead of a fake 0.0 (time-to-accuracy curves)
+        hist.init_acc = float(test_acc_fn(params))
+        wall = 0.0
+        cum_drop = 0
+        last_loss = float("nan")
 
-    for rnd in range(1, cfg.rounds + 1):
+    for rnd in range(start + 1, cfg.rounds + 1):
         # krecharge is a dedicated per-round key: the recharge draw must
         # not share randomness with the carry that seeds round r+1
         # (prefix-stable threefry keeps kloop/ksel/ktrain identical to the
@@ -391,7 +468,8 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
             break
         pop, outcome = simulate_round(
             pop, selected, energy_model, model_bytes,
-            sim_steps, cfg.batch_size, rnd, cfg.deadline_s, up_bytes)
+            sim_steps, cfg.batch_size, rnd, cfg.deadline_s, up_bytes,
+            faults=cfg.faults)
         cum_drop += outcome.new_dropouts
         if cfg.overcommit > 1.0:
             # keep only the fastest K successful clients (stragglers beyond
@@ -403,19 +481,38 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
         pop = _recharge_step(cfg, pop, krecharge, outcome.round_duration)
 
         succ = outcome.selected[outcome.succeeded]
+        skipped = 1
+        n_quar = 0
         if len(succ) > 0:
             xs = data["x"][succ]
             ys = data["y"][succ]
             keys = jax.random.split(ktrain, len(succ))
             deltas, per_sample, mean_losses = local_train(params, xs, ys, keys)
+            if cfg.faults is not None and cfg.faults.active:
+                # corrupted-upload fault: the client trained and paid the
+                # energy, but the delta that arrives is garbage
+                bad = jnp.asarray(outcome.corrupt[outcome.succeeded])
+                deltas = jax.tree.map(
+                    lambda d: jnp.where(
+                        bad.reshape((-1,) + (1,) * (d.ndim - 1)),
+                        jnp.nan, d), deltas)
+            # non-finite quarantine: zero both the weight AND the delta row
+            # (0 * nan == nan), so weighted_delta renormalizes over the
+            # survivors; a last-resort gate keeps even a finite-per-client
+            # overflow out of the global params
+            finite = finite_rows(deltas)
             weights = np.asarray(pop.n_samples)[succ].astype(np.float32)
-            agg = weighted_delta(deltas, jnp.asarray(weights))
-            params, opt_state = server_step(params, agg, opt_state)
+            w = jnp.where(finite, jnp.asarray(weights), 0.0)
+            agg = weighted_delta(zero_nonfinite_rows(deltas, finite), w)
+            n_quar = int(jnp.sum(~finite))
+            if bool(finite.any()) and bool(tree_finite(agg)):
+                params, opt_state = server_step(params, agg, opt_state)
+                skipped = 0
             # update Oort statistical utility for participants (functional
-            # scatter — the population pytree stays device-resident)
-            su = stat_utility(per_sample, jnp.asarray(weights))
-            pop = scatter_stat_util(pop, jnp.asarray(succ),
-                                    jnp.ones(len(succ), bool), su)
+            # scatter — the population pytree stays device-resident);
+            # quarantined clients contribute no utility update
+            su = stat_utility(per_sample, w)
+            pop = scatter_stat_util(pop, jnp.asarray(succ), finite, su)
             last_loss = float(mean_losses.mean())
 
         wall += outcome.round_duration / 3600.0
@@ -427,11 +524,22 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
         hist.participation.append(float(outcome.succeeded.mean()))
         hist.mean_battery.append(float(pop.battery_pct.mean()))
         hist.train_loss.append(last_loss)
+        hist.retries.append(int(outcome.retries))
+        hist.quarantined.append(n_quar)
+        hist.update_skipped.append(skipped)
         _record_test_acc(hist, cfg, rnd, params, test_acc_fn)
         if verbose and rnd % 10 == 0:
             print(f"[{cfg.selector.kind}] r={rnd} acc={hist.test_acc[-1]:.3f} "
                   f"loss={last_loss:.3f} drop={cum_drop} "
                   f"fair={hist.fairness[-1]:.3f} wall={wall:.2f}h")
+        if ck and ck.due(rnd):
+            # kloop here is the carry that seeds round rnd+1, so a resumed
+            # run re-enters the identical RNG chain
+            ck.save(rnd,
+                    {"params": params, "opt_state": opt_state, "pop": pop,
+                     "st": sel_state, "kloop": kloop},
+                    {"hist": hist.as_dict(), "wall": wall,
+                     "cum_drop": cum_drop, "last_loss": last_loss})
     return hist
 
 
@@ -456,9 +564,11 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
 #   * the over-provisioning cap is `lax.top_k` over (-duration | mask),
 #     the device twin of `cap_stragglers`' argsort-and-filter;
 #   * the server update is computed unconditionally but gated with a
-#     `where(any_succ, ...)` — the adaptive optimizers are NOT no-ops on
-#     zero deltas (yogi's sign-based v update, bias-correction t), and the
-#     host loop skips the update entirely on empty cohorts;
+#     `where(ok, ...)` where `ok = good.any() & tree_finite(agg)` — some
+#     non-quarantined client succeeded and the aggregate is finite — since
+#     the adaptive optimizers are NOT no-ops on zero deltas (yogi's
+#     sign-based v update, bias-correction t), and the host loop skips the
+#     update entirely on empty or fully-quarantined cohorts;
 #   * width-sensitive stat reductions happen OUTSIDE the scan, from the
 #     per-slot masks/losses in the trajectory (`_history_from_traj`):
 #     participation in f64 and train_loss as the same compacted-width f32
@@ -472,47 +582,67 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
 @functools.lru_cache(maxsize=8)
 def _fused_runner(model_cfg: ResNetConfig, sel_cfg: SelectorConfig,
                   agg_k: int, energy_model: EnergyModel,
-                  deadline_s: Optional[float], rounds: int, eval_every: int,
+                  deadline_s: Optional[float],
                   local_steps: int, batch_size: int, client_lr: float,
                   fedprox_mu: float, compression: str, sparsity: float,
                   server_opt: str, server_lr: float,
                   recharge_pct_per_hour: float, plugged_frac: float,
-                  rejoin_pct: float, use_pallas: bool, interpret: bool):
-    """Cached jitted R-round fused training scan (hashable statics only,
-    mirroring ``simulation._scanned_runner``). ``sel_cfg.k`` is the
-    over-provisioned slot count ``ceil(k * overcommit)``; ``agg_k`` the
-    aggregation cap (the pre-overcommit k)."""
+                  rejoin_pct: float, faults: Optional[FaultConfig],
+                  use_pallas: bool, interpret: bool):
+    """Cached jitted fused training scan (hashable statics only, mirroring
+    ``simulation._scanned_runner``). ``sel_cfg.k`` is the over-provisioned
+    slot count ``ceil(k * overcommit)``; ``agg_k`` the aggregation cap
+    (the pre-overcommit k).
+
+    Returns ``(run, evaluate)``. ``run(do_eval, carry, ...)`` advances the
+    full training carry ``(params, opt_state, pop, st, kloop, last_acc)``
+    by ``len(do_eval)`` rounds — segment-callable: because the RNG chain
+    lives in the carry, two chained segments are bitwise-identical to one
+    long scan, which is what makes checkpoint/resume restart-parity exact.
+    ``do_eval`` carries the absolute-round eval schedule (computed by the
+    wrapper, so segments agree with the uninterrupted run). ``evaluate``
+    is the matching standalone test-accuracy jit (init eval / resume)."""
     opt = make_server_optimizer(server_opt, server_lr)
     cohort = _cohort_train_fn(model_cfg, local_steps, batch_size, client_lr,
                               fedprox_mu, compression, sparsity)
+    faulty = faults is not None and faults.active
 
-    @functools.partial(jax.jit, donate_argnums=(1, 2, 3, 4))
-    def run(kloop, params, opt_state, pop, st, data_x, data_y,
-            test_x, test_y, t_total, cost):
-        n = pop.n
+    @jax.jit
+    def evaluate(params, test_x, test_y):
+        logits = resnet_forward(model_cfg, params, test_x)
+        return (jnp.argmax(logits, -1) == test_y).mean()
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def run(do_eval, carry, data_x, data_y, test_x, test_y, t_total, cost):
+        n = carry[2].n
 
         def eval_acc(p):
             logits = resnet_forward(model_cfg, p, test_x)
             return (jnp.argmax(logits, -1) == test_y).mean()
-
-        init_acc = eval_acc(params)
 
         def scan_step(carry, do_eval):
             params, opt_state, pop, st, kloop, last_acc = carry
             kloop, ksel, ktrain, krecharge = jax.random.split(kloop, 4)
             idx, chosen, st = _device_select(ksel, sel_cfg, st, pop, cost,
                                              use_pallas, interpret)
+            # selection scored on the CLEAN cost above (the forecast can't
+            # see transient faults); the simulation runs on the
+            # fault-modified durations/costs, like the host simulate_round
+            t_eff, cost_eff, draw = faults_for_round(faults, st.round,
+                                                     t_total, cost)
             sel_mask = jnp.zeros((n,), bool).at[
                 jnp.where(chosen, idx, n)].set(True, mode="drop")
-            pop, dev = simulate_round_device(pop, sel_mask, t_total, cost,
-                                             st.round, energy_model,
-                                             deadline_s)
+            pop, dev = simulate_round_device(
+                pop, sel_mask, t_eff, cost_eff, st.round, energy_model,
+                deadline_s, fail_mask=None if draw is None else draw.fail)
             n_slots = idx.shape[0]
             slot_succ = dev.succeeded[idx] & chosen
             if n_slots > agg_k:
                 # keep the fastest agg_k successful slots (top_k breaks
-                # duration ties lowest-slot-first, like the host argsort)
-                g = jnp.where(slot_succ, -t_total[idx], -jnp.inf)
+                # duration ties lowest-slot-first, like the host argsort);
+                # ranked on the fault-modified durations, like the host's
+                # cap_stragglers over outcome.durations
+                g = jnp.where(slot_succ, -t_eff[idx], -jnp.inf)
                 _, keep_slots = jax.lax.top_k(g, agg_k)
                 keep = jnp.zeros((n_slots,), bool).at[keep_slots].set(True)
                 mask = slot_succ & keep
@@ -534,18 +664,34 @@ def _fused_runner(model_cfg: ResNetConfig, sel_cfg: SelectorConfig,
             keys = jax.random.split(ktrain, n_slots)[ranks]
             deltas, per_sample, mean_losses = cohort(
                 params, data_x[idx], data_y[idx], keys)
-            w = jnp.where(mask, pop.n_samples[idx].astype(jnp.float32), 0.0)
-            agg = weighted_delta(deltas, w)
+            if faulty:
+                # corrupted-upload fault: the slot trained (and paid), but
+                # the delta that reaches the server is non-finite
+                bad = draw.corrupt[idx] & mask
+                deltas = jax.tree.map(
+                    lambda d: jnp.where(
+                        bad.reshape((n_slots,) + (1,) * (d.ndim - 1)),
+                        jnp.nan, d), deltas)
+            # non-finite quarantine (always on): zero the weight AND the
+            # row (0 * nan == nan), renormalize over survivors, and gate
+            # the whole update on the aggregate staying finite — identical
+            # to the host loop's quarantine block
+            finite = finite_rows(deltas)
+            good = mask & finite
+            w = jnp.where(good, pop.n_samples[idx].astype(jnp.float32), 0.0)
+            agg = weighted_delta(zero_nonfinite_rows(deltas, finite), w)
             new_params, new_opt = server_update(params, agg, opt, opt_state)
-            any_succ = mask.any()
+            ok = good.any() & tree_finite(agg)
             params = jax.tree.map(
-                lambda a, b: jnp.where(any_succ, a, b), new_params, params)
+                lambda a, b: jnp.where(ok, a, b), new_params, params)
             opt_state = jax.tree.map(
-                lambda a, b: jnp.where(any_succ, a, b), new_opt, opt_state)
+                lambda a, b: jnp.where(ok, a, b), new_opt, opt_state)
             su = stat_utility(per_sample, w)
-            pop = scatter_stat_util(pop, idx, mask, su)
+            pop = scatter_stat_util(pop, idx, good, su)
             last_acc = jax.lax.cond(do_eval, eval_acc,
                                     lambda _: last_acc, params)
+            retries = (jnp.sum(jnp.where(sel_mask, draw.retries, 0))
+                       .astype(jnp.int32) if faulty else jnp.int32(0))
             out = {
                 "selected": idx,
                 "chosen": chosen,
@@ -561,17 +707,15 @@ def _fused_runner(model_cfg: ResNetConfig, sel_cfg: SelectorConfig,
                 # loop exactly even when n_slots > agg_k (overcommit)
                 "slot_losses": jnp.where(mask, mean_losses, 0.0),
                 "test_acc": last_acc,
+                "retries": retries,
+                "quarantined": jnp.sum(mask & ~finite).astype(jnp.int32),
+                "update_skipped": (~ok).astype(jnp.int32),
             }
             return (params, opt_state, pop, st, kloop, last_acc), out
 
-        rr = jnp.arange(1, rounds + 1)
-        do_eval = ((rr % eval_every) == 0) | (rr == rounds)
-        carry0 = (params, opt_state, pop, st, kloop, init_acc)
-        carry, traj = jax.lax.scan(scan_step, carry0, do_eval)
-        params, opt_state, pop, st = carry[:4]
-        return params, opt_state, pop, st, init_acc, traj
+        return jax.lax.scan(scan_step, carry, do_eval)
 
-    return run
+    return run, evaluate
 
 
 def _fused_setup(cfg: FLConfig):
@@ -605,12 +749,12 @@ def _fused_statics(cfg: FLConfig) -> tuple:
     return (sel_cfg, int(cfg.selector.k),
             EnergyModel(busy_fraction=cfg.idle_busy_fraction),
             None if cfg.deadline_s is None else float(cfg.deadline_s),
-            int(cfg.rounds), int(cfg.eval_every), int(cfg.local_steps),
+            int(cfg.local_steps),
             int(cfg.batch_size), float(cfg.client_lr), float(cfg.fedprox_mu),
             cfg.compression, float(cfg.compression_sparsity),
             cfg.server_opt, float(cfg.server_lr),
             float(cfg.recharge_pct_per_hour), float(cfg.plugged_frac),
-            float(cfg.rejoin_pct))
+            float(cfg.rejoin_pct), cfg.faults)
 
 
 def _reject_async_knobs(cfg: FLConfig, name: str) -> None:
@@ -655,6 +799,9 @@ def _history_from_traj(cfg: FLConfig, init_acc: float, traj) -> FLHistory:
         hist.train_loss.append(last_loss)
     for name in ("test_acc", "fairness", "mean_battery"):
         setattr(hist, name, [float(x) for x in np.asarray(traj[name])])
+    for name in ("retries", "quarantined", "update_skipped"):
+        if name in traj:
+            setattr(hist, name, [int(x) for x in np.asarray(traj[name])])
     return hist
 
 
@@ -668,26 +815,78 @@ def _print_fused_history(cfg: FLConfig, hist: FLHistory) -> None:
               f"fair={hist.fairness[i]:.3f} wall={hist.wall_hours[i]:.2f}h")
 
 
+_TRAIN_CARRY = ("params", "opt_state", "pop", "st", "kloop", "last_acc")
+
+
+def _fused_do_eval(cfg: FLConfig, a: int, b: int) -> jnp.ndarray:
+    """Eval schedule for absolute rounds ``(a, b]`` — computed from the
+    absolute round numbers so a resumed segment evaluates on exactly the
+    rounds the uninterrupted run would."""
+    rr = np.arange(a + 1, b + 1)
+    return jnp.asarray(((rr % cfg.eval_every) == 0) | (rr == cfg.rounds))
+
+
+def _run_fused_elastic(cfg: FLConfig, run, carry0, run_args,
+                       resume_templates, save_state) -> FLHistory:
+    """Shared segment/checkpoint/resume driver for the two fused training
+    engines. ``carry0`` is the fresh 6-tuple carry; ``run_args`` the
+    engine's per-call data tail; ``resume_templates(state)`` maps loaded
+    checkpoint state back onto an engine carry; ``save_state(carry)``
+    maps a live carry to the (engine-portable) checkpoint state dict."""
+    meta = _train_meta(cfg, "train-sync")
+    ck = _make_checkpointer(cfg.checkpoint_path, cfg.checkpoint_every,
+                            cfg.rounds, meta)
+    parts: List[Dict[str, Any]] = []
+    if cfg.resume_from:
+        templates = dict(zip(_TRAIN_CARRY, carry0))
+        templates["pop"] = resume_templates["pop_template"]
+        start, state, saved, _ = load_engine_checkpoint(
+            cfg.resume_from, templates, expect_meta=meta)
+        carry = resume_templates["restore"](state)
+        parts.append(saved["traj"])
+        init_acc = float(saved["init_acc"])
+    else:
+        start = 0
+        carry = carry0
+        init_acc = float(carry0[-1])
+    for a, b in segment_bounds(start, cfg.rounds, ck.every if ck else None):
+        carry, traj = run(_fused_do_eval(cfg, a, b), carry, *run_args)
+        parts.append(jax.tree.map(np.asarray, traj))
+        if ck and ck.due(b):
+            ck.save(b, save_state(carry),
+                    {"traj": _concat_traj(parts), "init_acc": init_acc})
+    return _history_from_traj(cfg, init_acc, _concat_traj(parts))
+
+
 def run_fl_scanned(cfg: FLConfig, verbose: bool = False) -> FLHistory:
     """:func:`run_fl`, fully device-resident: all ``cfg.rounds`` rounds of
     REAL training run inside one jitted ``lax.scan`` (selection → energy
     simulation → masked cohort local SGD → compressed aggregation → server
     update → eval), with zero per-round host transfers. Trajectory parity
     with the host loop is the contract — see the module comment above
-    :func:`_fused_runner` and ``tests/test_training_engines.py``."""
+    :func:`_fused_runner` and ``tests/test_training_engines.py``.
+
+    Elastic knobs (``cfg.checkpoint_path`` / ``cfg.checkpoint_every`` /
+    ``cfg.resume_from``) split the scan into checkpoint-aligned segments;
+    because the RNG chain rides in the scan carry, the segmented (and the
+    resumed) trajectory is bitwise-identical to the uninterrupted one."""
     _reject_async_knobs(cfg, "run_fl_scanned")
     (kloop, data, test, params, opt_state, pop, sim_steps, up_bytes,
      energy_model, model_bytes) = _fused_setup(cfg)
     t_total, cost = round_cost_table(pop, energy_model, model_bytes,
                                      sim_steps, cfg.batch_size, up_bytes)
-    run = _fused_runner(cfg.model, *_fused_statics(cfg),
-                        _auto_pallas(cfg.n_clients, None),
-                        jax.default_backend() != "tpu")
-    params, opt_state, pop, st, init_acc, traj = run(
-        kloop, params, opt_state, pop,
-        SelectorState.create(cfg.selector).canonical(),
-        data["x"], data["y"], test["x"], test["y"], t_total, cost)
-    hist = _history_from_traj(cfg, float(init_acc), traj)
+    run, evaluate = _fused_runner(cfg.model, *_fused_statics(cfg),
+                                  _auto_pallas(cfg.n_clients, None),
+                                  jax.default_backend() != "tpu")
+    st = SelectorState.create(cfg.selector).canonical()
+    acc0 = evaluate(params, test["x"], test["y"])
+    carry0 = (params, opt_state, pop, st, kloop, acc0)
+    hist = _run_fused_elastic(
+        cfg, run, carry0,
+        (data["x"], data["y"], test["x"], test["y"], t_total, cost),
+        {"pop_template": pop,
+         "restore": lambda state: tuple(state[k] for k in _TRAIN_CARRY)},
+        lambda carry: dict(zip(_TRAIN_CARRY, carry)))
     if verbose:
         _print_fused_history(cfg, hist)
     return hist
@@ -717,23 +916,26 @@ def run_fl_scanned(cfg: FLConfig, verbose: bool = False) -> FLHistory:
 @functools.lru_cache(maxsize=4)
 def _sharded_fused_runner(model_cfg: ResNetConfig, sel_cfg: SelectorConfig,
                           agg_k: int, energy_model: EnergyModel,
-                          deadline_s: Optional[float], rounds: int,
-                          eval_every: int, local_steps: int, batch_size: int,
+                          deadline_s: Optional[float],
+                          local_steps: int, batch_size: int,
                           client_lr: float, fedprox_mu: float,
                           compression: str, sparsity: float,
                           server_opt: str, server_lr: float,
                           recharge_pct_per_hour: float, plugged_frac: float,
-                          rejoin_pct: float, use_pallas: bool,
+                          rejoin_pct: float, faults: Optional[FaultConfig],
+                          use_pallas: bool,
                           interpret: bool, mesh, n_real: int,
                           axis_name: str):
-    """Cached jitted R-round sharded fused training scan (statics mirror
-    :func:`_fused_runner` plus the mesh geometry)."""
+    """Cached jitted sharded fused training scan (statics mirror
+    :func:`_fused_runner` plus the mesh geometry). Returns the same
+    segment-callable ``(run, evaluate)`` pair as :func:`_fused_runner`."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     opt = make_server_optimizer(server_opt, server_lr)
     cohort = _cohort_train_fn(model_cfg, local_steps, batch_size, client_lr,
                               fedprox_mu, compression, sparsity)
+    faulty = faults is not None and faults.active
     n_shards = mesh.shape[axis_name]
     n_padded = n_real + (-n_real) % n_shards
     n_slots = min(sel_cfg.k, n_real)
@@ -749,17 +951,29 @@ def _sharded_fused_runner(model_cfg: ResNetConfig, sel_cfg: SelectorConfig,
             [a, jnp.full((pad_s,) + a.shape[1:], fill, a.dtype)])
 
     def body(ksel, ktrain, st, params, pop, x_loc, y_loc, t_total, cost,
-             bits, u_rech):
+             bits, u_rech, *fstreams):
         n_loc = cost.shape[0]
         shard_i = jax.lax.axis_index(axis_name)
         base = (shard_i * n_loc).astype(jnp.int32)
-        pop, st, idx, chosen, slot_succ, dev = _shard_round_step(
-            ksel, st, pop, t_total, cost, bits, sel_cfg=sel_cfg,
-            energy_model=energy_model, deadline_s=deadline_s,
-            use_pallas=use_pallas, interpret=interpret,
-            axis_name=axis_name, n_real=n_real)
+        streams = fstreams[0] if faulty else None
+        pop, st, idx, chosen, slot_succ, dev, retries, corrupt_sel = \
+            _shard_round_step(
+                ksel, st, pop, t_total, cost, bits, sel_cfg=sel_cfg,
+                energy_model=energy_model, deadline_s=deadline_s,
+                use_pallas=use_pallas, interpret=interpret,
+                axis_name=axis_name, n_real=n_real,
+                faults=faults if faulty else None, streams=streams)
         if n_slots > agg_k:
-            slot_dur = _slot_gather(t_total, idx, chosen, base, axis_name)
+            if faulty:
+                # the straggler cap ranks on the fault-modified durations
+                # (elementwise recompute of the same deterministic draw
+                # _shard_round_step applied — bitwise identical)
+                t_cap, _, _ = apply_faults(
+                    faults, t_total, cost,
+                    tuple(streams[:, j] for j in range(N_FAULT_STREAMS)))
+            else:
+                t_cap = t_total
+            slot_dur = _slot_gather(t_cap, idx, chosen, base, axis_name)
             g = jnp.where(slot_succ, -slot_dur, -jnp.inf)
             _, keep_slots = jax.lax.top_k(g, agg_k)
             keep = jnp.zeros((n_slots,), bool).at[keep_slots].set(True)
@@ -792,18 +1006,37 @@ def _sharded_fused_runner(model_cfg: ResNetConfig, sel_cfg: SelectorConfig,
         wg = _slot_gather(pop.n_samples, idx, mask, base, axis_name)
         ranks = jnp.clip(jnp.cumsum(mask) - 1, 0, n_slots - 1)
         keys = _pad_slots(jax.random.split(ktrain, n_slots)[ranks])
-        wg_p = _pad_slots(wg)
         # --- even slot split: shard i trains slots [i*n_per, (i+1)*n_per)
         sl = shard_i * n_per
         x_sl = jax.lax.dynamic_slice_in_dim(xg, sl, n_per)
         y_sl = jax.lax.dynamic_slice_in_dim(yg, sl, n_per)
         k_sl = jax.lax.dynamic_slice_in_dim(keys, sl, n_per)
-        w_sl = jax.lax.dynamic_slice_in_dim(wg_p, sl, n_per)
         deltas, per_sample, mean_losses = cohort(params, x_sl, y_sl, k_sl)
-        # partial weighted delta: normalize by the GLOBAL weight sum, then
-        # psum the per-shard partial tensordots (weighted_delta's math,
-        # reduction split across shards)
-        wn = wg_p / jnp.maximum(jnp.sum(wg), 1e-9)
+        if faulty:
+            # corrupted-upload fault on this shard's slot slice
+            bad_sl = jax.lax.dynamic_slice_in_dim(
+                _pad_slots(corrupt_sel & mask), sl, n_per)
+            deltas = jax.tree.map(
+                lambda d: jnp.where(
+                    bad_sl.reshape((n_per,) + (1,) * (d.ndim - 1)),
+                    jnp.nan, d), deltas)
+        # non-finite quarantine (always on): per-shard finite mask over the
+        # local slot slice, all_gathered back into slot order; quarantined
+        # slots lose their weight AND their delta row (0 * nan == nan), so
+        # the psum-merged weighted mean renormalizes over the survivors —
+        # this is also what degrades gracefully when a whole shard's slots
+        # go bad: the global weight sum shrinks to the surviving shards
+        fin_sl = finite_rows(deltas)
+        deltas = zero_nonfinite_rows(deltas, fin_sl)
+        fin = jax.lax.all_gather(fin_sl, axis_name).reshape(-1)[:n_slots]
+        good = mask & fin
+        wq = jnp.where(fin, wg, jnp.zeros((), wg.dtype))
+        wq_p = _pad_slots(wq)
+        w_sl = jax.lax.dynamic_slice_in_dim(wq_p, sl, n_per)
+        # partial weighted delta: normalize by the GLOBAL surviving weight
+        # sum, then psum the per-shard partial tensordots (weighted_delta's
+        # math, reduction split across shards)
+        wn = wq_p / jnp.maximum(jnp.sum(wq), 1e-9)
         wn_sl = jax.lax.dynamic_slice_in_dim(wn, sl, n_per)
         agg = jax.tree.map(
             lambda d: jax.lax.psum(
@@ -813,10 +1046,10 @@ def _sharded_fused_runner(model_cfg: ResNetConfig, sel_cfg: SelectorConfig,
         su = jax.lax.all_gather(
             stat_utility(per_sample, w_sl), axis_name).reshape(-1)
         losses = jax.lax.all_gather(mean_losses, axis_name).reshape(-1)
-        mask_p = _pad_slots(mask)
+        good_p = _pad_slots(good)
         own_p = _pad_slots(own)
         loc_p = _pad_slots(loc)
-        pop = scatter_stat_util(pop, loc_p, mask_p & own_p, su)
+        pop = scatter_stat_util(pop, loc_p, good_p & own_p, su)
         ts = pop.times_selected.astype(jnp.float32)
         s1 = jax.lax.psum(jnp.sum(ts), axis_name)
         s2 = jax.lax.psum(jnp.sum(jnp.square(ts)), axis_name)
@@ -831,7 +1064,9 @@ def _sharded_fused_runner(model_cfg: ResNetConfig, sel_cfg: SelectorConfig,
                                           axis_name) / n_real),
             "fairness": jnp.where(s2 > 0,
                                   jnp.square(s1) / (n_real * s2), 1.0),
-            "any_succ": mask.any(),
+            "any_good": good.any(),
+            "retries": retries,
+            "quarantined": jnp.sum(mask & ~fin).astype(jnp.int32),
             # masked per-slot losses; train_loss is reduced host-side over
             # the compacted slots (see _fused_runner / _history_from_traj)
             "slot_losses": jnp.where(mask, losses[:n_slots], 0.0),
@@ -841,17 +1076,20 @@ def _sharded_fused_runner(model_cfg: ResNetConfig, sel_cfg: SelectorConfig,
     smapped = shard_map(
         body, mesh=mesh,
         in_specs=(rep, rep, rep, rep, spec, spec, spec, spec, spec, spec,
-                  spec),
+                  spec) + ((spec,) if faulty else ()),
         out_specs=(spec, rep, rep, rep), check_rep=False)
 
-    @functools.partial(jax.jit, donate_argnums=(1, 2, 3, 4))
-    def run(kloop, params, opt_state, pop, st, data_x, data_y,
-            test_x, test_y, t_total, cost):
+    @jax.jit
+    def evaluate(params, test_x, test_y):
+        logits = resnet_forward(model_cfg, params, test_x)
+        return (jnp.argmax(logits, -1) == test_y).mean()
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def run(do_eval, carry, data_x, data_y, test_x, test_y, t_total, cost):
         def eval_acc(p):
             logits = resnet_forward(model_cfg, p, test_x)
             return (jnp.argmax(logits, -1) == test_y).mean()
 
-        init_acc = eval_acc(params)
         shard = NamedSharding(mesh, spec)
 
         def scan_step(carry, do_eval):
@@ -864,28 +1102,33 @@ def _sharded_fused_runner(model_cfg: ResNetConfig, sel_cfg: SelectorConfig,
             kplug = jax.random.fold_in(krecharge, 7)
             u_rech = jax.lax.with_sharding_constraint(
                 jax.random.uniform(kplug, (n_padded,)), shard)
+            fargs = ()
+            if faulty:
+                # global fault streams for post-select round st.round + 1,
+                # generated OUTSIDE the shard_map (prefix-stable threefry:
+                # each shard slices its rows of the one global stream)
+                fargs = (jax.lax.with_sharding_constraint(
+                    jnp.stack(fault_streams(faults, st.round + 1, n_padded),
+                              axis=-1), shard),)
             pop, st, agg, stats = smapped(ksel, ktrain, st, params, pop,
                                           data_x, data_y, t_total, cost,
-                                          bits, u_rech)
+                                          bits, u_rech, *fargs)
             new_params, new_opt = server_update(params, agg, opt, opt_state)
-            any_succ = stats.pop("any_succ")
+            # last-resort aggregate gate, like the single-device engine
+            ok = stats.pop("any_good") & tree_finite(agg)
             params = jax.tree.map(
-                lambda a, b: jnp.where(any_succ, a, b), new_params, params)
+                lambda a, b: jnp.where(ok, a, b), new_params, params)
             opt_state = jax.tree.map(
-                lambda a, b: jnp.where(any_succ, a, b), new_opt, opt_state)
+                lambda a, b: jnp.where(ok, a, b), new_opt, opt_state)
             last_acc = jax.lax.cond(do_eval, eval_acc,
                                     lambda _: last_acc, params)
-            out = dict(stats, test_acc=last_acc)
+            out = dict(stats, test_acc=last_acc,
+                       update_skipped=(~ok).astype(jnp.int32))
             return (params, opt_state, pop, st, kloop, last_acc), out
 
-        rr = jnp.arange(1, rounds + 1)
-        do_eval = ((rr % eval_every) == 0) | (rr == rounds)
-        carry0 = (params, opt_state, pop, st, kloop, init_acc)
-        carry, traj = jax.lax.scan(scan_step, carry0, do_eval)
-        params, opt_state, pop, st = carry[:4]
-        return params, opt_state, pop, st, init_acc, traj
+        return jax.lax.scan(scan_step, carry, do_eval)
 
-    return run
+    return run, evaluate
 
 
 def run_fl_sharded(cfg: FLConfig, verbose: bool = False, mesh=None,
@@ -905,6 +1148,7 @@ def run_fl_sharded(cfg: FLConfig, verbose: bool = False, mesh=None,
     (kloop, data, test, params, opt_state, pop, sim_steps, up_bytes,
      energy_model, model_bytes) = _fused_setup(cfg)
     n_real = pop.n
+    pop0 = pop  # unpadded host population — the checkpoint template
     sharding = population_sharding(mesh, axis_name)
     pop = jax.device_put(pad_population(pop, mesh.shape[axis_name]),
                          sharding)
@@ -920,15 +1164,34 @@ def run_fl_sharded(cfg: FLConfig, verbose: bool = False, mesh=None,
     t_total, cost = round_cost_table(pop, energy_model, model_bytes,
                                      sim_steps, cfg.batch_size, up_bytes,
                                      sharding=sharding)
-    run = _sharded_fused_runner(cfg.model, *_fused_statics(cfg),
-                                _auto_pallas(n_real, None),
-                                jax.default_backend() != "tpu",
-                                mesh, n_real, axis_name)
-    params, opt_state, fpop, st, init_acc, traj = run(
-        kloop, params, opt_state, pop,
-        SelectorState.create(cfg.selector).canonical(),
-        data_x, data_y, test["x"], test["y"], t_total, cost)
-    hist = _history_from_traj(cfg, float(init_acc), traj)
+    run, evaluate = _sharded_fused_runner(cfg.model, *_fused_statics(cfg),
+                                          _auto_pallas(n_real, None),
+                                          jax.default_backend() != "tpu",
+                                          mesh, n_real, axis_name)
+    st = SelectorState.create(cfg.selector).canonical()
+    acc0 = evaluate(params, test["x"], test["y"])
+    carry0 = (params, opt_state, pop, st, kloop, acc0)
+
+    # the checkpoint stores the population TRIMMED to the real clients (the
+    # pad tail is provably inert: dead, never selected, never recharged),
+    # which makes "train-sync" snapshots portable across device counts AND
+    # across the scanned/sharded engines
+    def _restore(state):
+        rpop = jax.device_put(
+            pad_population(state["pop"], mesh.shape[axis_name]), sharding)
+        return (state["params"], state["opt_state"], rpop, state["st"],
+                state["kloop"], state["last_acc"])
+
+    def _save_state(carry):
+        s = dict(zip(_TRAIN_CARRY, carry))
+        s["pop"] = jax.tree.map(lambda x: x[:n_real], s["pop"])
+        return s
+
+    hist = _run_fused_elastic(
+        cfg, run, carry0,
+        (data_x, data_y, test["x"], test["y"], t_total, cost),
+        {"pop_template": pop0, "restore": _restore},
+        _save_state)
     if verbose:
         _print_fused_history(cfg, hist)
     return hist
@@ -969,5 +1232,7 @@ def run_selection_scanned(cfg: FLConfig, rounds: Optional[int] = None,
         rounds or cfg.rounds, mode=mode, deadline_s=cfg.deadline_s,
         up_bytes=up_bytes, use_pallas=use_pallas,
         buffer_size=cfg.buffer_size, max_concurrency=cfg.max_concurrency,
-        staleness_power=cfg.staleness_power, mesh=mesh, n_shards=n_shards)
+        staleness_power=cfg.staleness_power, mesh=mesh, n_shards=n_shards,
+        faults=cfg.faults, checkpoint_every=cfg.checkpoint_every,
+        checkpoint_path=cfg.checkpoint_path, resume_from=cfg.resume_from)
     return final_pop, {"state": final_state, **traj}

@@ -18,15 +18,18 @@ the original index-list host API on top of the same fused core.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass
 from functools import partial
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import (CarryCheckpointer, load_engine_checkpoint,
+                              segment_bounds)
 from repro.core.clients import ClientPopulation, pad_population, round_times
 from repro.core.energy import EnergyModel
 from repro.core.selection import (
@@ -39,6 +42,8 @@ from repro.core.selection import (
     _shard_select,
     _slot_gather,
 )
+from repro.federated.faults import (N_FAULT_STREAMS, FaultConfig, apply_faults,
+                                    fault_streams, faults_for_round)
 
 
 @dataclass
@@ -49,6 +54,8 @@ class RoundOutcome:
     round_duration: float         # wall seconds for the round
     new_dropouts: int             # clients that ran out of battery this round
     energy_spent_pct: float       # total battery % spent by participants
+    retries: int = 0              # upload re-attempts across the cohort
+    corrupt: Optional[np.ndarray] = None  # (K,) bool — delta is poisoned
 
 
 class DeviceRoundOutcome(NamedTuple):
@@ -105,6 +112,7 @@ def simulate_round_device(pop: ClientPopulation, sel_mask: jnp.ndarray,
                           deadline_s: Optional[float] = None,
                           axis_name: Optional[str] = None,
                           busy_mask: Optional[jnp.ndarray] = None,
+                          fail_mask: Optional[jnp.ndarray] = None,
                           ) -> Tuple[ClientPopulation, DeviceRoundOutcome]:
     """Pure traced round state update over a (N,) selection mask.
 
@@ -113,6 +121,11 @@ def simulate_round_device(pop: ClientPopulation, sel_mask: jnp.ndarray,
     run) and the scalar reductions go through psum/pmax collectives (max is
     exactly associative, so durations match bitwise too; summed stats may
     differ in the last ulp from the single-device reduction order).
+
+    ``fail_mask`` marks clients whose upload is lost to an injected crash
+    fault (``repro.federated.faults``): they fail the round like a battery
+    death — energy is still debited, the round does not count as a success
+    — but they do not drop out unless their battery actually ran dry.
     """
     battery_after = pop.battery_pct - jnp.where(sel_mask, cost, 0.0)
     ran_out = sel_mask & (battery_after <= 0.0)
@@ -122,6 +135,8 @@ def simulate_round_device(pop: ClientPopulation, sel_mask: jnp.ndarray,
                        if deadline_s is not None
                        else jnp.zeros_like(sel_mask))
     succeeded = sel_mask & ~ran_out & ~missed_deadline
+    if fail_mask is not None:
+        succeeded = succeeded & ~fail_mask
 
     # round wall time: slowest successful participant (or deadline)
     any_sel = _aany(sel_mask, axis_name)
@@ -176,29 +191,48 @@ def simulate_round_device(pop: ClientPopulation, sel_mask: jnp.ndarray,
 
 @partial(jax.jit, static_argnames=("energy_model", "model_bytes",
                                    "local_steps", "batch_size", "deadline_s",
-                                   "up_bytes"))
+                                   "up_bytes", "faults"))
 def _simulate_round_jit(pop, sel_mask, rnd, energy_model, model_bytes,
-                        local_steps, batch_size, deadline_s, up_bytes):
+                        local_steps, batch_size, deadline_s, up_bytes,
+                        faults):
     t_total, cost = _round_cost(pop, energy_model, model_bytes, local_steps,
                                 batch_size, up_bytes)
-    return simulate_round_device(pop, sel_mask, t_total, cost, rnd,
-                                 energy_model, deadline_s)
+    t_eff, cost_eff, draw = faults_for_round(faults, rnd, t_total, cost)
+    new_pop, dev = simulate_round_device(
+        pop, sel_mask, t_eff, cost_eff, rnd, energy_model, deadline_s,
+        fail_mask=None if draw is None else draw.fail)
+    if draw is None:
+        retries = jnp.int32(0)
+        corrupt = jnp.zeros((pop.n,), bool)
+    else:
+        retries = jnp.sum(jnp.where(sel_mask, draw.retries, 0)) \
+            .astype(jnp.int32)
+        corrupt = draw.corrupt
+    return new_pop, dev, retries, corrupt
 
 
 def simulate_round(pop: ClientPopulation, selected: np.ndarray,
                    energy_model: EnergyModel, model_bytes: float,
                    local_steps: int, batch_size: int, rnd: int,
                    deadline_s: Optional[float] = None,
-                   up_bytes: float = None):
-    """Returns (new_pop, RoundOutcome). Host facade over the fused core."""
+                   up_bytes: float = None, *,
+                   faults: Optional[FaultConfig] = None):
+    """Returns (new_pop, RoundOutcome). Host facade over the fused core.
+
+    With ``faults`` the round's deterministic fault draws (keyed on
+    ``(faults.seed, rnd, client)`` only) are folded in: stragglers/retries
+    lengthen ``durations``, retries surcharge the battery debit, crashed
+    uploads fail the round, and ``RoundOutcome.corrupt`` flags the
+    survivors whose delta the server must quarantine."""
     selected = np.asarray(selected)
     sel_mask = np.zeros((pop.n,), bool)
     sel_mask[selected] = True
-    new_pop, dev = _simulate_round_jit(
+    new_pop, dev, retries, corrupt = _simulate_round_jit(
         pop, jnp.asarray(sel_mask), jnp.asarray(rnd, jnp.int32),
         energy_model, float(model_bytes), int(local_steps), int(batch_size),
         None if deadline_s is None else float(deadline_s),
-        None if up_bytes is None else float(up_bytes))
+        None if up_bytes is None else float(up_bytes),
+        faults)
     outcome = RoundOutcome(
         selected=selected,
         succeeded=np.asarray(dev.succeeded)[selected],
@@ -206,6 +240,8 @@ def simulate_round(pop: ClientPopulation, selected: np.ndarray,
         round_duration=float(dev.round_duration),
         new_dropouts=int(dev.new_dropouts),
         energy_spent_pct=float(dev.energy_spent_pct),
+        retries=int(retries),
+        corrupt=np.asarray(corrupt)[selected],
     )
     return new_pop, outcome
 
@@ -214,13 +250,21 @@ def make_round_engine(sel_cfg: SelectorConfig, energy_model: EnergyModel,
                       model_bytes: float, local_steps: int, batch_size: int,
                       deadline_s: Optional[float] = None,
                       up_bytes: Optional[float] = None,
-                      use_pallas: bool = False, interpret: bool = False):
+                      use_pallas: bool = False, interpret: bool = False,
+                      faults: Optional[FaultConfig] = None):
     """One fused traced round step: predicted cost → selection → simulation.
 
     Returns ``step(key, pop, sel_state) -> (pop, sel_state, idx, chosen,
     DeviceRoundOutcome)`` suitable for ``jax.jit`` or as a ``lax.scan``
     body. Training is *not* dispatched here — callers gather the selected
     indices and run training between steps (or not at all).
+
+    With ``faults``, selection still scores on the *clean* predicted cost
+    (Eq. 1's power(i) is a forecast — the selector cannot see transient
+    faults coming) while the simulation runs on the fault-modified
+    durations/costs, and the step returns two extra trailing outputs:
+    ``retries`` (i32 scalar, cohort-total upload re-attempts) and
+    ``corrupt`` ((N,) bool poisoned-delta flags).
     """
 
     def step(key, pop: ClientPopulation, sel_state: SelectorState):
@@ -232,10 +276,18 @@ def make_round_engine(sel_cfg: SelectorConfig, energy_model: EnergyModel,
         # routed to index N and dropped)
         sel_mask = jnp.zeros((pop.n,), bool).at[
             jnp.where(chosen, idx, pop.n)].set(True, mode="drop")
-        pop, dev = simulate_round_device(pop, sel_mask, t_total, cost,
-                                         sel_state.round, energy_model,
-                                         deadline_s)
-        return pop, sel_state, idx, chosen, dev
+        # post-selection sel_state.round is the 1-based round number every
+        # engine agrees on — the fault draws key off it
+        t_eff, cost_eff, draw = faults_for_round(faults, sel_state.round,
+                                                 t_total, cost)
+        pop, dev = simulate_round_device(
+            pop, sel_mask, t_eff, cost_eff, sel_state.round, energy_model,
+            deadline_s, fail_mask=None if draw is None else draw.fail)
+        if draw is None:
+            return pop, sel_state, idx, chosen, dev
+        retries = jnp.sum(jnp.where(sel_mask, draw.retries, 0)) \
+            .astype(jnp.int32)
+        return pop, sel_state, idx, chosen, dev, retries, draw.corrupt
 
     return step
 
@@ -244,16 +296,29 @@ def make_round_engine(sel_cfg: SelectorConfig, energy_model: EnergyModel,
 def _scanned_runner(sel_cfg: SelectorConfig, energy_model: EnergyModel,
                     model_bytes: float, local_steps: int, batch_size: int,
                     deadline_s: Optional[float], up_bytes: Optional[float],
-                    rounds: int, use_pallas: bool, interpret: bool):
-    """Cached jitted R-round scan (all args hashable statics), so repeated
-    calls with the same config reuse one compilation."""
+                    use_pallas: bool, interpret: bool,
+                    faults: Optional[FaultConfig]):
+    """Cached jitted scan over a caller-supplied (R, 2) key array (all
+    config args hashable statics), so repeated calls with the same config
+    reuse one compilation per distinct R. Scanning explicit key rows (the
+    prefix-stable ``split(key, rounds)`` stream) instead of splitting
+    inside the jit is what makes segmented/elastic runs bitwise identical
+    to one uninterrupted scan: a resumed run replays the exact same keys.
+    """
     step = make_round_engine(sel_cfg, energy_model, model_bytes,
                              local_steps, batch_size, deadline_s,
-                             up_bytes, use_pallas, interpret)
+                             up_bytes, use_pallas, interpret, faults)
+    faulty = faults is not None and faults.active
 
     def scan_step(carry, key_r):
         pop, st = carry
-        pop, st, idx, chosen, dev = step(key_r, pop, st)
+        if faulty:
+            pop, st, idx, chosen, dev, retries, corrupt = step(key_r, pop,
+                                                               st)
+        else:
+            pop, st, idx, chosen, dev = step(key_r, pop, st)
+            retries = jnp.int32(0)
+            corrupt = jnp.zeros((pop.n,), bool)
         out = {
             "selected": idx,
             "chosen": chosen,
@@ -263,15 +328,65 @@ def _scanned_runner(sel_cfg: SelectorConfig, energy_model: EnergyModel,
             "energy_spent_pct": dev.energy_spent_pct,
             "mean_battery": jnp.mean(pop.battery_pct),
             "total_dropped": jnp.sum(pop.dropped).astype(jnp.int32),
+            "retries": retries,
+            "corrupt": corrupt[idx] & chosen,
         }
         return (pop, st), out
 
     @jax.jit
-    def run(key, pop, st):
-        keys = jax.random.split(key, rounds)
+    def run(keys, pop, st):
         return jax.lax.scan(scan_step, (pop, st), keys)
 
     return run
+
+
+# ------------------------------------------------- elastic run plumbing
+# Shared by the four run_* engines: segment the scan at checkpoint
+# boundaries, snapshot the full carry atomically, splice trajectory parts
+# back together, and identify checkpoints so a resume refuses a snapshot
+# from a different run. Restart-parity contract: because each engine scans
+# an explicit prefix-stable key array and the carry hands off exactly at
+# segment boundaries, `resume_from` a round-r snapshot is bitwise identical
+# to the uninterrupted run (async engines: identical up to the documented
+# psum scalar tolerance of their sharded twins).
+
+
+def _engine_meta(family: str, sel_cfg: SelectorConfig, n: int, rounds: int,
+                 deadline_s, faults: Optional[FaultConfig],
+                 **extra) -> Dict[str, Any]:
+    meta = {
+        "family": family,
+        "n_clients": int(n),
+        "rounds": int(rounds),
+        "kind": sel_cfg.kind,
+        "k": int(sel_cfg.k),
+        "deadline_s": None if deadline_s is None else float(deadline_s),
+        "faults": None if faults is None else dataclasses.asdict(faults),
+    }
+    meta.update(extra)
+    return meta
+
+
+def _concat_traj(parts: List[Dict[str, Any]]) -> Dict[str, Any]:
+    """Concatenate per-segment trajectory dicts along the round axis."""
+    if len(parts) == 1:
+        return dict(parts[0])
+    return {k: np.concatenate([np.asarray(p[k]) for p in parts], axis=0)
+            for k in parts[0]}
+
+
+def _make_checkpointer(checkpoint_path: Optional[str],
+                       checkpoint_every: Optional[int], rounds: int,
+                       meta: Dict[str, Any]):
+    """Validate + normalise the elastic knobs into a CarryCheckpointer
+    (or None). ``checkpoint_path`` alone means final-snapshot-only."""
+    if checkpoint_every is not None and not checkpoint_path:
+        raise ValueError("checkpoint_every is set but checkpoint_path is "
+                         "not — there is nowhere to write snapshots")
+    if not checkpoint_path:
+        return None
+    every = checkpoint_every if checkpoint_every else rounds
+    return CarryCheckpointer(checkpoint_path, every, rounds, meta)
 
 
 def run_rounds_scanned(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
@@ -282,6 +397,10 @@ def run_rounds_scanned(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
                        up_bytes: Optional[float] = None,
                        use_pallas: Optional[bool] = None,
                        interpret: Optional[bool] = None,
+                       faults: Optional[FaultConfig] = None,
+                       checkpoint_every: Optional[int] = None,
+                       checkpoint_path: Optional[str] = None,
+                       resume_from: Optional[str] = None,
                        ) -> Tuple[ClientPopulation, SelectorState,
                                   Dict[str, jnp.ndarray]]:
     """Advance selection + energy + battery state for ``rounds`` rounds
@@ -291,8 +410,17 @@ def run_rounds_scanned(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
     Returns ``(final_pop, final_state, trajectory)`` where the trajectory
     holds per-round arrays: ``selected (R,k)``, ``chosen (R,k)``,
     ``succeeded (R,k)`` (per selected slot), ``round_duration (R,)``,
-    ``new_dropouts (R,)``, ``energy_spent_pct (R,)``, ``mean_battery (R,)``
-    and ``total_dropped (R,)``.
+    ``new_dropouts (R,)``, ``energy_spent_pct (R,)``, ``mean_battery (R,)``,
+    ``total_dropped (R,)``, plus the fault-injection bookkeeping
+    ``retries (R,)`` and ``corrupt (R,k)`` (all-zero unless ``faults`` is
+    active).
+
+    Elasticity: ``checkpoint_path`` (+ ``checkpoint_every`` rounds, default
+    final-only) atomically snapshots the full scan carry + trajectory
+    (``repro.checkpoint``); ``resume_from`` restores such a snapshot and
+    continues mid-trajectory. Because the scan consumes the prefix-stable
+    ``split(key, rounds)`` stream as explicit rows, a resumed run is
+    bitwise identical to the uninterrupted one (``tests/test_elastic.py``).
 
     Equivalence contract: matches the per-round host loop (``select`` +
     ``simulate_round``) within float tolerance
@@ -309,9 +437,33 @@ def run_rounds_scanned(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
         int(batch_size),
         None if deadline_s is None else float(deadline_s),
         None if up_bytes is None else float(up_bytes),
-        int(rounds), _auto_pallas(pop.n, use_pallas), interpret)
-    (pop, st), traj = run(key, pop, sel_state.canonical())
-    return pop, st, traj
+        _auto_pallas(pop.n, use_pallas), interpret, faults)
+    keys = jax.random.split(key, rounds)
+    st = sel_state.canonical()
+    if checkpoint_path is None and resume_from is None:
+        if checkpoint_every is not None:
+            raise ValueError("checkpoint_every is set but checkpoint_path "
+                             "is not — there is nowhere to write snapshots")
+        (pop, st), traj = run(keys, pop, st)
+        return pop, st, traj
+
+    meta = _engine_meta("sync", sel_cfg, pop.n, rounds, deadline_s, faults)
+    start, parts = 0, []
+    if resume_from is not None:
+        start, state, data, _ = load_engine_checkpoint(
+            resume_from, {"pop": pop, "st": st}, expect_meta=meta)
+        pop, st = state["pop"], state["st"]
+        if data.get("traj"):
+            parts.append(data["traj"])
+    ck = _make_checkpointer(checkpoint_path, checkpoint_every, rounds, meta)
+    for a, b in segment_bounds(start, rounds,
+                               ck.every if ck is not None else None):
+        (pop, st), traj = run(keys[a:b], pop, st)
+        parts.append(jax.tree.map(np.asarray, traj))
+        if ck is not None and ck.due(b):
+            ck.save(b, {"pop": pop, "st": st},
+                    {"traj": _concat_traj(parts)})
+    return pop, st, _concat_traj(parts)
 
 
 # ------------------------------------------------------------------ sharded
@@ -329,8 +481,18 @@ def run_rounds_scanned(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
 
 def _shard_round_step(key, sel_state, pop, t_total, cost, bits, *,
                       sel_cfg, energy_model, deadline_s, use_pallas,
-                      interpret, axis_name, n_real):
-    """Shard-local round step (selection -> simulation) for shard_map."""
+                      interpret, axis_name, n_real,
+                      faults=None, streams=None):
+    """Shard-local round step (selection -> simulation) for shard_map.
+
+    With ``faults`` + ``streams`` (the round's globally generated,
+    spec-sharded ``(n_loc, N_FAULT_STREAMS)`` uniforms — generated *outside*
+    the shard_map so every shard sees its own slice of the one global
+    stream), selection scores on the clean cost while the simulation runs
+    on the fault-modified durations/costs, exactly like the single-device
+    engine; ``apply_faults`` is elementwise, so the per-client outcomes are
+    bitwise identical to the unsharded run.
+    """
     n_loc = cost.shape[0]
     base = (jax.lax.axis_index(axis_name) * n_loc).astype(jnp.int32)
     idx, chosen, sel_state = _shard_select(
@@ -341,23 +503,42 @@ def _shard_round_step(key, sel_state, pop, t_total, cost, bits, *,
     own = chosen & (idx >= base) & (idx < base + n_loc)
     sel_mask = jnp.zeros((n_loc,), bool).at[
         jnp.where(own, idx - base, n_loc)].set(True, mode="drop")
-    pop, dev = simulate_round_device(pop, sel_mask, t_total, cost,
+    if faults is not None and streams is not None:
+        t_sim, cost_sim, draw = apply_faults(
+            faults, t_total, cost,
+            tuple(streams[:, j] for j in range(N_FAULT_STREAMS)))
+        fail_mask = draw.fail
+    else:
+        t_sim, cost_sim, draw, fail_mask = t_total, cost, None, None
+    pop, dev = simulate_round_device(pop, sel_mask, t_sim, cost_sim,
                                      sel_state.round, energy_model,
-                                     deadline_s, axis_name=axis_name)
+                                     deadline_s, axis_name=axis_name,
+                                     fail_mask=fail_mask)
     # per-slot success for the trajectory: one shard owns each slot
     succ_sel = _slot_gather(dev.succeeded, idx, chosen, base, axis_name) > 0
-    return pop, sel_state, idx, chosen, succ_sel, dev
+    if draw is None:
+        retries = jnp.int32(0)
+        corrupt_sel = jnp.zeros(idx.shape, bool)
+    else:
+        # integer psums are exact, so both match the host engine bitwise
+        retries = jax.lax.psum(
+            jnp.sum(jnp.where(sel_mask, draw.retries, 0)),
+            axis_name).astype(jnp.int32)
+        corrupt_sel = (_slot_gather_i32(draw.corrupt, idx, chosen, base,
+                                        axis_name) > 0) & chosen
+    return pop, sel_state, idx, chosen, succ_sel, dev, retries, corrupt_sel
 
 
 @functools.lru_cache(maxsize=16)
 def _sharded_scanned_runner(sel_cfg: SelectorConfig,
                             energy_model: EnergyModel,
-                            deadline_s: Optional[float], rounds: int,
+                            deadline_s: Optional[float],
                             use_pallas: bool, interpret: bool,
-                            mesh, n_real: int, axis_name: str):
-    """Cached jitted R-round sharded scan. The hoisted cost table is a run
-    argument (not a static), so one compilation serves any population with
-    the same shape/config."""
+                            mesh, n_real: int, axis_name: str,
+                            faults: Optional[FaultConfig]):
+    """Cached jitted sharded scan over a caller-supplied (R, 2) key array.
+    The hoisted cost table is a run argument (not a static), so one
+    compilation serves any population with the same shape/config."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -365,13 +546,16 @@ def _sharded_scanned_runner(sel_cfg: SelectorConfig,
     n_padded = n_real + (-n_real) % n_shards
     n_pad = n_padded - n_real
     spec = P(axis_name)
+    faulty = faults is not None and faults.active
 
-    def body(key_r, st, pop, t_total, cost, bits):
-        pop, st, idx, chosen, succ_sel, dev = _shard_round_step(
-            key_r, st, pop, t_total, cost, bits, sel_cfg=sel_cfg,
-            energy_model=energy_model, deadline_s=deadline_s,
-            use_pallas=use_pallas, interpret=interpret,
-            axis_name=axis_name, n_real=n_real)
+    def body(key_r, st, pop, t_total, cost, bits, streams=None):
+        pop, st, idx, chosen, succ_sel, dev, retries, corrupt_sel = \
+            _shard_round_step(
+                key_r, st, pop, t_total, cost, bits, sel_cfg=sel_cfg,
+                energy_model=energy_model, deadline_s=deadline_s,
+                use_pallas=use_pallas, interpret=interpret,
+                axis_name=axis_name, n_real=n_real,
+                faults=faults if faulty else None, streams=streams)
         out = {
             "selected": idx,
             "chosen": chosen,
@@ -382,26 +566,38 @@ def _sharded_scanned_runner(sel_cfg: SelectorConfig,
             "mean_battery": _asum(pop.battery_pct, axis_name) / n_real,
             "total_dropped": (_asum(pop.dropped, axis_name)
                               .astype(jnp.int32) - n_pad),
+            "retries": retries,
+            "corrupt": corrupt_sel,
         }
         return pop, st, out
 
+    stream_specs = (spec,) if faulty else ()
     smapped = shard_map(body, mesh=mesh,
-                        in_specs=(P(), P(), spec, spec, spec, spec),
+                        in_specs=(P(), P(), spec, spec, spec, spec)
+                        + stream_specs,
                         out_specs=(spec, P(), P()),
                         check_rep=False)
 
     @jax.jit
-    def run(key, pop, st, t_total, cost):
+    def run(keys, pop, st, t_total, cost):
         def scan_step(carry, key_r):
             pop, st = carry
             # prefix-stable sharded rank bits (partitionable threefry):
             # the first n_real values equal the single-device stream
             bits = jax.lax.with_sharding_constraint(
                 _rank_bits(key_r, n_padded), NamedSharding(mesh, spec))
-            pop, st, out = smapped(key_r, st, pop, t_total, cost, bits)
+            args = (key_r, st, pop, t_total, cost, bits)
+            if faulty:
+                # fault streams are global + prefix-stable like the rank
+                # bits: generated at n_padded outside the shard_map, keyed
+                # on the post-selection round number (pre-select carry + 1)
+                streams = jnp.stack(
+                    fault_streams(faults, st.round + 1, n_padded), axis=-1)
+                args += (jax.lax.with_sharding_constraint(
+                    streams, NamedSharding(mesh, spec)),)
+            pop, st, out = smapped(*args)
             return (pop, st), out
 
-        keys = jax.random.split(key, rounds)
         return jax.lax.scan(scan_step, (pop, st), keys)
 
     return run
@@ -653,10 +849,14 @@ def _async_scanned_runner(sel_cfg: SelectorConfig, energy_model: EnergyModel,
                           max_concurrency: Optional[int],
                           staleness_power: float,
                           deadline_s: Optional[float],
-                          up_bytes: Optional[float], rounds: int,
+                          up_bytes: Optional[float],
                           use_pallas: bool, interpret: bool):
-    """Cached jitted R-aggregation async scan (event-stepped twin of
-    :func:`_scanned_runner`)."""
+    """Cached jitted async runner pair (event-stepped twin of
+    :func:`_scanned_runner`): ``fill(key0, pop, st)`` primes the pipe,
+    ``seg(xs, pop, st, astate)`` scans a slice of the aggregation stream.
+    Splitting fill from scan lets elastic runs checkpoint/resume the event
+    carry between segments; the fill-prepend trajectory postprocess lives
+    in :func:`run_async_scanned` after the segments are spliced."""
     init_fill, step = make_async_round_engine(
         sel_cfg, energy_model, model_bytes, local_steps, batch_size,
         buffer_size, max_concurrency, staleness_power, deadline_s,
@@ -678,36 +878,46 @@ def _async_scanned_runner(sel_cfg: SelectorConfig, energy_model: EnergyModel,
         return (pop, st, astate), out
 
     @jax.jit
-    def run(key, pop, st):
-        # the sync engine draws selection keys as split(key, rounds)[r] for
-        # round r — reuse the exact same stream (keys[0] primes the pipe,
-        # keys[r] refills after flush r) so the parity limit reproduces the
-        # sync selection trajectory key-for-key
-        keys = jax.random.split(key, rounds)
+    def fill(key0, pop, st):
         astate = AsyncEventState.create(pop.n)
-        st, astate, idx0, chosen0 = init_fill(keys[0], pop, st, astate)
-        xs = {
-            "key": jnp.concatenate([keys[1:], keys[-1:]]),
-            # the last flush refills nothing: a fixed-length run is over,
-            # and skipping the call keeps the selector-state trajectory
-            # identical to `rounds` synchronous selections
-            "refill": jnp.arange(rounds) < rounds - 1,
-        }
-        (pop, st, astate), traj = jax.lax.scan(
-            scan_step, (pop, st, astate), xs)
-        # selection trajectory aligned with the sync engine: row r is the
-        # cohort *started* for aggregation r+1 (initial fill + refills).
-        # The fill row is truncated to the refill width; the full
-        # (max_concurrency,) fill is also returned for replay/debugging.
-        traj["fill_selected"] = idx0
-        traj["fill_chosen"] = chosen0
-        traj["selected"] = jnp.concatenate([idx0[None, :buffer_size],
-                                            traj["selected"][:-1]])
-        traj["chosen"] = jnp.concatenate([chosen0[None, :buffer_size],
-                                          traj["chosen"][:-1]])
-        return (pop, st, astate), traj
+        st, astate, idx0, chosen0 = init_fill(key0, pop, st, astate)
+        return st, astate, idx0, chosen0
 
-    return run
+    @jax.jit
+    def seg(xs, pop, st, astate):
+        return jax.lax.scan(scan_step, (pop, st, astate), xs)
+
+    return fill, seg
+
+
+def _async_xs(key, rounds: int):
+    """The async engines' per-aggregation scan inputs: the sync engine
+    draws selection keys as split(key, rounds)[r] for round r — reuse the
+    exact same stream (keys[0] primes the pipe, keys[r] refills after
+    flush r) so the parity limit reproduces the sync selection trajectory
+    key-for-key. The last flush refills nothing: a fixed-length run is
+    over, and skipping the call keeps the selector-state trajectory
+    identical to ``rounds`` synchronous selections."""
+    keys = jax.random.split(key, rounds)
+    xs = {
+        "key": jnp.concatenate([keys[1:], keys[-1:]]),
+        "refill": jnp.arange(rounds) < rounds - 1,
+    }
+    return keys[0], xs
+
+
+def _async_fill_prepend(traj, idx0, chosen0, b: int):
+    """Selection trajectory aligned with the sync engine: row r is the
+    cohort *started* for aggregation r+1 (initial fill + refills). The
+    fill row is truncated to the refill width; the full
+    (max_concurrency,) fill is also kept for replay/debugging."""
+    traj["fill_selected"] = idx0
+    traj["fill_chosen"] = chosen0
+    traj["selected"] = jnp.concatenate([jnp.asarray(idx0)[None, :b],
+                                        jnp.asarray(traj["selected"])[:-1]])
+    traj["chosen"] = jnp.concatenate([jnp.asarray(chosen0)[None, :b],
+                                      jnp.asarray(traj["chosen"])[:-1]])
+    return traj
 
 
 def run_async_scanned(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
@@ -721,6 +931,10 @@ def run_async_scanned(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
                       up_bytes: Optional[float] = None,
                       use_pallas: Optional[bool] = None,
                       interpret: Optional[bool] = None,
+                      faults: Optional[FaultConfig] = None,
+                      checkpoint_every: Optional[int] = None,
+                      checkpoint_path: Optional[str] = None,
+                      resume_from: Optional[str] = None,
                       ) -> Tuple[ClientPopulation, SelectorState,
                                  Dict[str, jnp.ndarray]]:
     """FedBuff-style asynchronous twin of :func:`run_rounds_scanned`:
@@ -744,10 +958,22 @@ def run_async_scanned(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
     selection/battery/dropout trajectory within float tolerance. Note the
     first row of ``selected``/``chosen`` is the initial fill truncated to
     ``buffer_size`` slots — equal to the full fill in the parity limit.
+
+    Elasticity (``checkpoint_path``/``checkpoint_every``/``resume_from``)
+    snapshots the full event carry — population, selector state, and
+    :class:`AsyncEventState` (in-flight clocks + versions) — between
+    aggregations; a resumed run replays the identical key stream and is
+    bitwise identical to the uninterrupted one. ``faults`` is rejected:
+    the event engine's completion ordering has no well-defined round
+    boundary for per-round fault draws (use the sync engines).
     """
+    if faults is not None and faults.active:
+        raise ValueError(
+            "fault injection is not supported by the async event engines "
+            "(no per-round fault boundary); use the sync engines")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    run = _async_scanned_runner(
+    fill, seg = _async_scanned_runner(
         sel_cfg, energy_model, float(model_bytes), int(local_steps),
         int(batch_size),
         None if buffer_size is None else int(buffer_size),
@@ -755,8 +981,50 @@ def run_async_scanned(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
         float(staleness_power),
         None if deadline_s is None else float(deadline_s),
         None if up_bytes is None else float(up_bytes),
-        int(rounds), _auto_pallas(pop.n, use_pallas), interpret)
-    (pop, st, astate), traj = run(key, pop, sel_state.canonical())
+        _auto_pallas(pop.n, use_pallas), interpret)
+    b = sel_cfg.k if buffer_size is None else int(buffer_size)
+    key0, xs = _async_xs(key, rounds)
+    st = sel_state.canonical()
+    if checkpoint_path is None and resume_from is None:
+        if checkpoint_every is not None:
+            raise ValueError("checkpoint_every is set but checkpoint_path "
+                             "is not — there is nowhere to write snapshots")
+        st, astate, idx0, chosen0 = fill(key0, pop, st)
+        (pop, st, astate), traj = seg(xs, pop, st, astate)
+        traj = _async_fill_prepend(traj, idx0, chosen0, b)
+        traj["final_event_state"] = astate
+        return pop, st, traj
+
+    meta = _engine_meta(
+        "async", sel_cfg, pop.n, rounds, deadline_s, faults,
+        buffer_size=b,
+        max_concurrency=(sel_cfg.k if max_concurrency is None
+                         else int(max_concurrency)),
+        staleness_power=float(staleness_power))
+    start, parts = 0, []
+    if resume_from is not None:
+        templates = {"pop": pop, "st": st,
+                     "astate": AsyncEventState.create(pop.n)}
+        start, state, data, _ = load_engine_checkpoint(
+            resume_from, templates, expect_meta=meta)
+        pop, st, astate = state["pop"], state["st"], state["astate"]
+        idx0, chosen0 = data["fill_selected"], data["fill_chosen"]
+        if data.get("traj"):
+            parts.append(data["traj"])
+    else:
+        st, astate, idx0, chosen0 = fill(key0, pop, st)
+    ck = _make_checkpointer(checkpoint_path, checkpoint_every, rounds, meta)
+    for a, e in segment_bounds(start, rounds,
+                               ck.every if ck is not None else None):
+        xs_seg = {k2: v[a:e] for k2, v in xs.items()}
+        (pop, st, astate), traj = seg(xs_seg, pop, st, astate)
+        parts.append(jax.tree.map(np.asarray, traj))
+        if ck is not None and ck.due(e):
+            ck.save(e, {"pop": pop, "st": st, "astate": astate},
+                    {"traj": _concat_traj(parts),
+                     "fill_selected": np.asarray(idx0),
+                     "fill_chosen": np.asarray(chosen0)})
+    traj = _async_fill_prepend(_concat_traj(parts), idx0, chosen0, b)
     traj["final_event_state"] = astate
     return pop, st, traj
 
@@ -770,6 +1038,10 @@ def run_rounds_sharded(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
                        use_pallas: Optional[bool] = None,
                        interpret: Optional[bool] = None,
                        mesh=None, n_shards: Optional[int] = None,
+                       faults: Optional[FaultConfig] = None,
+                       checkpoint_every: Optional[int] = None,
+                       checkpoint_path: Optional[str] = None,
+                       resume_from: Optional[str] = None,
                        ) -> Tuple[ClientPopulation, SelectorState,
                                   Dict[str, jnp.ndarray]]:
     """Sharded twin of :func:`run_rounds_scanned` over a 1-D `clients`
@@ -786,6 +1058,14 @@ def run_rounds_sharded(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
     the real client count. Worth it above ~:data:`ENGINE_CUTOVER_N`
     clients — below that, collective latency dominates and
     :func:`run_rounds` picks the single-device engine instead.
+
+    Elasticity (``checkpoint_path`` / ``checkpoint_every`` /
+    ``resume_from``) works exactly like the scanned engine's, and
+    snapshots store the population *trimmed to the real client count* —
+    pad clients provably never leave their initial dead state, so a
+    checkpoint written under one device count resumes under any other
+    (including by the single-device engine: both share the ``"sync"``
+    checkpoint family).
     """
     from repro.launch.mesh import make_client_mesh
     from repro.launch.sharding import population_sharding
@@ -797,20 +1077,53 @@ def run_rounds_sharded(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
     axis_name = mesh.axis_names[0]
     n_real = pop.n
     shard = population_sharding(mesh, axis_name)
-    padded = jax.device_put(pad_population(pop, mesh.shape[axis_name]),
-                            shard)
+    n_dev = mesh.shape[axis_name]
+
+    def pad_put(p):
+        return jax.device_put(pad_population(p, n_dev), shard)
+
+    def trim(p):
+        return (jax.tree.map(lambda x: x[:n_real], p)
+                if p.n != n_real else p)
+
+    padded = pad_put(pop)
     t_total, cost = round_cost_table(padded, energy_model, model_bytes,
                                      local_steps, batch_size, up_bytes,
                                      sharding=shard)
     run = _sharded_scanned_runner(
         sel_cfg, energy_model,
-        None if deadline_s is None else float(deadline_s), int(rounds),
+        None if deadline_s is None else float(deadline_s),
         _auto_pallas(n_real, use_pallas), interpret, mesh, n_real,
-        axis_name)
-    (fpop, st), traj = run(key, padded, sel_state.canonical(), t_total, cost)
-    if fpop.n != n_real:
-        fpop = jax.tree.map(lambda x: x[:n_real], fpop)
-    return fpop, st, traj
+        axis_name, faults)
+    keys = jax.random.split(key, rounds)
+    st = sel_state.canonical()
+    if checkpoint_path is None and resume_from is None:
+        if checkpoint_every is not None:
+            raise ValueError("checkpoint_every is set but checkpoint_path "
+                             "is not — there is nowhere to write snapshots")
+        (fpop, st), traj = run(keys, padded, st, t_total, cost)
+        return trim(fpop), st, traj
+
+    # same meta family as the scanned engine: sync checkpoints are
+    # engine- and device-count-portable (trimmed populations)
+    meta = _engine_meta("sync", sel_cfg, n_real, rounds, deadline_s, faults)
+    start, parts = 0, []
+    if resume_from is not None:
+        start, state, data, _ = load_engine_checkpoint(
+            resume_from, {"pop": pop, "st": st}, expect_meta=meta)
+        padded, st = pad_put(state["pop"]), state["st"]
+        if data.get("traj"):
+            parts.append(data["traj"])
+    ck = _make_checkpointer(checkpoint_path, checkpoint_every, rounds, meta)
+    fpop = padded
+    for a, b in segment_bounds(start, rounds,
+                               ck.every if ck is not None else None):
+        (fpop, st), traj = run(keys[a:b], fpop, st, t_total, cost)
+        parts.append(jax.tree.map(np.asarray, traj))
+        if ck is not None and ck.due(b):
+            ck.save(b, {"pop": trim(fpop), "st": st},
+                    {"traj": _concat_traj(parts)})
+    return trim(fpop), st, _concat_traj(parts)
 
 
 # ----------------------------------------------------------- sharded async
@@ -1036,32 +1349,33 @@ def _sharded_async_runner(sel_cfg: SelectorConfig, energy_model: EnergyModel,
                           buffer_size: Optional[int],
                           max_concurrency: Optional[int],
                           staleness_power: float,
-                          deadline_s: Optional[float], rounds: int,
+                          deadline_s: Optional[float],
                           use_pallas: bool, interpret: bool,
                           mesh, n_real: int, axis_name: str):
-    """Cached jitted R-aggregation sharded async scan (event-stepped twin
-    of :func:`_sharded_scanned_runner`; key/trajectory layout identical to
-    :func:`_async_scanned_runner`)."""
+    """Cached jitted sharded async runner pair (event-stepped twin of
+    :func:`_sharded_scanned_runner`; key/trajectory layout identical to
+    :func:`_async_scanned_runner`): ``fill`` primes the pipe, ``seg``
+    scans a slice of the aggregation stream — same split as the scanned
+    async runner, for the same elastic reasons."""
     init_fill, step = make_sharded_async_engine(
         sel_cfg, energy_model, mesh, n_real, buffer_size, max_concurrency,
         staleness_power, deadline_s, use_pallas, interpret, axis_name)
-    b = buffer_size if buffer_size is not None else sel_cfg.k
     n_shards = mesh.shape[axis_name]
     n_padded = n_real + (-n_real) % n_shards
 
     @jax.jit
-    def run(key, pop, st, t_total, cost):
+    def fill(key0, pop, st, t_total, cost):
         # same key stream as the scanned async runner (and therefore the
         # sync engines): keys[0] primes the pipe, keys[r] refills flush r
-        keys = jax.random.split(key, rounds)
         astate = AsyncEventState.create(n_padded)
-        st, astate, idx0, chosen0 = init_fill(keys[0], pop, st, astate,
-                                              t_total, cost)
+        return init_fill(key0, pop, st, astate, t_total, cost)
 
-        def scan_step(carry, xs):
+    @jax.jit
+    def seg(xs, pop, st, astate, t_total, cost):
+        def scan_step(carry, x):
             pop, st, astate = carry
             pop, st, astate, flush, (ridx, rchosen), stats = step(
-                xs["key"], pop, st, astate, t_total, cost, xs["refill"])
+                x["key"], pop, st, astate, t_total, cost, x["refill"])
             out = {
                 **flush,
                 "selected": ridx,
@@ -1071,21 +1385,24 @@ def _sharded_async_runner(sel_cfg: SelectorConfig, energy_model: EnergyModel,
             }
             return (pop, st, astate), out
 
-        xs = {
-            "key": jnp.concatenate([keys[1:], keys[-1:]]),
-            "refill": jnp.arange(rounds) < rounds - 1,
-        }
-        (pop, st, astate), traj = jax.lax.scan(
-            scan_step, (pop, st, astate), xs)
-        traj["fill_selected"] = idx0
-        traj["fill_chosen"] = chosen0
-        traj["selected"] = jnp.concatenate([idx0[None, :b],
-                                            traj["selected"][:-1]])
-        traj["chosen"] = jnp.concatenate([chosen0[None, :b],
-                                          traj["chosen"][:-1]])
-        return (pop, st, astate), traj
+        return jax.lax.scan(scan_step, (pop, st, astate), xs)
 
-    return run
+    return fill, seg
+
+
+def _pad_astate(astate: AsyncEventState, n_padded: int) -> AsyncEventState:
+    """Re-pad a trimmed :class:`AsyncEventState` to the mesh width. Pad
+    slots get the initial idle values (+inf clock, version 0) — pad
+    clients are dead, never selected, never started, so these provably
+    never change over a run; a trimmed snapshot loses nothing."""
+    pad = n_padded - astate.t_done.shape[0]
+    if pad <= 0:
+        return astate
+    return astate._replace(
+        t_done=jnp.concatenate(
+            [astate.t_done, jnp.full((pad,), jnp.inf, jnp.float32)]),
+        start_version=jnp.concatenate(
+            [astate.start_version, jnp.zeros((pad,), jnp.int32)]))
 
 
 def run_async_sharded(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
@@ -1100,6 +1417,10 @@ def run_async_sharded(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
                       use_pallas: Optional[bool] = None,
                       interpret: Optional[bool] = None,
                       mesh=None, n_shards: Optional[int] = None,
+                      faults: Optional[FaultConfig] = None,
+                      checkpoint_every: Optional[int] = None,
+                      checkpoint_path: Optional[str] = None,
+                      resume_from: Optional[str] = None,
                       ) -> Tuple[ClientPopulation, SelectorState,
                                  Dict[str, jnp.ndarray]]:
     """Sharded twin of :func:`run_async_scanned` over a 1-D `clients` mesh
@@ -1119,10 +1440,21 @@ def run_async_sharded(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
     reduction-order tolerance. Verified under 1/2/8 virtual devices by
     ``repro.launch.sharded_check``. The returned population and
     ``final_event_state`` are trimmed back to the real client count.
+
+    Elasticity works like :func:`run_async_scanned`'s; snapshots store the
+    population *and* the event state trimmed to the real client count (pad
+    slots provably stay at their initial idle values), so an ``"async"``
+    checkpoint resumes under any device count — including by the
+    single-device async engine. ``faults`` is rejected (see there).
     """
     from repro.launch.mesh import make_client_mesh
     from repro.launch.sharding import population_sharding
+    from jax.sharding import NamedSharding, PartitionSpec as P
 
+    if faults is not None and faults.active:
+        raise ValueError(
+            "fault injection is not supported by the async event engines "
+            "(no per-round fault boundary); use the sync engines")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if mesh is None:
@@ -1130,27 +1462,86 @@ def run_async_sharded(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
     axis_name = mesh.axis_names[0]
     n_real = pop.n
     shard = population_sharding(mesh, axis_name)
-    padded = jax.device_put(pad_population(pop, mesh.shape[axis_name]),
-                            shard)
+    n_dev = mesh.shape[axis_name]
+    n_padded = n_real + (-n_real) % n_dev
+    padded = jax.device_put(pad_population(pop, n_dev), shard)
     t_total, cost = round_cost_table(padded, energy_model, model_bytes,
                                      local_steps, batch_size, up_bytes,
                                      sharding=shard)
-    run = _sharded_async_runner(
+    fill, seg = _sharded_async_runner(
         sel_cfg, energy_model,
         None if buffer_size is None else int(buffer_size),
         None if max_concurrency is None else int(max_concurrency),
         float(staleness_power),
-        None if deadline_s is None else float(deadline_s), int(rounds),
+        None if deadline_s is None else float(deadline_s),
         _auto_pallas(n_real, use_pallas), interpret, mesh, n_real,
         axis_name)
-    (fpop, st, astate), traj = run(key, padded, sel_state.canonical(),
-                                   t_total, cost)
-    if fpop.n != n_real:
-        fpop = jax.tree.map(lambda x: x[:n_real], fpop)
-        astate = astate._replace(t_done=astate.t_done[:n_real],
-                                 start_version=astate.start_version[:n_real])
-    traj["final_event_state"] = astate
-    return fpop, st, traj
+    b = sel_cfg.k if buffer_size is None else int(buffer_size)
+
+    def trim_pop(p):
+        return (jax.tree.map(lambda x: x[:n_real], p)
+                if p.n != n_real else p)
+
+    def trim_astate(a):
+        if a.t_done.shape[0] == n_real:
+            return a
+        return a._replace(t_done=a.t_done[:n_real],
+                          start_version=a.start_version[:n_real])
+
+    key0, xs = _async_xs(key, rounds)
+    st = sel_state.canonical()
+    if checkpoint_path is None and resume_from is None:
+        if checkpoint_every is not None:
+            raise ValueError("checkpoint_every is set but checkpoint_path "
+                             "is not — there is nowhere to write snapshots")
+        st, astate, idx0, chosen0 = fill(key0, padded, st, t_total, cost)
+        (fpop, st, astate), traj = seg(xs, padded, st, astate, t_total,
+                                       cost)
+        traj = _async_fill_prepend(traj, idx0, chosen0, b)
+        traj["final_event_state"] = trim_astate(astate)
+        return trim_pop(fpop), st, traj
+
+    meta = _engine_meta(
+        "async", sel_cfg, n_real, rounds, deadline_s, faults,
+        buffer_size=b,
+        max_concurrency=(sel_cfg.k if max_concurrency is None
+                         else int(max_concurrency)),
+        staleness_power=float(staleness_power))
+    start, parts = 0, []
+    if resume_from is not None:
+        templates = {"pop": pop, "st": st,
+                     "astate": AsyncEventState.create(n_real)}
+        start, state, data, _ = load_engine_checkpoint(
+            resume_from, templates, expect_meta=meta)
+        padded = jax.device_put(pad_population(state["pop"], n_dev), shard)
+        st = state["st"]
+        astate = jax.device_put(
+            _pad_astate(state["astate"], n_padded),
+            AsyncEventState(t_done=shard, start_version=shard,
+                            server_clock=NamedSharding(mesh, P()),
+                            server_version=NamedSharding(mesh, P())))
+        idx0, chosen0 = data["fill_selected"], data["fill_chosen"]
+        if data.get("traj"):
+            parts.append(data["traj"])
+    else:
+        st, astate, idx0, chosen0 = fill(key0, padded, st, t_total, cost)
+    ck = _make_checkpointer(checkpoint_path, checkpoint_every, rounds, meta)
+    fpop = padded
+    for a, e in segment_bounds(start, rounds,
+                               ck.every if ck is not None else None):
+        xs_seg = {k2: v[a:e] for k2, v in xs.items()}
+        (fpop, st, astate), traj = seg(xs_seg, fpop, st, astate, t_total,
+                                       cost)
+        parts.append(jax.tree.map(np.asarray, traj))
+        if ck is not None and ck.due(e):
+            ck.save(e, {"pop": trim_pop(fpop), "st": st,
+                        "astate": trim_astate(astate)},
+                    {"traj": _concat_traj(parts),
+                     "fill_selected": np.asarray(idx0),
+                     "fill_chosen": np.asarray(chosen0)})
+    traj = _async_fill_prepend(_concat_traj(parts), idx0, chosen0, b)
+    traj["final_event_state"] = trim_astate(astate)
+    return trim_pop(fpop), st, traj
 
 
 # -------------------------------------------------------------- dispatcher
@@ -1276,6 +1667,10 @@ def run_rounds(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
                staleness_power: float = 0.5,
                mesh=None, n_shards: Optional[int] = None,
                cutover_n: Optional[int] = None,
+               faults: Optional[FaultConfig] = None,
+               checkpoint_every: Optional[int] = None,
+               checkpoint_path: Optional[str] = None,
+               resume_from: Optional[str] = None,
                ) -> Tuple[ClientPopulation, SelectorState, Dict]:
     """Unified front door over the four round engines.
 
@@ -1295,6 +1690,14 @@ def run_rounds(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
     behavior-preserving on the same key (the parity contracts of the
     underlying engines). The chosen engine name is recorded in the
     returned trajectory as ``traj["engine"]``.
+
+    Elasticity + faults pass through to every engine: ``faults`` injects
+    deterministic seed-driven transient client faults (sync engines only),
+    ``checkpoint_path``/``checkpoint_every`` snapshot the engine carry
+    atomically, and ``resume_from`` restores a snapshot mid-trajectory
+    with restart parity. Checkpoints carry a family tag (``"sync"`` /
+    ``"async"``), not an engine name — the trimmed-population format is
+    engine- and device-count-portable within a family.
     """
     if mesh is not None:
         device_count = mesh.shape[mesh.axis_names[0]]
@@ -1324,7 +1727,9 @@ def run_rounds(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
             f"the knobs")
 
     common = dict(deadline_s=deadline_s, up_bytes=up_bytes,
-                  use_pallas=use_pallas, interpret=interpret)
+                  use_pallas=use_pallas, interpret=interpret,
+                  faults=faults, checkpoint_every=checkpoint_every,
+                  checkpoint_path=checkpoint_path, resume_from=resume_from)
     async_kw = dict(buffer_size=buffer_size,
                     max_concurrency=max_concurrency,
                     staleness_power=staleness_power)

@@ -1,0 +1,410 @@
+from repro.host_devices import force_host_device_count_from_argv
+
+force_host_device_count_from_argv()  # must precede the first jax import
+
+"""Restart-parity / elasticity checker for the checkpointed engines.
+
+Kill-at-round-r semantics: every engine with elastic knobs
+(``checkpoint_path`` / ``checkpoint_every`` / ``resume_from``) must
+produce a trajectory from ``resume_from`` a round-r snapshot that is
+*bitwise identical* to the uninterrupted run — the checkpoint carries the
+full scan carry (params, opt state, population, selector state, RNG
+chain), so a crash between rounds loses nothing but wall time. Like
+``launch/sharded_check.py`` this must run in its own process so the
+virtual-device count can be forced before jax initialises.
+
+The default matrix covers the ENGINE-LEVEL round engines (no model
+training — selection + energy + battery only, so it is cheap enough for
+the full kind matrix):
+
+  - ``run_rounds_scanned`` / ``run_rounds_sharded`` resume parity for
+    every selector kind (eafl / oort / eafl-epj / random), plus a
+    fault-injected leg (faults are part of the checkpoint identity);
+  - ``run_async_scanned`` / ``run_async_sharded`` resume parity (the
+    event carry includes the in-flight ``AsyncEventState``);
+  - the corruption smoke: truncated snapshots, bit-flipped payloads
+    (CRC), and meta disagreement (different ``k``) must all raise
+    ``CheckpointError`` — never load silently wrong state — and
+    ``checkpoint_every`` without a path must raise ``ValueError``.
+
+``--train`` switches to the end-to-end TRAINING matrix instead:
+
+  - ``run_fl_scanned`` resume parity for every selector kind;
+  - ``run_fl`` (host loop) and ``run_fl_sharded`` resume parity;
+  - cross-engine portability: ``run_fl_sharded`` resuming a snapshot
+    written by ``run_fl_scanned`` (the shared ``train-sync`` checkpoint
+    family — sharded snapshots save the population trimmed to
+    ``n_clients``, so they are portable across engines and device
+    counts); exact on bookkeeping, psum-ulp tolerance on float stats;
+  - a fault-injected leg (crash/retry + straggler + corrupted-update):
+    host vs scanned bitwise, scanned resume bitwise, retries and
+    quarantines actually exercised (non-vacuity guarded), and no
+    injected NaN ever reaching ``test_acc``;
+  - ``run_fl_async`` resume parity (two-phase snapshot-ring restore).
+
+Exits non-zero on the first mismatch; prints ``elastic parity OK`` /
+``elastic training parity OK`` when the matrix passes.
+
+  PYTHONPATH=src python -m repro.launch.elastic_check --devices 8
+  PYTHONPATH=src python -m repro.launch.elastic_check --devices 8 --train
+"""
+import argparse
+import dataclasses
+import os
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointError, checkpoint_path_for
+from repro.core import EnergyModel, SelectorConfig, SelectorState, \
+    make_population
+from repro.federated import FaultConfig
+from repro.federated.simulation import (
+    run_async_scanned,
+    run_async_sharded,
+    run_rounds_scanned,
+    run_rounds_sharded,
+)
+from repro.launch.mesh import make_client_mesh
+
+ALL_KINDS = ("eafl", "oort", "eafl-epj", "random")
+
+# every FLHistory field that the engines fill — restart parity is claimed
+# for the WHOLE history, including the fault/elasticity accounting
+HIST_FIELDS = ("round", "wall_hours", "round_duration", "test_acc",
+               "train_loss", "cum_dropouts", "fairness", "participation",
+               "mean_battery", "retries", "quarantined", "update_skipped")
+EXACT_FIELDS = ("round", "cum_dropouts", "participation", "retries",
+                "quarantined", "update_skipped", "round_duration",
+                "wall_hours")
+
+
+def _leaf_equal(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    if a.shape != b.shape or a.dtype != b.dtype:
+        return False
+    if np.issubdtype(a.dtype, np.inexact):
+        return bool(np.array_equal(a, b, equal_nan=True))
+    return bool(np.array_equal(a, b))
+
+
+def _assert_tree_equal(label, t1, t2):
+    """Bitwise equality over an arbitrary pytree (trajectory dicts,
+    population pytrees, event states)."""
+    l1 = jax.tree_util.tree_flatten_with_path(t1)[0]
+    l2 = jax.tree_util.tree_flatten_with_path(t2)[0]
+    assert len(l1) == len(l2), f"{label}: leaf count diverged"
+    for (p1, a), (p2, b) in zip(l1, l2):
+        name = jax.tree_util.keystr(p1)
+        assert p1 == p2, f"{label}: tree structure diverged at {name}"
+        assert _leaf_equal(a, b), \
+            f"{label}: diverged at {name}\n{np.asarray(a)}\n{np.asarray(b)}"
+
+
+def _assert_hist_equal(label, ref, got, float_atol=None):
+    """FLHistory equality: bitwise by default; ``float_atol`` relaxes the
+    float model stats for cross-engine (psum reduction-order) compares
+    while keeping the selection/dropout/fault bookkeeping exact."""
+    for f in HIST_FIELDS:
+        a = np.asarray(getattr(ref, f), dtype=np.float64)
+        b = np.asarray(getattr(got, f), dtype=np.float64)
+        assert a.shape == b.shape, f"{label}: {f} length diverged"
+        nan = np.isnan(a) & np.isnan(b)
+        if float_atol is not None and f not in EXACT_FIELDS:
+            np.testing.assert_allclose(a[~nan], b[~nan], atol=float_atol,
+                                       rtol=0, err_msg=f"{label}: {f}")
+        else:
+            assert np.array_equal(a[~nan], b[~nan]), \
+                f"{label}: {f} diverged\n{a}\n{b}"
+    ia, ib = float(ref.init_acc), float(got.init_acc)
+    assert (ia == ib) or (np.isnan(ia) and np.isnan(ib)), \
+        f"{label}: init_acc {ia} != {ib}"
+
+
+# --------------------------------------------------------------- engine level
+
+def _engine_pop(key, n):
+    pop = make_population(key, n)
+    ks = jax.random.split(jax.random.fold_in(key, 1), 2)
+    return pop.replace(
+        stat_util=jax.random.uniform(ks[0], (n,)) * 10,
+        explored=jax.random.bernoulli(ks[1], 0.6, (n,)))
+
+
+def _check_engine_resume(label, runner, tmp, key, cfg, pop, resume_at,
+                         rounds, every, **kw):
+    """plain run vs (checkpointed run, then resume-from-round-r): the
+    final population, selector state and full trajectory must be bitwise
+    identical for all three."""
+    ckdir = os.path.join(tmp, label.replace(" ", "_"))
+    os.makedirs(ckdir)
+    path = os.path.join(ckdir, "ck_{round}.ckpt")
+    p1, s1, t1 = runner(key, cfg, pop, SelectorState.create(cfg),
+                        rounds=rounds, **kw)
+    p2, s2, t2 = runner(key, cfg, pop, SelectorState.create(cfg),
+                        rounds=rounds, checkpoint_path=path,
+                        checkpoint_every=every, **kw)
+    _assert_tree_equal(f"{label} elastic-vs-plain traj", t1, t2)
+    _assert_tree_equal(f"{label} elastic-vs-plain pop", p1, p2)
+    ck = checkpoint_path_for(path, resume_at)
+    assert os.path.exists(ck), f"{label}: no snapshot at round {resume_at}"
+    p3, s3, t3 = runner(key, cfg, pop, SelectorState.create(cfg),
+                        rounds=rounds, resume_from=ck, **kw)
+    _assert_tree_equal(f"{label} resume traj", t1, t3)
+    _assert_tree_equal(f"{label} resume pop", p1, p3)
+    for st in (s2, s3):
+        for f in ("round", "epsilon", "pacer_T", "util_ema"):
+            a, b = float(getattr(s1, f)), float(getattr(st, f))
+            assert a == b, f"{label}: state.{f} {a} != {b}"
+    print(f"  {label}: OK")
+    return ck
+
+
+def _check_corruption(tmp, key, cfg, pop, good_ck, rounds, **kw):
+    """A damaged or mismatched snapshot must refuse to load — silently
+    resuming from wrong state is the one unforgivable failure mode."""
+    def expect_refusal(label, path, exc=CheckpointError):
+        try:
+            run_rounds_scanned(key, cfg, pop, SelectorState.create(cfg),
+                               rounds=rounds, resume_from=path, **kw)
+        except exc:
+            print(f"  corruption {label}: OK")
+            return
+        raise AssertionError(f"corruption {label}: loaded without error")
+
+    raw = open(good_ck, "rb").read()
+    trunc = os.path.join(tmp, "trunc.ckpt")
+    with open(trunc, "wb") as f:
+        f.write(raw[:len(raw) // 2])
+    expect_refusal("truncated", trunc)
+
+    flipped = os.path.join(tmp, "flipped.ckpt")
+    body = bytearray(raw)
+    body[len(body) // 2] ^= 0xFF
+    with open(flipped, "wb") as f:
+        f.write(bytes(body))
+    expect_refusal("bit-flip", flipped)
+
+    empty = os.path.join(tmp, "empty.ckpt")
+    open(empty, "wb").close()
+    expect_refusal("empty", empty)
+
+    # meta disagreement: same bytes, different run identity (k)
+    try:
+        run_rounds_scanned(key, dataclasses.replace(cfg, k=cfg.k + 1), pop,
+                           SelectorState.create(cfg), rounds=rounds,
+                           resume_from=good_ck, **kw)
+    except CheckpointError:
+        print("  corruption meta-mismatch: OK")
+    else:
+        raise AssertionError("corruption meta-mismatch: loaded a snapshot "
+                             "from a different run")
+
+    # elastic knob validation: every without a path has nowhere to write
+    try:
+        run_rounds_scanned(key, cfg, pop, SelectorState.create(cfg),
+                           rounds=rounds, checkpoint_every=2, **kw)
+    except ValueError:
+        print("  corruption every-without-path: OK")
+    else:
+        raise AssertionError("checkpoint_every without checkpoint_path "
+                             "was accepted")
+
+
+def _engine_matrix(mesh, tmp, n, rounds):
+    key = jax.random.PRNGKey(11)
+    em = EnergyModel()
+    pop = _engine_pop(key, n)
+    kw = dict(energy_model=em, model_bytes=85e6, local_steps=400,
+              batch_size=20)
+    every, resume_at = 2, max((rounds // 2) // 2 * 2, 2)
+
+    good_ck = None
+    for kind in ALL_KINDS:
+        cfg = SelectorConfig(kind=kind, k=10)
+        ck = _check_engine_resume(f"sync scanned {kind}",
+                                  run_rounds_scanned, tmp, key, cfg, pop,
+                                  resume_at, rounds, every, **kw)
+        if kind == "eafl":
+            good_ck = ck
+        _check_engine_resume(f"sync sharded {kind}", run_rounds_sharded,
+                             tmp, key, cfg, pop, resume_at, rounds, every,
+                             mesh=mesh, **kw)
+
+    # faults are part of the checkpoint identity: a fault-injected run
+    # must resume bitwise (same seed => same per-round draws), and its
+    # snapshot must refuse a resume under a different fault config
+    fcfg = FaultConfig(seed=5, crash_prob=0.2, max_retries=2,
+                       straggle_prob=0.15, corrupt_prob=0.1)
+    cfg = SelectorConfig(kind="eafl", k=10)
+    fck = _check_engine_resume("sync scanned faults", run_rounds_scanned,
+                               tmp, key, cfg, pop, resume_at, rounds, every,
+                               faults=fcfg, deadline_s=4000.0, **kw)
+    try:
+        run_rounds_scanned(key, cfg, pop, SelectorState.create(cfg),
+                           rounds=rounds, resume_from=fck,
+                           faults=dataclasses.replace(fcfg, seed=6),
+                           deadline_s=4000.0, **kw)
+    except CheckpointError:
+        print("  fault-config mismatch refused: OK")
+    else:
+        raise AssertionError("resume accepted a snapshot written under a "
+                             "different fault config")
+
+    akw = dict(buffer_size=3, max_concurrency=9, staleness_power=0.5, **kw)
+    for kind in ("eafl", "random"):
+        cfg = SelectorConfig(kind=kind, k=10)
+        _check_engine_resume(f"async scanned {kind}", run_async_scanned,
+                             tmp, key, cfg, pop, resume_at, rounds, every,
+                             **akw)
+        _check_engine_resume(f"async sharded {kind}", run_async_sharded,
+                             tmp, key, cfg, pop, resume_at, rounds, every,
+                             mesh=mesh, **akw)
+
+    _check_corruption(tmp, key, SelectorConfig(kind="eafl", k=10), pop,
+                      good_ck, rounds, **kw)
+
+
+# ------------------------------------------------------------- training level
+
+def _check_train_resume(label, runner, tmp, base_cfg, resume_at, every,
+                        ref=None, float_atol=None, resume_runner=None,
+                        guard=None):
+    """Training restart parity: the checkpointed run and the
+    resume-from-round-r run must both reproduce the plain run's FLHistory
+    bitwise (``float_atol`` for cross-engine compares). Returns the plain
+    reference history and the round-r snapshot path."""
+    ckdir = os.path.join(tmp, label.replace(" ", "_"))
+    os.makedirs(ckdir)
+    path = os.path.join(ckdir, "ck_{round}.ckpt")
+    if ref is None:
+        ref = runner(base_cfg)
+    elastic = runner(dataclasses.replace(
+        base_cfg, checkpoint_path=path, checkpoint_every=every))
+    _assert_hist_equal(f"{label} elastic-vs-plain", ref, elastic,
+                       float_atol=float_atol)
+    ck = checkpoint_path_for(path, resume_at)
+    assert os.path.exists(ck), f"{label}: no snapshot at round {resume_at}"
+    resumed = (resume_runner or runner)(
+        dataclasses.replace(base_cfg, resume_from=ck))
+    _assert_hist_equal(f"{label} resume", ref, resumed,
+                       float_atol=float_atol)
+    if guard is not None:
+        guard(ref)
+    print(f"  {label}: OK")
+    return ref, ck
+
+
+def _training_matrix(mesh, tmp, rounds):
+    from repro.configs.paper_resnet_speech import reduced
+    from repro.federated import FLConfig
+    from repro.federated.async_server import run_fl_async
+    from repro.federated.server import run_fl, run_fl_scanned, \
+        run_fl_sharded
+
+    def cfg(kind, **kw):
+        base = dict(
+            selector=SelectorConfig(kind=kind, k=4),
+            n_clients=24, rounds=rounds, local_steps=3, batch_size=8,
+            samples_per_client=24, eval_every=4, eval_samples=70,
+            model=reduced(), input_hw=16)
+        base.update(kw)
+        return FLConfig(**base)
+
+    every, resume_at = 3, 3
+    scanned_refs = {}
+    for kind in ALL_KINDS:
+        ref, ck = _check_train_resume(f"train scanned {kind}",
+                                      run_fl_scanned, tmp, cfg(kind),
+                                      resume_at, every)
+        scanned_refs[kind] = (ref, ck)
+
+    # host loop: same checkpoint machinery, python-side history carried in
+    # the snapshot — resume must restore it bitwise too
+    _check_train_resume("train host eafl", run_fl, tmp, cfg("eafl"),
+                        resume_at, every)
+
+    # sharded twin resuming its OWN snapshot: bitwise (same psum order)
+    _check_train_resume("train sharded eafl",
+                        lambda c: run_fl_sharded(c, mesh=mesh), tmp,
+                        cfg("eafl"), resume_at, every)
+    _check_train_resume("train sharded recharge",
+                        lambda c: run_fl_sharded(c, mesh=mesh), tmp,
+                        cfg("random", recharge_pct_per_hour=40.0,
+                            plugged_frac=0.5, init_battery_low=12.0,
+                            init_battery_high=30.0),
+                        resume_at, every)
+
+    # cross-engine portability: the sharded engine resuming a snapshot
+    # WRITTEN BY THE SCANNED ENGINE (shared "train-sync" family; the
+    # trimmed population re-pads to this mesh). Bookkeeping exact, float
+    # stats at the documented psum tolerance vs the scanned reference.
+    ref, ck = scanned_refs["eafl"]
+    resumed = run_fl_sharded(
+        dataclasses.replace(cfg("eafl"), resume_from=ck), mesh=mesh)
+    _assert_hist_equal("train cross-engine scanned->sharded", ref, resumed,
+                       float_atol=5e-4)
+    print("  train cross-engine scanned->sharded: OK")
+
+    # fault-injected training: host vs scanned bitwise under the same
+    # seed-keyed draws, scanned resume bitwise, and the leg must actually
+    # exercise retries + quarantine (non-vacuity) without any injected
+    # NaN surviving into the evaluated model
+    fcfg = FaultConfig(seed=3, crash_prob=0.25, max_retries=2,
+                       straggle_prob=0.2, corrupt_prob=0.3)
+    fault_cfg = cfg("eafl", faults=fcfg, deadline_s=2000.0,
+                    recharge_pct_per_hour=40.0, plugged_frac=0.5)
+
+    def guard(h):
+        assert sum(h.retries) > 0, "fault leg vacuous: no retries drawn"
+        assert sum(h.quarantined) > 0, \
+            "fault leg vacuous: no update quarantined"
+        assert np.isfinite(np.asarray(h.test_acc, np.float64)).all(), \
+            "injected NaN leaked into test_acc"
+
+    ref, _ = _check_train_resume("train scanned faults", run_fl_scanned,
+                                 tmp, fault_cfg, resume_at, every,
+                                 guard=guard)
+    host = run_fl(fault_cfg)
+    _assert_hist_equal("train faults host-vs-scanned", ref, host)
+    print("  train faults host-vs-scanned: OK")
+
+    # async server: event carry + snapshot ring restored over two phases
+    _check_train_resume("train async eafl", run_fl_async, tmp,
+                        cfg("eafl", buffer_size=3, max_concurrency=6,
+                            staleness_power=0.5),
+                        resume_at, every)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=None,
+                    help="virtual CPU device count (set before jax init)")
+    ap.add_argument("--n", type=int, default=200,
+                    help="engine-level population size")
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--train", action="store_true",
+                    help="run the end-to-end TRAINING restart-parity "
+                         "matrix (run_fl / run_fl_scanned / run_fl_sharded "
+                         "/ run_fl_async) instead of the engine-level one")
+    args = ap.parse_args()
+
+    mesh = make_client_mesh(args.devices)
+    s = mesh.shape["clients"]
+    print(f"devices={len(jax.devices())} mesh_shards={s}")
+    tmp = tempfile.mkdtemp(prefix="elastic_check_")
+    try:
+        if args.train:
+            _training_matrix(mesh, tmp, max(args.rounds, 8))
+            print(f"elastic training parity OK ({s} shards)")
+        else:
+            _engine_matrix(mesh, tmp, args.n, max(args.rounds, 6))
+            print(f"elastic parity OK ({s} shards)")
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

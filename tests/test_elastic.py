@@ -1,0 +1,208 @@
+"""Elastic fault tolerance: restart parity of the checkpointed engines.
+
+Kill-at-round-r contract: resuming a round-r snapshot reproduces the
+uninterrupted run BITWISE — the snapshot carries the full scan carry
+(params, optimizer state, population, selector state, RNG chain), so a
+crash between rounds loses nothing but wall time. This file covers the
+single-device representatives cheaply; the full matrix (all engines ×
+all selector kinds × 1/2/8 virtual devices, plus the sharded twins and
+cross-engine portability) runs in the tier-2 CI job via
+``repro.launch.elastic_check``.
+"""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CarryCheckpointer, CheckpointError,
+                              checkpoint_path_for, segment_bounds)
+from repro.configs.paper_resnet_speech import reduced
+from repro.core import (EnergyModel, SelectorConfig, SelectorState,
+                        make_population)
+from repro.federated import FLConfig, run_fl, run_fl_scanned
+from repro.federated.async_server import run_fl_async
+from repro.federated.simulation import run_async_scanned, run_rounds_scanned
+
+HIST_FIELDS = ("round", "wall_hours", "round_duration", "test_acc",
+               "train_loss", "cum_dropouts", "fairness", "participation",
+               "mean_battery", "retries", "quarantined", "update_skipped")
+
+
+# --------------------------------------------------------- segment plumbing
+
+def test_segment_bounds():
+    # fresh run, every=3: break at absolute multiples, final partial seg
+    assert list(segment_bounds(0, 8, 3)) == [(0, 3), (3, 6), (6, 8)]
+    # resumed mid-way: boundaries stay aligned to the SAME absolute grid
+    assert list(segment_bounds(3, 8, 3)) == [(3, 6), (6, 8)]
+    assert list(segment_bounds(4, 8, 3)) == [(4, 6), (6, 8)]
+    # no cadence -> one segment; already finished -> none
+    assert list(segment_bounds(0, 5, None)) == [(0, 5)]
+    assert list(segment_bounds(2, 5, 0)) == [(2, 5)]
+    assert list(segment_bounds(5, 5, 2)) == []
+    # every > total still terminates at total
+    assert list(segment_bounds(0, 3, 10)) == [(0, 3)]
+    with pytest.raises(ValueError):
+        list(segment_bounds(6, 5, 2))
+
+
+def test_carry_checkpointer(tmp_path):
+    path = os.path.join(tmp_path, "ck_{round}.msgpack")
+    ck = CarryCheckpointer(path, every=3, total_rounds=8, meta={"k": 4})
+    assert [r for r in range(1, 9) if ck.due(r)] == [3, 6, 8]
+    assert ck.path_for(3).endswith("ck_3.msgpack")
+    out = ck.save(3, {"w": jax.numpy.ones(2)})
+    assert os.path.exists(out) and not os.path.exists(out + ".tmp")
+    # a template without {round} overwrites one file in place
+    assert checkpoint_path_for("latest.msgpack", 7) == "latest.msgpack"
+    with pytest.raises(ValueError):
+        CarryCheckpointer(path, every=0, total_rounds=8)
+    with pytest.raises(ValueError):
+        CarryCheckpointer("", every=2, total_rounds=8)
+
+
+# ----------------------------------------------------- engine-level resume
+
+def _engine_pop(n=64):
+    key = jax.random.PRNGKey(11)
+    pop = make_population(key, n)
+    ks = jax.random.split(jax.random.fold_in(key, 1), 2)
+    return pop.replace(
+        stat_util=jax.random.uniform(ks[0], (n,)) * 10,
+        explored=jax.random.bernoulli(ks[1], 0.6, (n,)))
+
+
+_ENGINE_KW = dict(energy_model=EnergyModel(), model_bytes=85e6,
+                  local_steps=400, batch_size=20, rounds=6)
+
+
+def _assert_tree_equal(t1, t2):
+    l1 = jax.tree_util.tree_flatten_with_path(t1)[0]
+    l2 = jax.tree_util.tree_flatten_with_path(t2)[0]
+    assert len(l1) == len(l2)
+    for (p1, a), (p2, b) in zip(l1, l2):
+        assert p1 == p2
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype and a.shape == b.shape, \
+            f"{jax.tree_util.keystr(p1)} layout diverged"
+        eq = (np.array_equal(a, b, equal_nan=True)
+              if np.issubdtype(a.dtype, np.inexact) else np.array_equal(a, b))
+        assert eq, f"{jax.tree_util.keystr(p1)} diverged:\n{a}\n{b}"
+
+
+@pytest.mark.parametrize("runner,kw", [
+    (run_rounds_scanned, {}),
+    (run_async_scanned, dict(buffer_size=3, max_concurrency=9,
+                             staleness_power=0.5)),
+])
+def test_engine_resume_is_bitwise(tmp_path, runner, kw):
+    key, cfg, pop = jax.random.PRNGKey(0), SelectorConfig("eafl", k=8), \
+        _engine_pop()
+    path = os.path.join(tmp_path, "ck_{round}.msgpack")
+    p1, s1, t1 = runner(key, cfg, pop, SelectorState.create(cfg),
+                        **_ENGINE_KW, **kw)
+    p2, s2, t2 = runner(key, cfg, pop, SelectorState.create(cfg),
+                        checkpoint_path=path, checkpoint_every=2,
+                        **_ENGINE_KW, **kw)
+    _assert_tree_equal(t1, t2)
+    p3, s3, t3 = runner(key, cfg, pop, SelectorState.create(cfg),
+                        resume_from=checkpoint_path_for(path, 4),
+                        **_ENGINE_KW, **kw)
+    _assert_tree_equal(t1, t3)
+    _assert_tree_equal(p1, p3)
+    for f in ("round", "epsilon", "pacer_T", "util_ema"):
+        assert float(getattr(s1, f)) == float(getattr(s3, f))
+
+
+def test_engine_resume_refuses_foreign_snapshot(tmp_path):
+    key, cfg, pop = jax.random.PRNGKey(0), SelectorConfig("eafl", k=8), \
+        _engine_pop()
+    path = os.path.join(tmp_path, "ck_{round}.msgpack")
+    run_rounds_scanned(key, cfg, pop, SelectorState.create(cfg),
+                       checkpoint_path=path, checkpoint_every=2,
+                       **_ENGINE_KW)
+    ck = checkpoint_path_for(path, 4)
+    # different run identity (k): meta disagreement
+    with pytest.raises(CheckpointError, match="different run"):
+        run_rounds_scanned(key, dataclasses.replace(cfg, k=9), pop,
+                           SelectorState.create(cfg), resume_from=ck,
+                           **_ENGINE_KW)
+    # different population size: template shape mismatch
+    with pytest.raises(CheckpointError):
+        run_rounds_scanned(key, cfg, _engine_pop(48),
+                           SelectorState.create(cfg), resume_from=ck,
+                           **_ENGINE_KW)
+    # snapshot cadence without a destination
+    with pytest.raises(ValueError, match="nowhere"):
+        run_rounds_scanned(key, cfg, pop, SelectorState.create(cfg),
+                           checkpoint_every=2, **_ENGINE_KW)
+
+
+# --------------------------------------------------- training-level resume
+
+def _train_cfg(**kw):
+    base = dict(
+        selector=SelectorConfig(kind="eafl", k=4),
+        n_clients=24, rounds=4, local_steps=3, batch_size=8,
+        samples_per_client=24, eval_every=2, eval_samples=70,
+        model=reduced(), input_hw=16)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _assert_hist_bitwise(ref, got):
+    for f in HIST_FIELDS:
+        a = np.asarray(getattr(ref, f), dtype=np.float64)
+        b = np.asarray(getattr(got, f), dtype=np.float64)
+        assert a.shape == b.shape, f"{f} length diverged"
+        nan = np.isnan(a) & np.isnan(b)
+        assert np.array_equal(a[~nan], b[~nan]), f"{f} diverged:\n{a}\n{b}"
+    assert (ref.init_acc == got.init_acc
+            or (np.isnan(ref.init_acc) and np.isnan(got.init_acc)))
+
+
+@pytest.mark.parametrize("runner", [run_fl, run_fl_scanned], ids=["host",
+                                                                  "scanned"])
+def test_training_resume_is_bitwise(tmp_path, runner):
+    """Kill-at-round-2 restart parity for the host loop and the fused
+    scan (the sharded twin and all selector kinds: elastic_check)."""
+    cfg = _train_cfg()
+    path = os.path.join(tmp_path, "ck_{round}.msgpack")
+    ref = runner(cfg)
+    elastic = runner(dataclasses.replace(cfg, checkpoint_path=path,
+                                         checkpoint_every=2))
+    _assert_hist_bitwise(ref, elastic)
+    resumed = runner(dataclasses.replace(
+        cfg, resume_from=checkpoint_path_for(path, 2)))
+    _assert_hist_bitwise(ref, resumed)
+
+
+def test_training_async_resume_is_bitwise(tmp_path):
+    """The async server's carry includes the event state and the
+    refcounted snapshot ring (two-phase restore)."""
+    cfg = _train_cfg(buffer_size=3, max_concurrency=6, staleness_power=0.5)
+    path = os.path.join(tmp_path, "ck_{round}.msgpack")
+    ref = run_fl_async(cfg)
+    elastic = run_fl_async(dataclasses.replace(
+        cfg, checkpoint_path=path, checkpoint_every=2))
+    _assert_hist_bitwise(ref, elastic)
+    resumed = run_fl_async(dataclasses.replace(
+        cfg, resume_from=checkpoint_path_for(path, 2)))
+    _assert_hist_bitwise(ref, resumed)
+
+
+def test_training_resume_refuses_foreign_snapshot(tmp_path):
+    cfg = _train_cfg()
+    path = os.path.join(tmp_path, "ck_{round}.msgpack")
+    run_fl_scanned(dataclasses.replace(cfg, checkpoint_path=path,
+                                       checkpoint_every=2))
+    ck = checkpoint_path_for(path, 2)
+    other = dataclasses.replace(
+        cfg, selector=SelectorConfig(kind="oort", k=4), resume_from=ck)
+    with pytest.raises(CheckpointError, match="different run"):
+        run_fl_scanned(other)
+    # the host loop shares the sync meta family only with itself
+    with pytest.raises(CheckpointError, match="different run"):
+        run_fl(dataclasses.replace(cfg, resume_from=ck))

@@ -1,0 +1,169 @@
+"""Deterministic fault injection and the server's quarantine gate.
+
+Faults are a pure function of ``(FaultConfig.seed, round, client)`` —
+independent of the engine's RNG chain and of population padding — so the
+host and fused engines must reproduce the identical fault schedule, and
+an injected non-finite delta must NEVER reach the global model: the
+server zeroes quarantined rows, renormalizes over the survivors, and
+skips the round entirely when nothing survives.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_resnet_speech import reduced
+from repro.core import EnergyModel, SelectorConfig, SelectorState, \
+    make_population
+from repro.federated import (
+    FaultConfig,
+    FLConfig,
+    apply_faults,
+    fault_streams,
+    run_fl,
+    run_fl_scanned,
+)
+from repro.federated.simulation import run_rounds_scanned
+
+HIST_FIELDS = ("round", "wall_hours", "round_duration", "test_acc",
+               "train_loss", "cum_dropouts", "fairness", "participation",
+               "mean_battery", "retries", "quarantined", "update_skipped")
+
+
+def test_fault_config_validation():
+    for bad in (dict(crash_prob=-0.1), dict(straggle_prob=1.5),
+                dict(corrupt_prob=2.0), dict(max_retries=-1),
+                dict(crash_prob=1.0, max_retries=3)):
+        with pytest.raises(ValueError):
+            FaultConfig(**bad)
+    assert not FaultConfig().active
+    assert FaultConfig(corrupt_prob=0.1).active
+    # hashable: rides in the fused runners' static jit args
+    assert hash(FaultConfig(seed=1)) == hash(FaultConfig(seed=1))
+
+
+def test_fault_streams_seeded_and_pad_invariant():
+    fcfg = FaultConfig(seed=3, crash_prob=0.5)
+    a = fault_streams(fcfg, 4, 100)
+    b = fault_streams(fcfg, 4, 100)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # different round or seed: different draws
+    c = fault_streams(fcfg, 5, 100)
+    assert not np.array_equal(np.asarray(a[0]), np.asarray(c[0]))
+    d = fault_streams(dataclasses.replace(fcfg, seed=4), 4, 100)
+    assert not np.array_equal(np.asarray(a[0]), np.asarray(d[0]))
+    # prefix-stable under padding: the sharded engine draws the padded
+    # stream and must agree with the unpadded engines on the real clients
+    p = fault_streams(fcfg, 4, 128)
+    for x, y in zip(a, p):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y)[:100])
+
+
+def test_apply_faults_semantics():
+    n = 4096
+    t = jnp.full((n,), 100.0)
+    cost = jnp.full((n,), 2.0)
+    fcfg = FaultConfig(seed=0, crash_prob=0.3, max_retries=2,
+                       retry_backoff_s=30.0, retry_cost_frac=0.1,
+                       straggle_prob=0.2, straggle_factor=3.0,
+                       corrupt_prob=0.1)
+    streams = fault_streams(fcfg, 1, n)
+    t_eff, cost_eff, draw = apply_faults(fcfg, t, cost, streams)
+    t_eff, cost_eff = np.asarray(t_eff), np.asarray(cost_eff)
+    fail, retries = np.asarray(draw.fail), np.asarray(draw.retries)
+    # faults only ever make a round slower / costlier, never cheaper
+    assert (t_eff >= 100.0).all() and (cost_eff >= 2.0).all()
+    assert (retries >= 0).all() and (retries <= fcfg.max_retries).all()
+    # a terminal failure means every re-attempt was spent
+    assert (retries[fail] == fcfg.max_retries).all()
+    # each fault class actually fires at these probabilities (non-vacuous)
+    assert fail.any() and (retries > 0).any() and np.asarray(draw.corrupt).any()
+    # retry backoff is charged to the wall clock, straggle multiplies:
+    # a non-straggling client with r retries lands exactly on 100 + 30r
+    straggle = np.asarray(streams[2]) < fcfg.straggle_prob
+    np.testing.assert_allclose(t_eff[~straggle],
+                               100.0 + 30.0 * retries[~straggle])
+    np.testing.assert_allclose(cost_eff, 2.0 * (1.0 + 0.1 * retries))
+    # inactive config is the identity and draws nothing
+    t2, c2, d2 = apply_faults(FaultConfig(), t, cost, streams)
+    assert t2 is t and c2 is cost
+    assert not np.asarray(d2.fail).any() and not np.asarray(d2.retries).any()
+
+
+def test_retry_surcharge_drains_batteries():
+    """Crash/retry faults charge real energy: round 1 selects the same
+    cohort as the clean run (selection scores on CLEAN cost), but the
+    retried uploads leave the fleet strictly lower on battery."""
+    key = jax.random.PRNGKey(2)
+    pop = make_population(key, 64)
+    cfg = SelectorConfig("eafl", k=16)
+    kw = dict(energy_model=EnergyModel(), model_bytes=85e6,
+              local_steps=400, batch_size=20, rounds=1)
+    fcfg = FaultConfig(seed=7, crash_prob=0.5, max_retries=3,
+                       retry_cost_frac=0.5)
+    _, _, clean = run_rounds_scanned(key, cfg, pop,
+                                     SelectorState.create(cfg), **kw)
+    _, _, faulty = run_rounds_scanned(key, cfg, pop,
+                                      SelectorState.create(cfg),
+                                      faults=fcfg, **kw)
+    np.testing.assert_array_equal(np.asarray(clean["selected"]),
+                                  np.asarray(faulty["selected"]))
+    assert int(np.asarray(faulty["retries"]).sum()) > 0
+    assert float(faulty["mean_battery"][0]) < float(clean["mean_battery"][0])
+
+
+def _train_cfg(**kw):
+    base = dict(
+        selector=SelectorConfig(kind="eafl", k=4),
+        n_clients=24, rounds=4, local_steps=3, batch_size=8,
+        samples_per_client=24, eval_every=2, eval_samples=70,
+        model=reduced(), input_hw=16)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _assert_hist_bitwise(ref, got):
+    for f in HIST_FIELDS:
+        a = np.asarray(getattr(ref, f), dtype=np.float64)
+        b = np.asarray(getattr(got, f), dtype=np.float64)
+        assert a.shape == b.shape, f"{f} length diverged"
+        nan = np.isnan(a) & np.isnan(b)
+        assert np.array_equal(a[~nan], b[~nan]), f"{f} diverged:\n{a}\n{b}"
+
+
+def test_fault_schedule_is_engine_invariant():
+    """Same seed + same deadline/recharge schedule => the host loop and
+    the fused scan walk the identical fault-perturbed trajectory,
+    retries/quarantines included, with no injected NaN surviving."""
+    cfg = _train_cfg(
+        faults=FaultConfig(seed=3, crash_prob=0.25, max_retries=2,
+                           straggle_prob=0.2, corrupt_prob=0.3),
+        deadline_s=2000.0, recharge_pct_per_hour=40.0, plugged_frac=0.5)
+    host = run_fl(cfg)
+    fused = run_fl_scanned(cfg)
+    _assert_hist_bitwise(host, fused)
+    # non-vacuity: every fault class must actually have fired
+    assert sum(host.retries) > 0, "no retries drawn — case is vacuous"
+    assert sum(host.quarantined) > 0, "nothing quarantined — vacuous"
+    assert np.isfinite(np.asarray(host.test_acc, np.float64)).all()
+    assert np.isfinite(np.asarray(fused.test_acc, np.float64)).all()
+
+
+@pytest.mark.parametrize("runner", [run_fl, run_fl_scanned],
+                         ids=["host", "scanned"])
+def test_all_corrupt_updates_never_reach_the_model(runner):
+    """corrupt_prob=1.0: every surviving upload is non-finite, so every
+    round must be quarantined in full and skipped — the global model
+    stays at its init, finite, for the entire run."""
+    cfg = _train_cfg(faults=FaultConfig(seed=1, corrupt_prob=1.0))
+    hist = runner(cfg)
+    assert all(s == 1 for s in hist.update_skipped)
+    # everything that succeeded was quarantined, round for round
+    assert sum(hist.quarantined) > 0
+    accs = np.asarray(hist.test_acc, np.float64)
+    assert np.isfinite(accs).all()
+    np.testing.assert_array_equal(accs, hist.init_acc)
+    assert np.isfinite(np.asarray(hist.train_loss, np.float64)).all()

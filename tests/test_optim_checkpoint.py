@@ -1,4 +1,5 @@
-"""Optimizers converge on a quadratic; checkpoint roundtrips."""
+"""Optimizers converge on a quadratic; checkpoint roundtrips, atomicity,
+and the refuse-loudly contract (truncation / corruption / wrong run)."""
 import os
 
 import jax
@@ -6,7 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint import (CheckpointError, load_checkpoint,
+                              load_engine_checkpoint, save_checkpoint,
+                              save_engine_checkpoint)
 from repro.optim import adagrad, adam, adamw, apply_updates, sgd, yogi
 
 
@@ -41,3 +44,122 @@ def test_checkpoint_roundtrip(tmp_path, rng):
     assert step == 7 and extra["lr"] == 0.1
     for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(loaded)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _save_small(path):
+    save_checkpoint(path, {"w": jnp.arange(32, dtype=jnp.float32)}, step=3)
+
+
+def test_checkpoint_write_is_atomic(tmp_path):
+    """tmp + os.replace: no .tmp residue, and an overwrite either keeps
+    the old complete file or installs the new complete one."""
+    path = os.path.join(tmp_path, "ckpt.msgpack")
+    _save_small(path)
+    assert not os.path.exists(path + ".tmp")
+    save_checkpoint(path, {"w": jnp.zeros(32)}, step=9)
+    assert not os.path.exists(path + ".tmp")
+    _, step, _ = load_checkpoint(path)
+    assert step == 9
+
+
+def test_checkpoint_missing_file_raises(tmp_path):
+    with pytest.raises(CheckpointError, match="cannot read"):
+        load_checkpoint(os.path.join(tmp_path, "nope.msgpack"))
+
+
+def test_checkpoint_truncation_raises(tmp_path):
+    path = os.path.join(tmp_path, "ckpt.msgpack")
+    _save_small(path)
+    raw = open(path, "rb").read()
+    # cut inside the payload (header intact, length now lies)
+    for cut in (len(raw) - 5, 10, 0):
+        with open(path, "wb") as f:
+            f.write(raw[:cut])
+        with pytest.raises(CheckpointError, match="truncated"):
+            load_checkpoint(path)
+
+
+def test_checkpoint_bitflip_fails_crc(tmp_path):
+    path = os.path.join(tmp_path, "ckpt.msgpack")
+    _save_small(path)
+    raw = bytearray(open(path, "rb").read())
+    raw[len(raw) // 2] ^= 0x01
+    with open(path, "wb") as f:
+        f.write(bytes(raw))
+    with pytest.raises(CheckpointError, match="CRC32"):
+        load_checkpoint(path)
+
+
+def test_checkpoint_bad_magic_raises(tmp_path):
+    path = os.path.join(tmp_path, "ckpt.msgpack")
+    with open(path, "wb") as f:
+        f.write(b"NOTACKPT" + b"\x00" * 64)
+    with pytest.raises(CheckpointError, match="bad magic"):
+        load_checkpoint(path)
+
+
+def test_params_and_engine_checkpoints_do_not_cross_load(tmp_path):
+    p_path = os.path.join(tmp_path, "params.msgpack")
+    e_path = os.path.join(tmp_path, "engine.msgpack")
+    _save_small(p_path)
+    save_engine_checkpoint(e_path, rnd=2, state={"w": jnp.ones(3)})
+    with pytest.raises(CheckpointError, match="no 'params'"):
+        load_checkpoint(e_path)
+    with pytest.raises(CheckpointError, match="not an engine-carry"):
+        load_engine_checkpoint(p_path, {"w": jnp.ones(3)})
+
+
+def test_engine_checkpoint_roundtrip_bitwise(tmp_path, rng):
+    """Engine carries restore bit-identically through templates —
+    including non-finite floats and exact dtypes."""
+    path = os.path.join(tmp_path, "engine.msgpack")
+    state = {
+        "params": {"w": jax.random.normal(rng, (3, 5)),
+                   "b": jnp.asarray([jnp.nan, jnp.inf, -0.0])},
+        "counters": (jnp.arange(4, dtype=jnp.int32),
+                     jnp.asarray(True)),
+    }
+    data = {"traj": {"retries": np.arange(6, dtype=np.int32)},
+            "wall": 1.25, "note": "x"}
+    meta = {"family": "sync", "k": 10, "deadline_s": None}
+    save_engine_checkpoint(path, rnd=6, state=state, data=data, meta=meta)
+    templates = jax.tree.map(jnp.zeros_like, state)
+    rnd, got, got_data, got_meta = load_engine_checkpoint(
+        path, templates, expect_meta=meta)
+    assert rnd == 6 and got_meta == meta
+    assert float(got_data["wall"]) == 1.25 and got_data["note"] == "x"
+    np.testing.assert_array_equal(np.asarray(got_data["traj"]["retries"]),
+                                  data["traj"]["retries"])
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(got)):
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(a, b)
+
+
+def test_engine_checkpoint_refuses_wrong_template(tmp_path):
+    path = os.path.join(tmp_path, "engine.msgpack")
+    save_engine_checkpoint(path, rnd=1,
+                           state={"w": jnp.ones((4,), jnp.float32)})
+    with pytest.raises(CheckpointError, match="does not match template"):
+        load_engine_checkpoint(path, {"w": jnp.ones((5,), jnp.float32)})
+    with pytest.raises(CheckpointError, match="does not match template"):
+        # numpy template: jnp would silently truncate f64 without x64
+        load_engine_checkpoint(path, {"w": np.ones((4,), np.int32)})
+    with pytest.raises(CheckpointError, match="leaves"):
+        load_engine_checkpoint(path, {"w": (jnp.ones(4), jnp.ones(4))})
+    with pytest.raises(CheckpointError, match="no state component"):
+        load_engine_checkpoint(path, {"missing": jnp.ones(4)})
+
+
+def test_engine_checkpoint_refuses_foreign_meta(tmp_path):
+    path = os.path.join(tmp_path, "engine.msgpack")
+    save_engine_checkpoint(path, rnd=1, state={"w": jnp.ones(2)},
+                           meta={"family": "sync", "k": 10})
+    with pytest.raises(CheckpointError, match="different run"):
+        load_engine_checkpoint(path, {"w": jnp.ones(2)},
+                               expect_meta={"family": "sync", "k": 12})
+    # extra stored state the caller does not ask for is ignored (the
+    # async engines use this for the two-phase snapshot-ring restore)
+    rnd, state, _, _ = load_engine_checkpoint(path, {},
+                                              expect_meta={"family": "sync"})
+    assert rnd == 1 and state == {}
