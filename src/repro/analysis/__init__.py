@@ -1,0 +1,23 @@
+"""Static JAX-hazard lint pass + runtime sanitizer harness.
+
+The static half (``engine``/``rules``/``callgraph``/``__main__``) is
+stdlib-only so the CI ``analysis`` job runs hermetically without jax.
+The runtime half (``runtime``: ``strict_mode``, ``setup_transfers``,
+``retrace_guard``) imports jax lazily and is exposed through module
+``__getattr__`` so ``import repro.analysis`` never pulls it in.
+"""
+from repro.analysis.engine import Finding, Report, analyze  # noqa: F401
+
+_RUNTIME = ("strict_mode", "setup_transfers", "retrace_guard",
+            "CompileLog")
+
+
+def __getattr__(name):
+    if name in _RUNTIME:
+        from repro.analysis import runtime
+        return getattr(runtime, name)
+    raise AttributeError(f"module 'repro.analysis' has no attribute "
+                         f"{name!r}")
+
+
+__all__ = ["Finding", "Report", "analyze", *_RUNTIME]

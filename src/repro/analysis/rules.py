@@ -1,0 +1,654 @@
+"""JAX-hazard lint rules, each derived from a real bug in this repo's
+history (see docs/architecture.md "Correctness tooling" for the table).
+
+JX101 prng-key-reuse         — the PR 6 recharge-RNG class
+JX102 optional-knob-truthiness — the PR 3 ``deadline_s=0.0`` class
+JX103 host-sync-in-traced    — host syncs inside jit/scan/shard_map
+JX104 arg-mutation           — the PR 1 overcommit in-place-mutation class
+JX105 nondeterminism         — wall-clock / global-RNG in engine code
+JX106 donated-buffer-reuse   — reads after a ``donate_argnums`` call
+
+Rules are pure-``ast`` visitors over :class:`repro.analysis.engine.Module`
+with a shared :class:`~repro.analysis.engine.ProjectIndex`. Each yields
+:class:`~repro.analysis.engine.Finding`s; suppression happens in the
+engine via the baseline file, never inside a rule.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.callgraph import TracedGraph
+from repro.analysis.engine import (
+    Finding,
+    Module,
+    ProjectIndex,
+    annotation_text,
+    dotted_name,
+    is_optional_numeric,
+    iter_functions,
+    node_end,
+    node_pos,
+    own_nodes,
+    root_name,
+)
+
+#: modules that own deterministic engine state — scope for JX104/JX105
+ENGINE_SCOPE = ("federated/", "core/", "checkpoint/", "kernels/",
+                "compression/", "data/")
+
+
+class Rule:
+    id: str = ""
+    name: str = ""
+    summary: str = ""
+    #: path fragments this rule is restricted to (None = everywhere)
+    scope: Optional[Tuple[str, ...]] = None
+    #: path fragments this rule never fires in
+    exclude: Tuple[str, ...] = ()
+
+    def applies_to(self, path: str) -> bool:
+        p = path.replace("\\", "/")
+        if any(frag in p for frag in self.exclude):
+            return False
+        if self.scope is None:
+            return True
+        return any(frag in p for frag in self.scope)
+
+    def check(self, module: Module,
+              project: ProjectIndex) -> Iterator[Finding]:
+        raise NotImplementedError
+
+
+# --------------------------------------------------------------- JX101
+
+
+#: callees that *derive* a fresh key (consuming their argument safely)
+_KEY_DERIVERS = {
+    "jax.random.split", "random.split", "split",
+    "jax.random.fold_in", "random.fold_in", "fold_in",
+    "jax.random.PRNGKey", "random.PRNGKey", "PRNGKey",
+    "jax.random.key", "jax.random.clone", "jax.random.key_data",
+    "jax.random.wrap_key_data",
+}
+
+
+def _is_key_source(value: ast.AST) -> bool:
+    """True when the assigned value manufactures PRNG key(s)."""
+    if isinstance(value, ast.Call):
+        return dotted_name(value.func) in _KEY_DERIVERS
+    return False
+
+
+def _terminates(stmts: Sequence[ast.stmt]) -> bool:
+    return bool(stmts) and isinstance(
+        stmts[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break))
+
+
+def _mark_subtree(node: ast.AST, path, paths) -> None:
+    paths[node] = path
+    if isinstance(node, ast.Lambda):
+        return
+    if isinstance(node, ast.IfExp):
+        _mark_subtree(node.test, path, paths)
+        _mark_subtree(node.body, path + ((id(node), 0),), paths)
+        _mark_subtree(node.orelse, path + ((id(node), 1),), paths)
+        return
+    for c in ast.iter_child_nodes(node):
+        _mark_subtree(c, path, paths)
+
+
+def _assign_paths(stmts: Sequence[ast.stmt], path, paths) -> None:
+    for i, node in enumerate(stmts):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        paths[node] = path
+        if isinstance(node, ast.If):
+            _mark_subtree(node.test, path, paths)
+            _assign_paths(node.body, path + ((id(node), 0),), paths)
+            _assign_paths(node.orelse, path + ((id(node), 1),), paths)
+            if _terminates(node.body):
+                # the body cannot fall through: everything after this If
+                # runs only on its else side
+                _assign_paths(stmts[i + 1:], path + ((id(node), 1),),
+                              paths)
+                return
+        elif isinstance(node, ast.Try):
+            _assign_paths(node.body, path + ((id(node), 0),), paths)
+            for h in node.handlers:
+                _assign_paths(h.body, path + ((id(node), 1),), paths)
+            _assign_paths(node.orelse, path + ((id(node), 0),), paths)
+            _assign_paths(node.finalbody, path, paths)
+        else:
+            for _, value in ast.iter_fields(node):
+                if (isinstance(value, list) and value
+                        and all(isinstance(v, ast.stmt) for v in value)):
+                    _assign_paths(value, path, paths)
+                elif isinstance(value, ast.AST):
+                    _mark_subtree(value, path, paths)
+                elif isinstance(value, list):
+                    for v in value:
+                        if isinstance(v, ast.AST):
+                            _mark_subtree(v, path, paths)
+
+
+def branch_paths(fn: ast.AST) -> Dict[ast.AST, Tuple]:
+    """node -> chain of (if-node-id, arm) from the function root, with
+    statements after a non-falling-through ``if`` placed on its else
+    arm. Two nodes are mutually exclusive iff they take different arms
+    of some common ``if``."""
+    paths: Dict[ast.AST, Tuple] = {}
+    _assign_paths(fn.body, (), paths)
+    return paths
+
+
+def _exclusive(p1: Tuple, p2: Tuple) -> bool:
+    arms = dict(p1)
+    return any(n in arms and arms[n] != a for n, a in p2)
+
+
+class PrngKeyReuse(Rule):
+    id = "JX101"
+    name = "prng-key-reuse"
+    summary = ("a PRNG key variable is consumed by two calls without an "
+               "intervening split/fold_in — correlated randomness "
+               "(the PR 6 recharge-RNG bug class)")
+    # launch/ checkers replay ONE key stream into two engines on purpose
+    # (bitwise parity comparison) — key sharing is their whole point
+    exclude = ("launch/",)
+
+    def check(self, module, project):
+        for fn in iter_functions(module.tree):
+            yield from self._check_function(module, fn)
+
+    def _key_params(self, fn) -> Set[str]:
+        args = fn.args
+        names = [a.arg for a in (args.posonlyargs + args.args
+                                 + args.kwonlyargs)]
+        return {n for n in names
+                if n in ("key", "rng") or n.endswith("key")}
+
+    def _check_function(self, module, fn):
+        paths = branch_paths(fn)
+        # tracked key var -> list of prior consumptions (pos, path, line)
+        tracked: Dict[str, List[Tuple]] = {
+            n: [] for n in self._key_params(fn)}
+        # events in source order: (pos, kind, payload)
+        events = []
+        for node in own_nodes(fn):
+            if isinstance(node, ast.Call):
+                callee = dotted_name(node.func) or ""
+                derives = callee in _KEY_DERIVERS
+                for arg in (list(node.args)
+                            + [kw.value for kw in node.keywords]):
+                    if isinstance(arg, ast.Name):
+                        events.append((node_pos(arg), "consume",
+                                       (arg.id, derives, arg, node)))
+            elif isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                value = getattr(node, "value", None)
+                names = []
+                for t in targets:
+                    if isinstance(t, ast.Name):
+                        names.append(t.id)
+                    elif isinstance(t, (ast.Tuple, ast.List)):
+                        names.extend(e.id for e in t.elts
+                                     if isinstance(e, ast.Name))
+                for n in names:
+                    events.append((node_end(node), "assign",
+                                   (n, value is not None
+                                    and _is_key_source(value))))
+        events.sort(key=lambda e: e[0])
+        for pos, kind, payload in events:
+            if kind == "assign":
+                name, is_key = payload
+                if is_key:
+                    tracked[name] = []
+                elif name in tracked:
+                    del tracked[name]
+            else:
+                name, derives, arg, call = payload
+                if name not in tracked or derives:
+                    continue
+                path = paths.get(arg, ())
+                clash = next((c for c in tracked[name]
+                              if not _exclusive(c[1], path)), None)
+                if clash is None:
+                    tracked[name].append((pos, path, pos[0]))
+                else:
+                    yield module.finding(
+                        self.id, call,
+                        f"PRNG key '{name}' is consumed again without an "
+                        f"intervening split/fold_in (first consumed at "
+                        f"line {clash[2]}) — the two draws are perfectly "
+                        f"correlated")
+
+
+# --------------------------------------------------------------- JX102
+
+
+class OptionalKnobTruthiness(Rule):
+    id = "JX102"
+    name = "optional-knob-truthiness"
+    summary = ("truthiness test on an Optional numeric knob — 0/0.0/False "
+               "is a real value, not 'unset'; use 'is not None' "
+               "(the PR 3 deadline_s=0.0 bug class)")
+
+    def check(self, module, project):
+        fields = project.optional_numeric_fields
+        for fn in iter_functions(module.tree):
+            opt_params = self._optional_params(fn)
+            for expr in self._bool_contexts(fn):
+                yield from self._check_expr(module, expr, fields,
+                                            opt_params)
+        # module-level boolean contexts (rare, but cheap to cover);
+        # own_nodes() does not descend into the function defs already
+        # handled above
+        for expr in self._bool_contexts(module.tree):
+            yield from self._check_expr(module, expr, fields, set())
+
+    def _optional_params(self, fn) -> Set[str]:
+        args = fn.args
+        out = set()
+        for a in (args.posonlyargs + args.args + args.kwonlyargs):
+            if is_optional_numeric(annotation_text(a.annotation)):
+                out.add(a.arg)
+        return out
+
+    def _bool_contexts(self, scope):
+        """Expressions evaluated for truthiness within ``scope`` (not
+        descending into nested function scopes)."""
+        seen = set()
+        for node in own_nodes(scope):
+            exprs = []
+            if isinstance(node, (ast.If, ast.While)):
+                exprs.append(node.test)
+            elif isinstance(node, ast.IfExp):
+                exprs.append(node.test)
+            elif isinstance(node, ast.Assert):
+                exprs.append(node.test)
+            elif isinstance(node, ast.BoolOp):
+                exprs.extend(node.values)
+            elif (isinstance(node, ast.UnaryOp)
+                    and isinstance(node.op, ast.Not)):
+                exprs.append(node.operand)
+            elif isinstance(node, ast.comprehension):
+                exprs.extend(node.ifs)
+            for e in exprs:
+                k = (id(e),)
+                if k not in seen:
+                    seen.add(k)
+                    yield e
+
+    def _check_expr(self, module, expr, fields, opt_params):
+        if isinstance(expr, ast.Attribute):
+            if expr.attr in fields:
+                yield module.finding(
+                    self.id, expr,
+                    f"truthiness test on '.{expr.attr}' which is declared "
+                    f"{fields[expr.attr]} — 0/0.0/False is a real value "
+                    f"that this treats as 'unset'; compare 'is not None'")
+        elif isinstance(expr, ast.Name):
+            if expr.id in opt_params:
+                yield module.finding(
+                    self.id, expr,
+                    f"truthiness test on parameter '{expr.id}' annotated "
+                    f"Optional numeric — 0/0.0/False is a real value that "
+                    f"this treats as 'unset'; compare 'is not None'")
+
+
+# --------------------------------------------------------------- JX103
+
+
+#: method calls that force a device->host sync on a traced value
+_SYNC_METHODS = {"item", "tolist", "block_until_ready", "numpy",
+                 "copy_to_host_async"}
+#: numpy attribute accesses that are NOT calls into numpy compute
+_NP_BENIGN = {"float32", "float64", "float16", "int8", "int16", "int32",
+              "int64", "uint8", "uint16", "uint32", "uint64", "bool_",
+              "dtype", "ndarray", "errstate", "printoptions"}
+_CAST_BUILTINS = {"float", "int", "bool", "complex"}
+
+
+class HostSyncInTraced(Rule):
+    id = "JX103"
+    name = "host-sync-in-traced"
+    summary = ("host synchronization (.item()/np.*/float()) inside a "
+               "function reachable from a jit/scan/shard_map body — "
+               "either a tracer error or a silent per-step device sync")
+
+    def check(self, module, project):
+        graph = TracedGraph(module.tree)
+        for fn, why in graph.traced_functions():
+            yield from self._check_body(module, fn, why)
+
+    def _check_body(self, module, fn, why):
+        for node in own_nodes(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = dotted_name(node.func)
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _SYNC_METHODS):
+                yield module.finding(
+                    self.id, node,
+                    f".{node.func.attr}() inside '{fn.name}' "
+                    f"({why}) forces a device->host sync under trace")
+            elif callee and (callee.startswith("np.")
+                             or callee.startswith("numpy.")):
+                tail = callee.split(".", 1)[1]
+                if tail.split(".")[0] not in _NP_BENIGN:
+                    yield module.finding(
+                        self.id, node,
+                        f"numpy call '{callee}' inside '{fn.name}' "
+                        f"({why}) concretizes traced values on host — "
+                        f"use jnp or hoist it out of the traced body")
+            elif (callee in _CAST_BUILTINS and len(node.args) == 1
+                    and not isinstance(node.args[0], ast.Constant)):
+                yield module.finding(
+                    self.id, node,
+                    f"{callee}() inside '{fn.name}' ({why}) "
+                    f"concretizes a traced value (TracerConversionError "
+                    f"under jit, silent sync otherwise)")
+
+
+# --------------------------------------------------------------- JX104
+
+
+_MUTATOR_METHODS = {"append", "extend", "insert", "remove", "clear",
+                    "update", "setdefault", "popitem", "sort", "reverse",
+                    "add", "discard", "fill", "setflags"}
+
+
+class ArgMutation(Rule):
+    id = "JX104"
+    name = "arg-mutation"
+    summary = ("in-place mutation of a function argument in engine code — "
+               "callers share the object (the PR 1 overcommit mutation "
+               "bug class); return a new value instead")
+    scope = ENGINE_SCOPE
+
+    def check(self, module, project):
+        for fn in iter_functions(module.tree):
+            params = self._params(fn)
+            if params:
+                yield from self._check_body(module, fn, params)
+
+    def _params(self, fn) -> Set[str]:
+        args = fn.args
+        names = [a.arg for a in (args.posonlyargs + args.args
+                                 + args.kwonlyargs)]
+        if getattr(args, "vararg", None):
+            names.append(args.vararg.arg)
+        if getattr(args, "kwarg", None):
+            names.append(args.kwarg.arg)
+        # Pallas kernels mutate their Ref arguments by design — that is
+        # the kernel ABI, not shared-object aliasing
+        return {n for n in names
+                if n not in ("self", "cls") and not n.endswith("_ref")}
+
+    def _rebind_positions(self, fn, params) -> Dict[str, Tuple[int, int]]:
+        """Earliest bare-name rebinding of each param (``x = dict(x)``):
+        later writes hit the local copy, not the caller's object."""
+        out: Dict[str, Tuple[int, int]] = {}
+        for node in own_nodes(fn):
+            targets = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AnnAssign, ast.For)):
+                targets = [node.target]
+            elif isinstance(node, ast.withitem) and node.optional_vars:
+                targets = [node.optional_vars]
+            for t in targets:
+                elts = t.elts if isinstance(t, (ast.Tuple, ast.List)) else [t]
+                for e in elts:
+                    if isinstance(e, ast.Name) and e.id in params:
+                        pos = node_pos(e)
+                        if e.id not in out or pos < out[e.id]:
+                            out[e.id] = pos
+        return out
+
+    def _check_body(self, module, fn, params):
+        rebound = self._rebind_positions(fn, params)
+
+        def still_param(base, node) -> bool:
+            return (base in params
+                    and (base not in rebound
+                         or node_pos(node) <= rebound[base]))
+
+        for node in own_nodes(fn):
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    if isinstance(t, (ast.Tuple, ast.List)):
+                        elts = t.elts
+                    else:
+                        elts = [t]
+                    for e in elts:
+                        if isinstance(e, (ast.Subscript, ast.Attribute)):
+                            base = root_name(e)
+                            if still_param(base, node):
+                                yield module.finding(
+                                    self.id, node,
+                                    f"argument '{base}' of '{fn.name}' is "
+                                    f"mutated in place — the caller's "
+                                    f"object changes underneath it")
+            elif isinstance(node, ast.Delete):
+                for t in node.targets:
+                    if isinstance(t, (ast.Subscript, ast.Attribute)):
+                        base = root_name(t)
+                        if still_param(base, node):
+                            yield module.finding(
+                                self.id, node,
+                                f"argument '{base}' of '{fn.name}' is "
+                                f"mutated in place (del)")
+            elif (isinstance(node, ast.Expr)
+                    and isinstance(node.value, ast.Call)
+                    and isinstance(node.value.func, ast.Attribute)
+                    and node.value.func.attr in _MUTATOR_METHODS):
+                # only a *discarded* result is a mutation smell: pure
+                # methods that happen to share a mutator name (optax's
+                # opt.update, pytree .replace) have their result bound
+                call = node.value
+                base = root_name(call.func.value)
+                if still_param(base, node):
+                    yield module.finding(
+                        self.id, call,
+                        f"argument '{base}' of '{fn.name}' is mutated in "
+                        f"place via .{call.func.attr}() — the caller's "
+                        f"object changes underneath it")
+
+
+# --------------------------------------------------------------- JX105
+
+
+_NONDET_CALLS = {
+    "time.time", "time.time_ns", "time.perf_counter",
+    "time.perf_counter_ns", "time.monotonic", "time.monotonic_ns",
+    "datetime.now", "datetime.utcnow", "datetime.datetime.now",
+    "datetime.datetime.utcnow",
+    "os.urandom", "uuid.uuid1", "uuid.uuid4",
+    "secrets.token_bytes", "secrets.token_hex", "secrets.randbits",
+}
+_PY_RANDOM_FNS = {"random", "randint", "randrange", "uniform", "choice",
+                  "choices", "shuffle", "sample", "seed", "gauss",
+                  "normalvariate", "betavariate", "getrandbits"}
+
+
+class Nondeterminism(Rule):
+    id = "JX105"
+    name = "nondeterminism"
+    summary = ("wall-clock / global-RNG / set-iteration inside engine or "
+               "fault-stream code — breaks the (seed, round, client) "
+               "keying contract and bitwise engine parity")
+    scope = ENGINE_SCOPE
+
+    def check(self, module, project):
+        imports_random = any(
+            isinstance(n, ast.Import)
+            and any(a.name == "random" for a in n.names)
+            for n in ast.walk(module.tree))
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Call):
+                callee = dotted_name(node.func) or ""
+                if callee in _NONDET_CALLS:
+                    yield module.finding(
+                        self.id, node,
+                        f"'{callee}' in engine code — results must be a "
+                        f"pure function of (seed, round, client)")
+                elif (callee.startswith("np.random.")
+                        or callee.startswith("numpy.random.")):
+                    yield module.finding(
+                        self.id, node,
+                        f"global numpy RNG '{callee}' in engine code — "
+                        f"use jax.random keyed on (seed, round, client)")
+                elif (imports_random and callee.startswith("random.")
+                        and callee.split(".")[1] in _PY_RANDOM_FNS):
+                    yield module.finding(
+                        self.id, node,
+                        f"python global RNG '{callee}' in engine code — "
+                        f"use jax.random keyed on (seed, round, client)")
+            elif isinstance(node, (ast.For, ast.comprehension)):
+                it = node.iter
+                if (isinstance(it, ast.Call)
+                        and dotted_name(it.func) == "set"):
+                    yield module.finding(
+                        self.id, it,
+                        "iterating a set() in engine code — iteration "
+                        "order depends on PYTHONHASHSEED across "
+                        "processes; sort it first")
+
+
+# --------------------------------------------------------------- JX106
+
+
+def _donate_positions(call: ast.Call) -> Optional[Set[int]]:
+    """Donated positions from a jax.jit(...) call node, if any."""
+    if dotted_name(call.func) not in ("jax.jit", "jit"):
+        return None
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            try:
+                val = ast.literal_eval(kw.value)
+            except ValueError:
+                return None
+            if isinstance(val, int):
+                return {val}
+            return set(int(v) for v in val)
+    return None
+
+
+class DonatedBufferReuse(Rule):
+    id = "JX106"
+    name = "donated-buffer-reuse"
+    summary = ("a buffer passed to a donate_argnums call site is read "
+               "afterwards — XLA may already have reused its memory "
+               "(DeleteDeviceBuffer / garbage reads)")
+
+    def check(self, module, project):
+        donors = self._collect_donors(module.tree)
+        if not donors:
+            return
+        for fn in iter_functions(module.tree):
+            yield from self._check_body(module, fn, donors)
+
+    def _collect_donors(self, tree) -> Dict[str, Set[int]]:
+        donors: Dict[str, Set[int]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if isinstance(dec, ast.Call):
+                        pos = _donate_positions(dec)
+                        if pos is None and (dotted_name(dec.func)
+                                            in ("functools.partial",
+                                                "partial")
+                                            and dec.args):
+                            inner = ast.Call(func=dec.args[0],
+                                             args=[], keywords=dec.keywords)
+                            pos = _donate_positions(inner)
+                        if pos:
+                            donors.setdefault(node.name, set()).update(pos)
+            elif isinstance(node, ast.Assign) and len(node.targets) == 1:
+                t = node.targets[0]
+                if isinstance(t, ast.Name) and isinstance(node.value,
+                                                          ast.Call):
+                    pos = _donate_positions(node.value)
+                    if pos:
+                        donors.setdefault(t.id, set()).update(pos)
+        return donors
+
+    def _check_body(self, module, fn, donors):
+        # all name loads/stores in this scope, in source order
+        loads: List[Tuple[Tuple[int, int], str, ast.AST]] = []
+        stores: List[Tuple[Tuple[int, int], str]] = []
+        for node in own_nodes(fn):
+            if isinstance(node, ast.Name):
+                if isinstance(node.ctx, ast.Load):
+                    loads.append((node_pos(node), node.id, node))
+                else:
+                    stores.append((node_pos(node), node.id))
+        loads.sort(key=lambda x: x[0])
+        stores.sort(key=lambda x: x[0])
+
+        for node in own_nodes(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = dotted_name(node.func)
+            if callee is None or callee.split(".")[-1] not in donors:
+                continue
+            positions = donors[callee.split(".")[-1]]
+            end = node_end(node)
+            for i, arg in enumerate(node.args):
+                if i not in positions or not isinstance(arg, ast.Name):
+                    continue
+                name = arg.id
+                # a store that is part of the same statement (tuple
+                # assignment of the call result) rebinds the name
+                next_store = next((p for p, n in stores
+                                   if n == name and p > end), None)
+                reassigned_here = any(
+                    p for p, n in stores
+                    if n == name and node_pos(node) >= p >= node_pos(arg)
+                ) or self._assigned_by_stmt(fn, node, name)
+                for pos, n, load in loads:
+                    if n != name or pos <= end:
+                        continue
+                    if next_store is not None and pos > next_store:
+                        break
+                    if reassigned_here and next_store is None:
+                        break
+                    if reassigned_here and pos > next_store:
+                        break
+                    yield module.finding(
+                        self.id, load,
+                        f"'{name}' was donated to '{callee}' at line "
+                        f"{node.lineno} (donate_argnums) and is read "
+                        f"again here — its buffer may already be reused")
+                    break
+
+    def _assigned_by_stmt(self, fn, call, name) -> bool:
+        """True when the statement containing ``call`` assigns ``name``
+        (e.g. ``x, y = f(x)`` — the donated name is rebound)."""
+        for node in own_nodes(fn):
+            if isinstance(node, ast.Assign):
+                contains = any(c is call for c in ast.walk(node.value))
+                if not contains:
+                    continue
+                for t in node.targets:
+                    for e in ast.walk(t):
+                        if isinstance(e, ast.Name) and e.id == name:
+                            return True
+        return False
+
+
+ALL_RULES: Sequence[Rule] = (
+    PrngKeyReuse(),
+    OptionalKnobTruthiness(),
+    HostSyncInTraced(),
+    ArgMutation(),
+    Nondeterminism(),
+    DonatedBufferReuse(),
+)
+
+RULES_BY_ID = {r.id: r for r in ALL_RULES}

@@ -53,7 +53,9 @@ def save_engine_checkpoint(path: str, *, rnd: int,
     """Atomically snapshot an engine carry at (completed) round ``rnd``."""
     packed_state = {}
     for name, tree in state.items():
-        packed_state[name] = [_pack(np.asarray(leaf))
+        # explicit device->host (not np.asarray) so saving mid-run stays
+        # legal under analysis.runtime.strict_mode's transfer guard
+        packed_state[name] = [_pack(jax.device_get(leaf))
                               for leaf in jax.tree.leaves(tree)]
     payload = {
         "kind": "engine-carry",
@@ -123,7 +125,7 @@ def segment_bounds(start: int, total: int, every: Optional[int],
     of ``None``/0 yields one segment."""
     if total < 0 or start > total:
         raise ValueError(f"bad segment range start={start} total={total}")
-    if not every or every <= 0:
+    if every is None or every <= 0:
         if start < total:
             yield (start, total)
         return

@@ -123,7 +123,8 @@ def run_fl_async(cfg: FLConfig, verbose: bool = False) -> FLHistory:
 
     params = init_resnet(kmodel, cfg.model)
     n_params = sum(x.size for x in jax.tree.leaves(params))
-    model_bytes = cfg.sim_model_bytes or (n_params * 4.0)
+    model_bytes = (cfg.sim_model_bytes if cfg.sim_model_bytes is not None
+                   else n_params * 4.0)
     opt = make_server_optimizer(cfg.server_opt, cfg.server_lr)
     opt_state = opt.init(params)
 

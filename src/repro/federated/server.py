@@ -37,6 +37,7 @@ from repro.core.selection import (
     _rank_bits,
     _slot_gather,
 )
+from repro.analysis.runtime import setup_transfers
 from repro.checkpoint import load_engine_checkpoint, segment_bounds
 from repro.data import label_restricted_partition, make_test_set
 from repro.federated.aggregation import (
@@ -308,7 +309,8 @@ def _engine_setup(cfg: FLConfig, kpop, model_bytes: float):
                           init_battery_low=cfg.init_battery_low,
                           init_battery_high=cfg.init_battery_high,
                           samples_per_client=cfg.samples_per_client)
-    sim_steps = cfg.sim_local_steps or cfg.local_steps
+    sim_steps = (cfg.sim_local_steps if cfg.sim_local_steps is not None
+                 else cfg.local_steps)
     codec_params = ({"sparsity": cfg.compression_sparsity}
                     if cfg.compression == "topk" else {})
     up_bytes = wire_bytes(model_bytes, cfg.compression, **codec_params)
@@ -397,7 +399,8 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
 
     params = init_resnet(kmodel, cfg.model)
     n_params = sum(x.size for x in jax.tree.leaves(params))
-    model_bytes = cfg.sim_model_bytes or (n_params * 4.0)
+    model_bytes = (cfg.sim_model_bytes if cfg.sim_model_bytes is not None
+                   else n_params * 4.0)
     opt = make_server_optimizer(cfg.server_opt, cfg.server_lr)
     opt_state = opt.init(params)
 
@@ -731,7 +734,8 @@ def _fused_setup(cfg: FLConfig):
                          noise=cfg.data_noise)
     params = init_resnet(kmodel, cfg.model)
     n_params = sum(x.size for x in jax.tree.leaves(params))
-    model_bytes = cfg.sim_model_bytes or (n_params * 4.0)
+    model_bytes = (cfg.sim_model_bytes if cfg.sim_model_bytes is not None
+                   else n_params * 4.0)
     opt = make_server_optimizer(cfg.server_opt, cfg.server_lr)
     opt_state = opt.init(params)
     pop, sim_steps, up_bytes, energy_model = _engine_setup(cfg, kpop,
@@ -795,7 +799,11 @@ def _history_from_traj(cfg: FLConfig, init_acc: float, traj) -> FLHistory:
     for r in range(slot_losses.shape[0]):
         m = succ_mask[r]
         if m.any():
-            last_loss = float(jnp.asarray(slot_losses[r][m]).mean())
+            # explicit device round-trip (not jnp.asarray/float) so the
+            # f32 jnp mean — required for bitwise host-loop parity — is
+            # still legal under strict_mode's transfer guard
+            last_loss = float(jax.device_get(
+                jnp.mean(jax.device_put(slot_losses[r][m]))))
         hist.train_loss.append(last_loss)
     for name in ("test_acc", "fairness", "mean_battery"):
         setattr(hist, name, [float(x) for x in np.asarray(traj[name])])
@@ -821,9 +829,11 @@ _TRAIN_CARRY = ("params", "opt_state", "pop", "st", "kloop", "last_acc")
 def _fused_do_eval(cfg: FLConfig, a: int, b: int) -> jnp.ndarray:
     """Eval schedule for absolute rounds ``(a, b]`` — computed from the
     absolute round numbers so a resumed segment evaluates on exactly the
-    rounds the uninterrupted run would."""
+    rounds the uninterrupted run would. The host->device transfer is
+    explicit (device_put) so the segment loop stays legal under
+    ``analysis.runtime.strict_mode``."""
     rr = np.arange(a + 1, b + 1)
-    return jnp.asarray(((rr % cfg.eval_every) == 0) | (rr == cfg.rounds))
+    return jax.device_put(((rr % cfg.eval_every) == 0) | (rr == cfg.rounds))
 
 
 def _run_fused_elastic(cfg: FLConfig, run, carry0, run_args,
@@ -840,18 +850,19 @@ def _run_fused_elastic(cfg: FLConfig, run, carry0, run_args,
     if cfg.resume_from:
         templates = dict(zip(_TRAIN_CARRY, carry0))
         templates["pop"] = resume_templates["pop_template"]
-        start, state, saved, _ = load_engine_checkpoint(
-            cfg.resume_from, templates, expect_meta=meta)
-        carry = resume_templates["restore"](state)
+        with setup_transfers():  # checkpoint leaves move host->device
+            start, state, saved, _ = load_engine_checkpoint(
+                cfg.resume_from, templates, expect_meta=meta)
+            carry = resume_templates["restore"](state)
         parts.append(saved["traj"])
         init_acc = float(saved["init_acc"])
     else:
         start = 0
         carry = carry0
-        init_acc = float(carry0[-1])
+        init_acc = float(jax.device_get(carry0[-1]))
     for a, b in segment_bounds(start, cfg.rounds, ck.every if ck else None):
         carry, traj = run(_fused_do_eval(cfg, a, b), carry, *run_args)
-        parts.append(jax.tree.map(np.asarray, traj))
+        parts.append(jax.device_get(traj))
         if ck and ck.due(b):
             ck.save(b, save_state(carry),
                     {"traj": _concat_traj(parts), "init_acc": init_acc})
@@ -871,16 +882,17 @@ def run_fl_scanned(cfg: FLConfig, verbose: bool = False) -> FLHistory:
     because the RNG chain rides in the scan carry, the segmented (and the
     resumed) trajectory is bitwise-identical to the uninterrupted one."""
     _reject_async_knobs(cfg, "run_fl_scanned")
-    (kloop, data, test, params, opt_state, pop, sim_steps, up_bytes,
-     energy_model, model_bytes) = _fused_setup(cfg)
-    t_total, cost = round_cost_table(pop, energy_model, model_bytes,
-                                     sim_steps, cfg.batch_size, up_bytes)
-    run, evaluate = _fused_runner(cfg.model, *_fused_statics(cfg),
-                                  _auto_pallas(cfg.n_clients, None),
-                                  jax.default_backend() != "tpu")
-    st = SelectorState.create(cfg.selector).canonical()
-    acc0 = evaluate(params, test["x"], test["y"])
-    carry0 = (params, opt_state, pop, st, kloop, acc0)
+    with setup_transfers():  # one-time host->device materialization
+        (kloop, data, test, params, opt_state, pop, sim_steps, up_bytes,
+         energy_model, model_bytes) = _fused_setup(cfg)
+        t_total, cost = round_cost_table(pop, energy_model, model_bytes,
+                                         sim_steps, cfg.batch_size, up_bytes)
+        run, evaluate = _fused_runner(cfg.model, *_fused_statics(cfg),
+                                      _auto_pallas(cfg.n_clients, None),
+                                      jax.default_backend() != "tpu")
+        st = SelectorState.create(cfg.selector).canonical()
+        acc0 = evaluate(params, test["x"], test["y"])
+        carry0 = (params, opt_state, pop, st, kloop, acc0)
     hist = _run_fused_elastic(
         cfg, run, carry0,
         (data["x"], data["y"], test["x"], test["y"], t_total, cost),
@@ -1145,32 +1157,32 @@ def run_fl_sharded(cfg: FLConfig, verbose: bool = False, mesh=None,
     if mesh is None:
         mesh = make_client_mesh(n_shards)
     axis_name = mesh.axis_names[0]
-    (kloop, data, test, params, opt_state, pop, sim_steps, up_bytes,
-     energy_model, model_bytes) = _fused_setup(cfg)
-    n_real = pop.n
-    pop0 = pop  # unpadded host population — the checkpoint template
-    sharding = population_sharding(mesh, axis_name)
-    pop = jax.device_put(pad_population(pop, mesh.shape[axis_name]),
-                         sharding)
-    pad = pop.n - n_real
+    with setup_transfers():  # one-time host->device materialization
+        (kloop, data, test, params, opt_state, pop, sim_steps, up_bytes,
+         energy_model, model_bytes) = _fused_setup(cfg)
+        n_real = pop.n
+        pop0 = pop  # unpadded host population — the checkpoint template
+        sharding = population_sharding(mesh, axis_name)
+        pop = jax.device_put(pad_population(pop, mesh.shape[axis_name]),
+                             sharding)
+        pad = pop.n - n_real
 
-    def pad_clients(a):
-        if pad:
-            a = jnp.concatenate(
-                [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)])
-        return jax.device_put(a, sharding)
+        def pad_clients(a):
+            if pad:
+                a = jnp.concatenate(
+                    [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)])
+            return jax.device_put(a, sharding)
 
-    data_x, data_y = pad_clients(data["x"]), pad_clients(data["y"])
-    t_total, cost = round_cost_table(pop, energy_model, model_bytes,
-                                     sim_steps, cfg.batch_size, up_bytes,
-                                     sharding=sharding)
-    run, evaluate = _sharded_fused_runner(cfg.model, *_fused_statics(cfg),
-                                          _auto_pallas(n_real, None),
-                                          jax.default_backend() != "tpu",
-                                          mesh, n_real, axis_name)
-    st = SelectorState.create(cfg.selector).canonical()
-    acc0 = evaluate(params, test["x"], test["y"])
-    carry0 = (params, opt_state, pop, st, kloop, acc0)
+        data_x, data_y = pad_clients(data["x"]), pad_clients(data["y"])
+        t_total, cost = round_cost_table(pop, energy_model, model_bytes,
+                                         sim_steps, cfg.batch_size,
+                                         up_bytes, sharding=sharding)
+        run, evaluate = _sharded_fused_runner(
+            cfg.model, *_fused_statics(cfg), _auto_pallas(n_real, None),
+            jax.default_backend() != "tpu", mesh, n_real, axis_name)
+        st = SelectorState.create(cfg.selector).canonical()
+        acc0 = evaluate(params, test["x"], test["y"])
+        carry0 = (params, opt_state, pop, st, kloop, acc0)
 
     # the checkpoint stores the population TRIMMED to the real clients (the
     # pad tail is provably inert: dead, never selected, never recharged),
@@ -1229,7 +1241,7 @@ def run_selection_scanned(cfg: FLConfig, rounds: Optional[int] = None,
     final_pop, final_state, traj = run_rounds(
         kloop, cfg.selector, pop, SelectorState.create(cfg.selector),
         energy_model, model_bytes, sim_steps, cfg.batch_size,
-        rounds or cfg.rounds, mode=mode, deadline_s=cfg.deadline_s,
+        rounds if rounds is not None else cfg.rounds, mode=mode, deadline_s=cfg.deadline_s,
         up_bytes=up_bytes, use_pallas=use_pallas,
         buffer_size=cfg.buffer_size, max_concurrency=cfg.max_concurrency,
         staleness_power=cfg.staleness_power, mesh=mesh, n_shards=n_shards,

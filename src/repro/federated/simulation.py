@@ -385,7 +385,7 @@ def _make_checkpointer(checkpoint_path: Optional[str],
                          "not — there is nowhere to write snapshots")
     if not checkpoint_path:
         return None
-    every = checkpoint_every if checkpoint_every else rounds
+    every = checkpoint_every if checkpoint_every is not None else rounds
     return CarryCheckpointer(checkpoint_path, every, rounds, meta)
 
 
@@ -910,7 +910,9 @@ def _async_fill_prepend(traj, idx0, chosen0, b: int):
     """Selection trajectory aligned with the sync engine: row r is the
     cohort *started* for aggregation r+1 (initial fill + refills). The
     fill row is truncated to the refill width; the full
-    (max_concurrency,) fill is also kept for replay/debugging."""
+    (max_concurrency,) fill is also kept for replay/debugging. Returns
+    a new dict — the caller's trajectory is never mutated."""
+    traj = dict(traj)
     traj["fill_selected"] = idx0
     traj["fill_chosen"] = chosen0
     traj["selected"] = jnp.concatenate([jnp.asarray(idx0)[None, :b],

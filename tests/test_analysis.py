@@ -1,0 +1,502 @@
+"""Paired should-fire / should-not-fire coverage for every lint rule in
+``repro.analysis``, each firing case a minimal reproduction of the
+historical bug its rule encodes, plus CLI/baseline schema stability."""
+import ast
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis.engine import (
+    Baseline,
+    Module,
+    analyze,
+    run_rules,
+    write_baseline,
+)
+from repro.analysis.rules import (
+    ALL_RULES,
+    ArgMutation,
+    DonatedBufferReuse,
+    HostSyncInTraced,
+    Nondeterminism,
+    OptionalKnobTruthiness,
+    PrngKeyReuse,
+)
+
+ENGINE_PATH = "src/repro/federated/snippet.py"
+
+
+def lint(src, rule=None, path=ENGINE_PATH):
+    src = textwrap.dedent(src)
+    mod = Module(path=path, source=src, tree=ast.parse(src))
+    rules = ALL_RULES if rule is None else [rule]
+    return run_rules([mod], rules)
+
+
+def rule_ids(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ------------------------------------------------------- JX101 key reuse
+
+
+class TestPrngKeyReuse:
+    def test_fires_on_recharge_style_reuse(self):
+        # the PR 6 bug: one key drawn for selection AND recharge
+        src = """
+            import jax
+            def round_step(key, pop):
+                sel = jax.random.uniform(key, (8,))
+                recharge = jax.random.bernoulli(key, 0.25, (8,))
+                return sel, recharge
+        """
+        fs = lint(src, PrngKeyReuse())
+        assert rule_ids(fs) == ["JX101"]
+        assert "recharge" in fs[0].snippet
+
+    def test_silent_after_split(self):
+        src = """
+            import jax
+            def round_step(key, pop):
+                ksel, krecharge = jax.random.split(key)
+                sel = jax.random.uniform(ksel, (8,))
+                recharge = jax.random.bernoulli(krecharge, 0.25, (8,))
+                return sel, recharge
+        """
+        assert lint(src, PrngKeyReuse()) == []
+
+    def test_silent_on_fold_in_rederive(self):
+        src = """
+            import jax
+            def stream(key, rnd):
+                a = jax.random.uniform(jax.random.fold_in(key, 1), (4,))
+                b = jax.random.uniform(jax.random.fold_in(key, 2), (4,))
+                return a, b
+        """
+        assert lint(src, PrngKeyReuse()) == []
+
+    def test_silent_across_exclusive_branches(self):
+        src = """
+            import jax
+            def init(key, kind):
+                if kind == "a":
+                    return jax.random.uniform(key, (4,))
+                return jax.random.normal(key, (4,))
+        """
+        assert lint(src, PrngKeyReuse()) == []
+
+    def test_silent_after_reassignment(self):
+        src = """
+            import jax
+            def loop(key):
+                a = jax.random.uniform(key, (4,))
+                key = jax.random.fold_in(key, 1)
+                b = jax.random.uniform(key, (4,))
+                return a, b
+        """
+        assert lint(src, PrngKeyReuse()) == []
+
+    def test_excluded_in_launch_checkers(self):
+        src = """
+            import jax
+            def parity(key):
+                a = engine_a(key)
+                b = engine_b(key)
+                return a, b
+            def engine_a(key):
+                return jax.random.uniform(key, (4,))
+            def engine_b(key):
+                return jax.random.uniform(key, (4,))
+        """
+        assert lint(src, PrngKeyReuse(),
+                    path="src/repro/launch/parity_check.py") == []
+        assert lint(src, PrngKeyReuse()) != []
+
+
+# ---------------------------------------------------- JX102 truthiness
+
+
+class TestOptionalKnobTruthiness:
+    DEADLINE_SRC = """
+        from dataclasses import dataclass
+        from typing import Optional
+
+        @dataclass
+        class FLConfig:
+            deadline_s: Optional[float] = None
+
+        def round_deadline(cfg):
+            if cfg.deadline_s:   # the PR 3 bug: 0.0 means "no deadline"
+                return cfg.deadline_s
+            return 1e9
+    """
+
+    def test_fires_on_deadline_truthiness(self):
+        fs = lint(self.DEADLINE_SRC, OptionalKnobTruthiness())
+        assert rule_ids(fs) == ["JX102"]
+        assert "deadline_s" in fs[0].message
+
+    def test_silent_on_is_not_none(self):
+        src = self.DEADLINE_SRC.replace("if cfg.deadline_s:",
+                                        "if cfg.deadline_s is not None:")
+        assert lint(src, OptionalKnobTruthiness()) == []
+
+    def test_silent_on_plain_float_field(self):
+        src = """
+            from dataclasses import dataclass
+
+            @dataclass
+            class FLConfig:
+                fedprox_mu: float = 0.0
+
+            def has_prox(cfg):
+                if cfg.fedprox_mu:
+                    return True
+                return False
+        """
+        assert lint(src, OptionalKnobTruthiness()) == []
+
+    def test_fires_on_optional_param_or_default(self):
+        src = """
+            from typing import Optional
+            def pick(rounds: Optional[int], default: int):
+                return rounds or default
+        """
+        fs = lint(src, OptionalKnobTruthiness())
+        assert rule_ids(fs) == ["JX102"]
+
+
+# ------------------------------------------------------ JX103 host sync
+
+
+class TestHostSyncInTraced:
+    def test_fires_on_item_in_jitted(self):
+        src = """
+            import jax
+            @jax.jit
+            def step(x):
+                return x.sum().item()
+        """
+        fs = lint(src, HostSyncInTraced())
+        assert rule_ids(fs) == ["JX103"]
+
+    def test_fires_on_numpy_in_scan_body_callee(self):
+        src = """
+            import jax
+            import numpy as np
+            def helper(x):
+                return np.asarray(x).mean()
+            def body(carry, x):
+                return carry, helper(x)
+            def run(xs):
+                return jax.lax.scan(body, 0.0, xs)
+        """
+        fs = lint(src, HostSyncInTraced())
+        assert rule_ids(fs) == ["JX103"]
+        assert "np.asarray" in fs[0].snippet
+
+    def test_silent_on_host_only_function(self):
+        src = """
+            import numpy as np
+            def summarize(traj):
+                return float(np.asarray(traj).mean())
+        """
+        assert lint(src, HostSyncInTraced()) == []
+
+    def test_silent_on_jnp_in_jitted(self):
+        src = """
+            import jax
+            import jax.numpy as jnp
+            @jax.jit
+            def step(x):
+                return jnp.mean(x)
+        """
+        assert lint(src, HostSyncInTraced()) == []
+
+
+# ---------------------------------------------------- JX104 arg mutation
+
+
+class TestArgMutation:
+    def test_fires_on_overcommit_style_mutation(self):
+        # the PR 1 bug: capping stragglers by writing into the caller's
+        # outcome object
+        src = """
+            def cap_stragglers(outcome, k):
+                outcome.succeeded[k:] = False
+                return outcome
+        """
+        fs = lint(src, ArgMutation())
+        assert rule_ids(fs) == ["JX104"]
+
+    def test_fires_on_discarded_mutator_call(self):
+        src = """
+            def record(hist, x):
+                hist.append(x)
+        """
+        fs = lint(src, ArgMutation())
+        assert rule_ids(fs) == ["JX104"]
+
+    def test_silent_after_defensive_copy(self):
+        src = """
+            def annotate(traj, x):
+                traj = dict(traj)
+                traj["x"] = x
+                return traj
+        """
+        assert lint(src, ArgMutation()) == []
+
+    def test_silent_on_pure_update_with_bound_result(self):
+        src = """
+            def server_update(params, grad, opt, opt_state):
+                updates, opt_state = opt.update(grad, opt_state, params)
+                return updates, opt_state
+        """
+        assert lint(src, ArgMutation()) == []
+
+    def test_silent_on_pallas_ref_params(self):
+        src = """
+            import jax.numpy as jnp
+            def kernel(x_ref, o_ref):
+                o_ref[...] = x_ref[...] * 2
+        """
+        assert lint(src, ArgMutation()) == []
+
+    def test_scoped_to_engine_code(self):
+        src = """
+            def record(hist, x):
+                hist.append(x)
+        """
+        assert lint(src, ArgMutation(),
+                    path="src/repro/launch/report.py") == []
+
+
+# -------------------------------------------------- JX105 nondeterminism
+
+
+class TestNondeterminism:
+    def test_fires_on_wall_clock(self):
+        src = """
+            import time
+            def round_timer():
+                return time.time()
+        """
+        fs = lint(src, Nondeterminism())
+        assert rule_ids(fs) == ["JX105"]
+
+    def test_fires_on_global_numpy_rng(self):
+        src = """
+            import numpy as np
+            def jitter(n):
+                return np.random.uniform(size=n)
+        """
+        fs = lint(src, Nondeterminism())
+        assert rule_ids(fs) == ["JX105"]
+
+    def test_fires_on_set_iteration(self):
+        src = """
+            def flatten(streams):
+                out = []
+                for s in set(streams):
+                    out.append(s)
+                return out
+        """
+        fs = lint(src, Nondeterminism())
+        assert rule_ids(fs) == ["JX105"]
+
+    def test_silent_on_sorted_set_and_keyed_rng(self):
+        src = """
+            import jax
+            def stream(seed, rnd, names):
+                key = jax.random.fold_in(jax.random.PRNGKey(seed), rnd)
+                return [(n, jax.random.uniform(jax.random.fold_in(key, i)))
+                        for i, n in enumerate(sorted(set(names)))]
+        """
+        assert lint(src, Nondeterminism()) == []
+
+    def test_scoped_to_engine_code(self):
+        src = """
+            import time
+            def stamp():
+                return time.time()
+        """
+        assert lint(src, Nondeterminism(),
+                    path="src/repro/launch/bench.py") == []
+
+
+# ------------------------------------------------------ JX106 donation
+
+
+class TestDonatedBufferReuse:
+    def test_fires_on_read_after_donation(self):
+        src = """
+            import functools, jax
+
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def server_step(params, grads):
+                return params
+
+            def loop(params, grads):
+                new_params = server_step(params, grads)
+                drift = params - new_params
+                return new_params, drift
+        """
+        fs = lint(src, DonatedBufferReuse())
+        assert rule_ids(fs) == ["JX106"]
+        assert "params" in fs[0].message
+
+    def test_silent_when_rebound_by_call(self):
+        src = """
+            import functools, jax
+
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def server_step(params, grads):
+                return params
+
+            def loop(params, grads):
+                params = server_step(params, grads)
+                return params + 1
+        """
+        assert lint(src, DonatedBufferReuse()) == []
+
+    def test_silent_on_non_donated_position(self):
+        src = """
+            import functools, jax
+
+            @functools.partial(jax.jit, donate_argnums=(0,))
+            def server_step(params, grads):
+                return params
+
+            def loop(params, grads):
+                new_params = server_step(params, grads)
+                return new_params, grads.sum()
+        """
+        assert lint(src, DonatedBufferReuse()) == []
+
+
+# --------------------------------------------- engine plumbing + baseline
+
+
+class TestBaseline:
+    FINDING_SRC = textwrap.dedent("""
+        import time
+        def stamp():
+            return time.time()
+    """)
+
+    def _report(self, tmp_path, baseline=None):
+        f = tmp_path / "snippet.py"
+        f.parent.mkdir(parents=True, exist_ok=True)
+        f.write_text(self.FINDING_SRC)
+        return analyze([str(f)], baseline_path=baseline)
+
+    def test_unbaselined_finding_fails(self, tmp_path):
+        sub = tmp_path / "federated"
+        sub.mkdir()
+        (sub / "snippet.py").write_text(self.FINDING_SRC)
+        report = analyze([str(sub)], baseline_path=None)
+        assert report.exit_code == 1
+        assert [f.rule for f in report.new] == ["JX105"]
+
+    def test_baselined_finding_passes(self, tmp_path):
+        sub = tmp_path / "federated"
+        sub.mkdir()
+        (sub / "snippet.py").write_text(self.FINDING_SRC)
+        bl = tmp_path / "baseline.json"
+        bl.write_text(json.dumps({"version": 1, "suppressions": [{
+            "rule": "JX105", "file": "federated/snippet.py",
+            "snippet": "return time.time()",
+            "justification": "bench-only wall clock, not in a trajectory",
+        }]}))
+        report = analyze([str(sub)], baseline_path=str(bl))
+        assert report.exit_code == 0
+        assert len(report.baselined) == 1 and not report.new
+
+    def test_todo_justification_fails(self, tmp_path):
+        sub = tmp_path / "federated"
+        sub.mkdir()
+        (sub / "snippet.py").write_text(self.FINDING_SRC)
+        bl = tmp_path / "baseline.json"
+        findings = analyze([str(sub)], baseline_path=None).findings
+        write_baseline(str(bl), findings, Baseline.load(None))
+        report = analyze([str(sub)], baseline_path=str(bl))
+        assert report.todo_suppressions and report.exit_code == 1
+
+    def test_write_baseline_preserves_justifications(self, tmp_path):
+        sub = tmp_path / "federated"
+        sub.mkdir()
+        (sub / "snippet.py").write_text(self.FINDING_SRC)
+        findings = analyze([str(sub)], baseline_path=None).findings
+        bl = tmp_path / "baseline.json"
+        write_baseline(str(bl), findings, Baseline.load(None))
+        entries = json.loads(bl.read_text())["suppressions"]
+        entries[0]["justification"] = "real reason"
+        bl.write_text(json.dumps({"version": 1, "suppressions": entries}))
+        write_baseline(str(bl), findings, Baseline.load(str(bl)))
+        kept = json.loads(bl.read_text())["suppressions"]
+        assert kept[0]["justification"] == "real reason"
+
+    def test_baseline_survives_line_drift(self, tmp_path):
+        sub = tmp_path / "federated"
+        sub.mkdir()
+        (sub / "snippet.py").write_text(self.FINDING_SRC)
+        bl = tmp_path / "baseline.json"
+        bl.write_text(json.dumps({"version": 1, "suppressions": [{
+            "rule": "JX105", "file": "federated/snippet.py",
+            "snippet": "return time.time()",
+            "justification": "bench-only",
+        }]}))
+        # shift the finding down two lines: snippet-keyed matching holds
+        (sub / "snippet.py").write_text("# pad\n# pad\n" + self.FINDING_SRC)
+        report = analyze([str(sub)], baseline_path=str(bl))
+        assert report.exit_code == 0 and len(report.baselined) == 1
+
+
+class TestCli:
+    def _run(self, *args):
+        return subprocess.run(
+            [sys.executable, "-m", "repro.analysis", *args],
+            capture_output=True, text=True, env={"PYTHONPATH": "src",
+                                                 "PATH": "/usr/bin:/bin"})
+
+    def test_json_schema_stable(self, tmp_path):
+        sub = tmp_path / "federated"
+        sub.mkdir()
+        (sub / "snippet.py").write_text(TestBaseline.FINDING_SRC)
+        r = self._run(str(sub), "--format", "json", "--no-baseline")
+        assert r.returncode == 1, r.stderr
+        doc = json.loads(r.stdout)
+        assert set(doc) == {"version", "tool", "files_scanned", "rules",
+                            "findings", "counts", "unused_suppressions",
+                            "todo_suppressions", "exit_code"}
+        assert doc["version"] == 1 and doc["tool"] == "repro.analysis"
+        assert set(doc["rules"]) == {"JX101", "JX102", "JX103", "JX104",
+                                     "JX105", "JX106"}
+        (finding,) = doc["findings"]
+        assert set(finding) == {"rule", "file", "line", "col", "message",
+                                "snippet", "baselined"}
+        assert finding["rule"] == "JX105" and finding["line"] == 4
+        assert finding["baselined"] is False
+
+    def test_shipped_tree_is_clean(self):
+        r = self._run("src/repro", "--format", "json")
+        assert r.returncode == 0, r.stdout + r.stderr
+        doc = json.loads(r.stdout)
+        assert doc["counts"]["new"] == 0
+        assert doc["todo_suppressions"] == []
+
+    def test_list_rules(self):
+        r = self._run("--list-rules")
+        assert r.returncode == 0
+        for rid in ("JX101", "JX102", "JX103", "JX104", "JX105", "JX106"):
+            assert rid in r.stdout
+
+
+def test_every_rule_has_id_name_summary():
+    ids = [r.id for r in ALL_RULES]
+    assert len(ids) == len(set(ids)) == 6
+    for r in ALL_RULES:
+        assert r.id.startswith("JX") and r.name and r.summary

@@ -1,0 +1,117 @@
+"""Runtime sanitizer harness: the fused training engines under
+``strict_mode()`` (no implicit host<->device transfers — the PR 6
+"zero per-round host transfers" contract, now machine-enforced) and the
+``retrace_guard()`` compile-count contract across a multi-segment
+checkpointed run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.runtime import retrace_guard, setup_transfers, strict_mode
+from repro.core import SelectorConfig
+from repro.federated.server import FLConfig, run_fl_scanned, run_fl_sharded
+from repro.federated.simulation import run_rounds_scanned
+from repro.core.clients import make_population
+from repro.core.selection import SelectorState
+
+
+def _cfg(**kw):
+    # distinctive shapes (n_clients=17) so the lru-cached runners compile
+    # fresh in this test even when the whole suite shares one process
+    base = dict(selector=SelectorConfig(kind="eafl", k=4), n_clients=17,
+                rounds=4, local_steps=1, batch_size=4, samples_per_client=8,
+                eval_samples=32, eval_every=2)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+class TestStrictMode:
+    def test_blocks_implicit_transfer(self):
+        with strict_mode():
+            with pytest.raises(Exception):
+                jnp.zeros((3,)) + 1  # implicit host->device constant
+
+    def test_setup_transfers_window_is_exempt(self):
+        with strict_mode():
+            with setup_transfers():
+                x = jnp.zeros((3,))
+            y = jax.device_put(np.ones((3,)))  # explicit stays legal
+        assert float(jax.device_get((x + y).sum())) == 3.0
+
+    def test_fused_scanned_runs_strict(self):
+        hist = run_fl_scanned(_cfg())
+        with strict_mode(debug_nans=True):
+            strict_hist = run_fl_scanned(_cfg())
+        assert strict_hist.test_acc == hist.test_acc
+        assert strict_hist.train_loss == hist.train_loss
+
+    def test_fused_sharded_runs_strict_one_shard(self):
+        from repro.launch.mesh import make_client_mesh
+        mesh = make_client_mesh(1)
+        with strict_mode(debug_nans=True):
+            hist = run_fl_sharded(_cfg(), mesh=mesh)
+        assert len(hist.test_acc) == 4
+
+    def test_checkpointed_resume_runs_strict(self, tmp_path):
+        ck = str(tmp_path / "strict_{round}.ck")
+        cfg = _cfg(rounds=4, checkpoint_every=2, checkpoint_path=ck)
+        with strict_mode():
+            full = run_fl_scanned(cfg)
+            resumed = run_fl_scanned(_cfg(
+                rounds=4, checkpoint_every=2, checkpoint_path=ck,
+                resume_from=ck.format(round=2)))
+        assert resumed.test_acc == full.test_acc
+        assert resumed.train_loss == full.train_loss
+
+
+class TestRetraceGuard:
+    def test_detects_a_retrace(self):
+        # new function object per call = genuinely traced twice
+        with retrace_guard() as log:
+            for _ in range(2):
+                jax.jit(lambda x: x * 2, donate_argnums=())(
+                    jax.device_put(np.arange(3)))
+        # identical lambda source compiles under the same name; two
+        # distinct function objects force two compiles of one message
+        assert log.retraced() or len(log.records) == 2
+        with pytest.raises(AssertionError):
+            log.assert_no_retrace()
+
+    def test_selection_engine_compiles_once(self):
+        from repro.core import EnergyModel
+        pop = make_population(jax.random.PRNGKey(3), 19)
+        sel = SelectorConfig(kind="eafl", k=5)
+        with retrace_guard(watch=("run",)) as log:
+            for seed in (0, 1):  # same shapes, different data: one compile
+                run_rounds_scanned(jax.random.PRNGKey(seed), sel, pop,
+                                   SelectorState.create(sel), EnergyModel(),
+                                   85e6, 10, 20, rounds=3)
+        log.assert_no_retrace()
+        assert log.compiles_of("run") >= 1
+
+    def test_fused_engine_compiles_once_across_segments(self, tmp_path):
+        # the acceptance contract: a multi-round, multi-segment
+        # (checkpointed) run under strict_mode compiles the fused scan
+        # exactly once — segments reuse the cached executable
+        ck = str(tmp_path / "seg_{round}.ck")
+        cfg = _cfg(n_clients=23, rounds=6, checkpoint_every=2,
+                   checkpoint_path=ck)
+        with strict_mode(), retrace_guard(watch=("run", "evaluate")) as log:
+            run_fl_scanned(cfg)
+        log.assert_compiled_once("run")
+        assert log.compiles_of("run") == 1
+
+    def test_resumed_segment_reuses_compile(self, tmp_path):
+        ck = str(tmp_path / "resume_{round}.ck")
+        cfg = _cfg(n_clients=23, rounds=6, checkpoint_every=2,
+                   checkpoint_path=ck)
+        run_fl_scanned(cfg)  # warm the runner cache + write snapshots
+        with strict_mode(), retrace_guard(watch=("run",)) as log:
+            run_fl_scanned(_cfg(n_clients=23, rounds=6, checkpoint_every=2,
+                                checkpoint_path=ck,
+                                resume_from=ck.format(round=4)))
+        log.assert_no_retrace()
+        # same statics + shapes: the resumed segment hits the cached
+        # executable, so no fused-scan compile happens at all
+        assert log.compiles_of("run") == 0
