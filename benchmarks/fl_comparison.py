@@ -56,7 +56,8 @@ def make_config(kind: str, rounds: int, clients: int, seed: int = 0,
                 fast: bool = False,
                 buffer_size: Optional[int] = None,
                 max_concurrency: Optional[int] = None,
-                staleness_power: float = 0.5) -> FLConfig:
+                staleness_power: float = 0.5,
+                energy_budget_j: Optional[float] = None) -> FLConfig:
     scale = dict(PAPER_SCALE)
     sel = SelectorConfig(kind=kind, k=scale.pop("k"), f=scale.pop("f"),
                          pacer_t0=1500.0, pacer_delta=300.0)
@@ -79,6 +80,7 @@ def make_config(kind: str, rounds: int, clients: int, seed: int = 0,
         buffer_size=buffer_size,
         max_concurrency=max_concurrency,
         staleness_power=staleness_power,
+        energy_budget_j=energy_budget_j,
         **scale,
     )
 
@@ -104,6 +106,7 @@ def time_to_accuracy(h: FLHistory, target: float) -> Optional[float]:
 
 def summarize(results: Dict[str, FLHistory],
               acc_target: Optional[float] = None,
+              energy_budget_j: Optional[float] = None,
               ) -> Dict[str, Dict[str, float]]:
     if acc_target is None:
         # default target: 90% of the best final accuracy across selectors
@@ -121,7 +124,11 @@ def summarize(results: Dict[str, FLHistory],
             "wall_hours": h.wall_hours[-1],
             "acc_target": acc_target,
             "hours_to_target": time_to_accuracy(h, acc_target),
+            "energy_spent_j": h.energy_spent_j[-1],
         }
+        if energy_budget_j is not None:
+            s[kind]["energy_budget_j"] = energy_budget_j
+            s[kind]["budget_exhausted_round"] = h.budget_exhausted_round
     return s
 
 
@@ -186,6 +193,7 @@ def run_training_bench(clients: int, k: int, rounds: int, seed: int,
         results[name] = {
             "rounds": n, "wall_s": dt, "rounds_per_s": n / dt,
             "final_acc": h.test_acc[-1], "sim_wall_hours": h.wall_hours[-1],
+            "energy_spent_j": h.energy_spent_j[-1],
         }
         print(f"{name:8s} {n} rounds in {dt:7.2f}s  "
               f"-> {n / dt:7.3f} rounds/s  acc={h.test_acc[-1]:.3f}")
@@ -263,6 +271,11 @@ def main():
                          "--mode auto opts the run into async)")
     ap.add_argument("--acc-target", type=float, default=None,
                     help="time-to-accuracy target (default: 0.9x best final)")
+    ap.add_argument("--energy-budget-j", type=float, default=None,
+                    help="fleet energy budget in joules: the ledger gate "
+                         "stops admitting cohorts when the remaining "
+                         "budget can't cover the predicted round cost "
+                         "(benchmarks/budget_sweep.py sweeps this)")
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--out", default="experiments/fl_comparison.json")
     ap.add_argument("--bench-out", default=None, metavar="FILE",
@@ -318,14 +331,17 @@ def main():
                                          else args.staleness_power))
     results = run_comparison(args.rounds, args.clients, args.seed,
                              fast=args.fast, verbose=True, mode=mode,
+                             energy_budget_j=args.energy_budget_j,
                              **async_kw)
-    summary = summarize(results, args.acc_target)
+    summary = summarize(results, args.acc_target,
+                        energy_budget_j=args.energy_budget_j)
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:
         json.dump({"mode": mode, "summary": summary,
                    "history": {k: h.as_dict() for k, h in results.items()},
                    "rounds": args.rounds, "clients": args.clients,
-                   "seed": args.seed, **async_kw}, f)
+                   "seed": args.seed,
+                   "energy_budget_j": args.energy_budget_j, **async_kw}, f)
     for kind, s in summary.items():
         print(f"{kind:7s} " + " ".join(
             f"{k}={v:.3f}" if isinstance(v, float) else f"{k}={v}"

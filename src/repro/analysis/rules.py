@@ -228,6 +228,24 @@ class PrngKeyReuse(Rule):
 # --------------------------------------------------------------- JX102
 
 
+#: Optional numeric knobs whose JX102 coverage the test suite pins
+#: (tests/test_analysis.py). These are the run-shaping knobs where the
+#: 0-versus-None distinction has real semantics (deadline_s=0.0 was the
+#: original bug; energy_budget_j=0.0 is "refuse every cohort", not
+#: "unmetered") — a project scan of src/repro must index every one of
+#: them in ``ProjectIndex.optional_numeric_fields``, so a refactor that
+#: drops an Optional annotation cannot silently blind the rule.
+JX102_REQUIRED_KNOBS = frozenset({
+    "deadline_s",
+    "sim_model_bytes",
+    "sim_local_steps",
+    "buffer_size",
+    "max_concurrency",
+    "checkpoint_every",
+    "energy_budget_j",
+})
+
+
 class OptionalKnobTruthiness(Rule):
     id = "JX102"
     name = "optional-knob-truthiness"

@@ -47,6 +47,16 @@ def battery_wh(category: jnp.ndarray) -> jnp.ndarray:
     return CATEGORY_BATTERY_MAH[category] * NOMINAL_VOLTAGE / 1000.0
 
 
+def pct_to_joules(category: jnp.ndarray, pct: jnp.ndarray) -> jnp.ndarray:
+    """Convert a battery-% figure into joules for the given category.
+
+    1% of a full battery is ``battery_wh * 3600 / 100`` J. The fleet-wide
+    energy-budget ledger (``FLConfig.energy_budget_j``) accounts in joules
+    so heterogeneous categories are commensurable.
+    """
+    return pct * battery_wh(category) * 36.0
+
+
 def samples_per_sec(category: jnp.ndarray) -> jnp.ndarray:
     """Training throughput proxy: perf/W x avg power (fps of AI-Benchmark)."""
     return CATEGORY_PERF_PER_W[category] * CATEGORY_POWER_W[category]

@@ -112,10 +112,20 @@ def _rank_bits(key, n: int) -> jnp.ndarray:
     return (jax.random.bits(key, (n,), jnp.uint32) >> 9).astype(jnp.float32)
 
 
+def ucb_bonus(staleness, t, c):
+    """The exploration bonus ``c * sqrt(log(t + 1) / max(staleness, 1))``.
+
+    Shared machinery: the client selector uses it with ``staleness`` =
+    rounds since the client was last picked (:func:`_ucb_bonus`), and the
+    knob controller (:mod:`repro.federated.controller`) with ``staleness``
+    = pull count of the arm — one formula, so the two explorers cannot
+    drift."""
+    t_f = jnp.asarray(t, jnp.float32)
+    return c * jnp.sqrt(jnp.log(t_f + 1.0) / jnp.maximum(staleness, 1))
+
+
 def _ucb_bonus(cfg, pop: ClientPopulation, rnd) -> jnp.ndarray:
-    age = jnp.maximum(rnd - pop.last_round, 1)
-    rnd_f = jnp.asarray(rnd, jnp.float32)
-    return cfg.ucb_c * jnp.sqrt(jnp.log(rnd_f + 1.0) / age)
+    return ucb_bonus(rnd - pop.last_round, rnd, cfg.ucb_c)
 
 
 def _score_inputs(cfg: SelectorConfig, state: SelectorState,

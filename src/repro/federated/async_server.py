@@ -112,6 +112,12 @@ def run_fl_async(cfg: FLConfig, verbose: bool = False) -> FLHistory:
             "fault injection is defined per synchronous round; the async "
             "event engine has no per-round fault boundary — run faults "
             "through run_fl(mode='sync') / the sync round engines")
+    if cfg.controller is not None:
+        raise ValueError(
+            "the adaptive knob controller drives the synchronous host "
+            "loop; the async event engine's knobs (buffer_size, "
+            "max_concurrency) are structural — use run_fl(cfg, "
+            "mode='sync', engine='host')")
     key = jax.random.PRNGKey(cfg.seed)
     kpop, kdata, kmodel, ktest, kloop = jax.random.split(key, 5)
 
@@ -143,7 +149,7 @@ def run_fl_async(cfg: FLConfig, verbose: bool = False) -> FLHistory:
         cfg.selector, energy_model, model_bytes, sim_steps, cfg.batch_size,
         buffer_size=cfg.buffer_size, max_concurrency=cfg.max_concurrency,
         staleness_power=cfg.staleness_power, deadline_s=cfg.deadline_s,
-        up_bytes=up_bytes)
+        up_bytes=up_bytes, energy_budget_j=cfg.energy_budget_j)
     init_fill = jax.jit(init_fill)
     # pop / sel_state / astate are dead after each step (the loop rebinds
     # them), so donate their buffers instead of holding two copies
@@ -276,6 +282,13 @@ def run_fl_async(cfg: FLConfig, verbose: bool = False) -> FLHistory:
         hist.retries.append(0)  # transient faults are sync-engine-only
         hist.quarantined.append(n_quar)
         hist.update_skipped.append(skipped)
+        # cumulative joules from the event-state ledger (charged when a
+        # client's completion flushes; admission was gated against budget
+        # minus in-flight commitments, so this can never exceed the budget)
+        hist.energy_spent_j.append(float(astate.spent_j))
+        if hist.budget_exhausted_round is None \
+                and int(astate.exhausted_round) > 0:
+            hist.budget_exhausted_round = int(astate.exhausted_round)
         _record_test_acc(hist, cfg, agg, params, test_acc_fn)
         if verbose and agg % 10 == 0:
             print(f"[{cfg.selector.kind}/async] agg={agg} "

@@ -1,0 +1,143 @@
+"""Online execution-knob controller for budgeted FL (AutoFL-style).
+
+The fleet budget (``FLConfig.energy_budget_j``) makes execution knobs —
+cohort size ``k``, the aggregation cap ``buffer_size``, staleness damping
+``staleness_power``, and ``compression_sparsity`` — *economic* choices:
+each trades energy per round against accuracy per round. This module
+adapts them online with a UCB bandit over a small set of discrete knob
+configurations ("arms"), rewarding each pull with the observed accuracy
+gain per joule. The exploration bonus is the exact formula the client
+selector already uses (:func:`repro.core.selection.ucb_bonus`), and the
+score mixing mirrors ``_mix_scores``'s affine min-max normalisation, so
+the controller explores the arm space the way the selector explores the
+client space.
+
+The controller is deliberately host-side and tiny (a handful of floats
+per arm): it sits *between* rounds of the host training loop
+(:func:`repro.federated.server.run_fl` with ``cfg.controller`` set),
+where the knobs it turns are plain Python values. The fused device
+engines take no controller — their per-round knobs are compile-time
+statics — and reject one at dispatch.
+
+Verification contract (``tests/test_budget_controller.py``): on
+enumerable populations the controller's (energy, final accuracy) point
+must not be Pareto-dominated by exhaustive grid search over the same
+arms, and a run with the controller disabled must reproduce the plain
+fixed-knob run exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.selection import ucb_bonus
+
+
+@dataclass(frozen=True)
+class Arm:
+    """One knob configuration. ``None`` fields inherit the ``FLConfig``
+    value, so an arm only names the knobs it actually moves."""
+
+    k: Optional[int] = None
+    buffer_size: Optional[int] = None
+    staleness_power: Optional[float] = None
+    compression_sparsity: Optional[float] = None
+
+    def describe(self) -> str:
+        set_ = {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)
+                if getattr(self, f.name) is not None}
+        return ",".join(f"{k}={v}" for k, v in set_.items()) or "inherit"
+
+
+@dataclass(frozen=True)
+class ControllerConfig:
+    """Knobs of the between-rounds UCB controller.
+
+    ``arms`` is the discrete configuration set (tuple, so the config stays
+    hashable); ``ucb_c`` scales the exploration bonus exactly like
+    ``SelectorConfig.ucb_c`` scales client exploration; ``reward_floor_j``
+    floors the joule denominator of the accuracy-per-energy reward so a
+    refused (zero-energy) round cannot produce an infinite reward."""
+
+    arms: Tuple[Arm, ...]
+    ucb_c: float = 0.5
+    reward_floor_j: float = 1.0
+
+    def __post_init__(self):
+        if len(self.arms) < 1:
+            raise ValueError("controller needs at least one arm")
+        if self.reward_floor_j <= 0.0:
+            raise ValueError("reward_floor_j must be > 0 (it floors a "
+                             "denominator)")
+
+
+class UCBController:
+    """Deterministic UCB-style bandit over discrete knob arms.
+
+    Pull order is fully deterministic (no RNG): untried arms are pulled
+    first in index order, then the arm maximising
+    ``normalized_mean_reward * (1 + ucb_bonus(count, t, c))`` with ties
+    broken by lowest index — the ``score * (1 + bonus)`` mixing and the
+    affine min-max normalisation are the selector's ``_mix_scores`` idiom
+    applied to the (tiny, host-side) arm table.
+    """
+
+    def __init__(self, cfg: ControllerConfig):
+        self.cfg = cfg
+        n = len(cfg.arms)
+        self.counts = np.zeros(n, dtype=np.int64)
+        self.reward_sums = np.zeros(n, dtype=np.float64)
+
+    @property
+    def n_arms(self) -> int:
+        return len(self.cfg.arms)
+
+    def choose(self, t: int) -> int:
+        """Pick the arm for pull number ``t`` (1-based round counter)."""
+        untried = np.flatnonzero(self.counts == 0)
+        if untried.size:
+            return int(untried[0])
+        means = self.reward_sums / self.counts
+        lo, hi = float(means.min()), float(means.max())
+        span = hi - lo
+        norm = (means - lo) / span if span > 0.0 else np.ones_like(means)
+        bonus = np.asarray(
+            ucb_bonus(self.counts.astype(np.float64), t, self.cfg.ucb_c),
+            dtype=np.float64)
+        score = norm * (1.0 + bonus)
+        # argmax breaks ties lowest-index-first — deterministic
+        return int(np.argmax(score))
+
+    def update(self, arm: int, acc_delta: float, energy_j: float) -> float:
+        """Credit the pulled arm with accuracy gain per joule. Returns the
+        reward actually recorded."""
+        reward = float(acc_delta) / max(float(energy_j),
+                                        self.cfg.reward_floor_j)
+        self.counts[arm] += 1
+        self.reward_sums[arm] += reward
+        return reward
+
+    # --- checkpoint plumbing (the host loop snapshots this with its
+    # python-side history, so budget+controller runs restart-parity too)
+    def state_dict(self) -> Dict[str, List[float]]:
+        return {"counts": [int(c) for c in self.counts],
+                "reward_sums": [float(s) for s in self.reward_sums]}
+
+    def load_state(self, state: Dict[str, List[float]]) -> None:
+        counts = np.asarray(state["counts"], dtype=np.int64)
+        sums = np.asarray(state["reward_sums"], dtype=np.float64)
+        if counts.shape != self.counts.shape:
+            raise ValueError(
+                f"controller snapshot has {counts.shape[0]} arms, "
+                f"config has {self.n_arms}")
+        self.counts, self.reward_sums = counts, sums
+
+
+def arm_knobs(cfg_value, arm_value):
+    """Resolve one knob: the arm's setting, or the config's when the arm
+    inherits (``is not None`` — 0/0.0 are real settings, not 'inherit')."""
+    return cfg_value if arm_value is None else arm_value

@@ -55,12 +55,20 @@ from repro.federated.faults import (
     fault_streams,
     faults_for_round,
 )
+from repro.federated.controller import (
+    ControllerConfig,
+    UCBController,
+    arm_knobs,
+)
 from repro.federated.simulation import (
     ENGINES,
     TRAIN_ENGINES,
+    BudgetLedger,
     _concat_traj,
     _make_checkpointer,
     _shard_round_step,
+    budget_gate,
+    cohort_energy_j,
     resolve_aggregation,
     resolve_train_engine,
     round_cost_table,
@@ -148,6 +156,24 @@ class FLConfig:
     checkpoint_path: Optional[str] = None
     checkpoint_every: Optional[int] = None
     resume_from: Optional[str] = None
+    # --- fleet-level energy budget + adaptive knob controller ------------
+    # energy_budget_j: fleet-wide joules budget enforced across rounds in
+    # EVERY engine (host/scanned/sharded/async). A device-resident
+    # cumulative ledger (simulation.BudgetLedger) rides the engine carry —
+    # like the RNG chain, so checkpoint/resume restart parity comes free —
+    # and a round's cohort is admitted all-or-nothing only when its
+    # predicted joules (simulation.cohort_energy_j over the fault-modified
+    # cost, so retry surcharges count) still fit. A refused round is inert
+    # but the run continues: a later, cheaper cohort may still fit. None =
+    # unmetered; accounting always runs and FLHistory.energy_spent_j is
+    # always stamped.
+    # controller: between-rounds UCB bandit over discrete knob arms
+    # (repro.federated.controller) adapting k / buffer_size /
+    # staleness_power / compression_sparsity from observed
+    # accuracy-per-joule. Host engine only — the fused engines' knobs are
+    # compile-time statics.
+    energy_budget_j: Optional[float] = None
+    controller: Optional[ControllerConfig] = None
 
 
 def replace_selector_k(sel: SelectorConfig, k: int) -> SelectorConfig:
@@ -257,6 +283,16 @@ class FLHistory:
     retries: List[int] = field(default_factory=list)
     quarantined: List[int] = field(default_factory=list)
     update_skipped: List[int] = field(default_factory=list)
+    # --- fleet energy-budget accounting (cfg.energy_budget_j) ------------
+    # energy_spent_j: CUMULATIVE joules debited through each round (the
+    # engine ledger's f32 chain, so host/scanned values are bitwise equal);
+    # budget_exhausted_round: first round the budget gate refused a cohort
+    # (None = the budget was never hit);
+    # controller_arm: the knob arm pulled each round (cfg.controller runs
+    # only — empty otherwise)
+    energy_spent_j: List[float] = field(default_factory=list)
+    controller_arm: List[int] = field(default_factory=list)
+    budget_exhausted_round: Optional[int] = None
     # accuracy of the untrained model, evaluated before round 1 — the pad
     # value for pre-first-eval rounds (never a fake 0.0)
     init_acc: float = float("nan")
@@ -341,6 +377,8 @@ def _train_meta(cfg: FLConfig, family: str) -> Dict[str, Any]:
         "server_opt": cfg.server_opt,
         "faults": (None if cfg.faults is None
                    else dataclasses.asdict(cfg.faults)),
+        "energy_budget_j": (None if cfg.energy_budget_j is None
+                            else float(cfg.energy_budget_j)),
     }
 
 
@@ -381,6 +419,14 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
     mode = resolve_aggregation(mode, cfg.buffer_size, cfg.max_concurrency)
     engine = resolve_train_engine(
         cfg.n_clients, jax.device_count(), mode=mode, engine=engine)
+    if cfg.controller is not None and (mode == "async" or engine != "host"):
+        # the controller turns knobs that are compile-time statics in the
+        # fused engines and structural in the async event loop — it drives
+        # the synchronous host loop only
+        raise ValueError(
+            f"cfg.controller runs only in the synchronous host loop "
+            f"(resolved mode={mode!r}, engine={engine!r}); use "
+            f"run_fl(cfg, mode='sync', engine='host')")
     if mode == "async":
         from repro.federated.async_server import run_fl_async
         return run_fl_async(cfg, verbose=verbose)
@@ -426,6 +472,26 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
                                           sim_steps, cfg.batch_size, up_bytes)
     del t_total  # the host simulate_round recomputes its own copy
 
+    ctrl = None if cfg.controller is None else UCBController(cfg.controller)
+    # per-sparsity (wire bytes, predicted cost, train fn) tables for arms
+    # that move compression_sparsity — the cost column depends only on
+    # immutable population fields, so each distinct sparsity is built once
+    _arm_tables: Dict[float, tuple] = {}
+
+    def arm_tables(sparsity: float):
+        if sparsity not in _arm_tables:
+            from repro.compression import wire_bytes
+            ub = wire_bytes(model_bytes, cfg.compression,
+                            **({"sparsity": sparsity}
+                               if cfg.compression == "topk" else {}))
+            _, pc = round_cost_table(pop, energy_model, model_bytes,
+                                     sim_steps, cfg.batch_size, ub)
+            tf = _local_train_fn(cfg.model, cfg.local_steps, cfg.batch_size,
+                                 cfg.client_lr, cfg.fedprox_mu,
+                                 cfg.compression, sparsity)
+            _arm_tables[sparsity] = (ub, pc, tf)
+        return _arm_tables[sparsity]
+
     @functools.partial(jax.jit, donate_argnums=(0, 2))
     def server_step(p, agg, o_state):
         # donating params/opt_state means the loop never holds two copies
@@ -448,6 +514,12 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
         wall = float(saved["wall"])
         cum_drop = int(saved["cum_drop"])
         last_loss = float(saved["last_loss"])
+        # the ledger's f32 chain round-trips exactly through the float
+        # history entry, so the resumed gate decisions match bitwise
+        spent = hist.energy_spent_j[-1] if hist.energy_spent_j else 0.0
+        probe_acc = float(saved.get("probe_acc", hist.init_acc))
+        if ctrl is not None and "ctrl" in saved:
+            ctrl.load_state(saved["ctrl"])
     else:
         hist = FLHistory()
         # evaluate the untrained model once so pre-first-eval rounds report
@@ -456,6 +528,8 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
         wall = 0.0
         cum_drop = 0
         last_loss = float("nan")
+        spent = 0.0
+        probe_acc = hist.init_acc
 
     for rnd in range(start + 1, cfg.rounds + 1):
         # krecharge is a dedicated per-round key: the recharge draw must
@@ -463,23 +537,47 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
         # (prefix-stable threefry keeps kloop/ksel/ktrain identical to the
         # historical 3-way split, so only recharge draws moved)
         kloop, ksel, ktrain, krecharge = jax.random.split(kloop, 4)
-        n_pick = int(np.ceil(cfg.selector.k * cfg.overcommit))
+        arm = arm_i = None
+        arm_k = cfg.selector.k
+        rnd_up_bytes, rnd_pred_cost, rnd_train = (up_bytes, pred_cost,
+                                                  local_train)
+        if ctrl is not None:
+            # the bandit pulls an arm BEFORE the round, so every knob it
+            # moves (k / sparsity here, buffer/staleness below) shapes this
+            # round's selection, energy, and aggregation; an all-inherit
+            # arm leaves every value identical to the controller-free run
+            arm_i = ctrl.choose(rnd)
+            arm = cfg.controller.arms[arm_i]
+            arm_k = int(arm_knobs(cfg.selector.k, arm.k))
+            if arm.compression_sparsity is not None:
+                rnd_up_bytes, rnd_pred_cost, rnd_train = arm_tables(
+                    float(arm.compression_sparsity))
+        n_pick = int(np.ceil(arm_k * cfg.overcommit))
         sel_cfg = cfg.selector if n_pick == cfg.selector.k else \
             replace_selector_k(cfg.selector, n_pick)
-        selected, sel_state = select(ksel, sel_cfg, sel_state, pop, pred_cost)
+        selected, sel_state = select(ksel, sel_cfg, sel_state, pop,
+                                     rnd_pred_cost)
         if len(selected) == 0:
             break
+        spent_before = spent
         pop, outcome = simulate_round(
             pop, selected, energy_model, model_bytes,
-            sim_steps, cfg.batch_size, rnd, cfg.deadline_s, up_bytes,
-            faults=cfg.faults)
+            sim_steps, cfg.batch_size, rnd, cfg.deadline_s, rnd_up_bytes,
+            faults=cfg.faults, energy_budget_j=cfg.energy_budget_j,
+            spent_j=spent)
+        spent = outcome.spent_after_j
+        if not outcome.admitted and hist.budget_exhausted_round is None:
+            hist.budget_exhausted_round = rnd
         cum_drop += outcome.new_dropouts
-        if cfg.overcommit > 1.0:
-            # keep only the fastest K successful clients (stragglers beyond
-            # K are abandoned — they still paid the energy); the outcome is
-            # replaced, not mutated: the pre-cap `succeeded` already fed the
-            # dropout accounting above
-            outcome = cap_stragglers(outcome, cfg.selector.k)
+        agg_cap = (arm_k if arm is None or arm.buffer_size is None
+                   else min(arm_k, int(arm.buffer_size)))
+        if cfg.overcommit > 1.0 or agg_cap < n_pick:
+            # keep only the fastest agg_cap successful clients (stragglers
+            # beyond the cap are abandoned — they still paid the energy);
+            # the outcome is replaced, not mutated: the pre-cap `succeeded`
+            # already fed the dropout accounting above. agg_cap shrinks
+            # below k only when a controller arm sets buffer_size.
+            outcome = cap_stragglers(outcome, agg_cap)
 
         pop = _recharge_step(cfg, pop, krecharge, outcome.round_duration)
 
@@ -490,7 +588,7 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
             xs = data["x"][succ]
             ys = data["y"][succ]
             keys = jax.random.split(ktrain, len(succ))
-            deltas, per_sample, mean_losses = local_train(params, xs, ys, keys)
+            deltas, per_sample, mean_losses = rnd_train(params, xs, ys, keys)
             if cfg.faults is not None and cfg.faults.active:
                 # corrupted-upload fault: the client trained and paid the
                 # energy, but the delta that arrives is garbage
@@ -506,6 +604,18 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
             finite = finite_rows(deltas)
             weights = np.asarray(pop.n_samples)[succ].astype(np.float32)
             w = jnp.where(finite, jnp.asarray(weights), 0.0)
+            if (arm is not None and arm.staleness_power is not None
+                    and arm.staleness_power > 0.0):
+                # FedBuff-style damping on the sync cohort: later arrivals
+                # (arrival rank by round duration) count less —
+                # weighted_delta renormalizes, so only relative damping
+                # matters
+                dur = np.asarray(outcome.durations)[outcome.succeeded]
+                rank = np.argsort(np.argsort(dur, kind="stable"),
+                                  kind="stable")
+                w = w * jnp.asarray(
+                    (1.0 + rank.astype(np.float32))
+                    ** np.float32(-arm.staleness_power))
             agg = weighted_delta(zero_nonfinite_rows(deltas, finite), w)
             n_quar = int(jnp.sum(~finite))
             if bool(finite.any()) and bool(tree_finite(agg)):
@@ -530,6 +640,14 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
         hist.retries.append(int(outcome.retries))
         hist.quarantined.append(n_quar)
         hist.update_skipped.append(skipped)
+        hist.energy_spent_j.append(spent)
+        if ctrl is not None:
+            hist.controller_arm.append(arm_i)
+            # reward probe: a pure extra eval (consumes no RNG), so the
+            # controller's bookkeeping cannot perturb the trajectory
+            acc_now = float(test_acc_fn(params))
+            ctrl.update(arm_i, acc_now - probe_acc, spent - spent_before)
+            probe_acc = acc_now
         _record_test_acc(hist, cfg, rnd, params, test_acc_fn)
         if verbose and rnd % 10 == 0:
             print(f"[{cfg.selector.kind}] r={rnd} acc={hist.test_acc[-1]:.3f} "
@@ -538,11 +656,15 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
         if ck and ck.due(rnd):
             # kloop here is the carry that seeds round rnd+1, so a resumed
             # run re-enters the identical RNG chain
+            ck_data = {"hist": hist.as_dict(), "wall": wall,
+                       "cum_drop": cum_drop, "last_loss": last_loss}
+            if ctrl is not None:
+                ck_data["ctrl"] = ctrl.state_dict()
+                ck_data["probe_acc"] = probe_acc
             ck.save(rnd,
                     {"params": params, "opt_state": opt_state, "pop": pop,
                      "st": sel_state, "kloop": kloop},
-                    {"hist": hist.as_dict(), "wall": wall,
-                     "cum_drop": cum_drop, "last_loss": last_loss})
+                    ck_data)
     return hist
 
 
@@ -591,6 +713,7 @@ def _fused_runner(model_cfg: ResNetConfig, sel_cfg: SelectorConfig,
                   server_opt: str, server_lr: float,
                   recharge_pct_per_hour: float, plugged_frac: float,
                   rejoin_pct: float, faults: Optional[FaultConfig],
+                  energy_budget_j: Optional[float],
                   use_pallas: bool, interpret: bool):
     """Cached jitted fused training scan (hashable statics only, mirroring
     ``simulation._scanned_runner``). ``sel_cfg.k`` is the over-provisioned
@@ -598,8 +721,8 @@ def _fused_runner(model_cfg: ResNetConfig, sel_cfg: SelectorConfig,
     (the pre-overcommit k).
 
     Returns ``(run, evaluate)``. ``run(do_eval, carry, ...)`` advances the
-    full training carry ``(params, opt_state, pop, st, kloop, last_acc)``
-    by ``len(do_eval)`` rounds — segment-callable: because the RNG chain
+    full training carry ``(params, opt_state, pop, st, kloop, last_acc,
+    ledger)`` by ``len(do_eval)`` rounds — segment-callable: because the RNG chain
     lives in the carry, two chained segments are bitwise-identical to one
     long scan, which is what makes checkpoint/resume restart-parity exact.
     ``do_eval`` carries the absolute-round eval schedule (computed by the
@@ -624,7 +747,7 @@ def _fused_runner(model_cfg: ResNetConfig, sel_cfg: SelectorConfig,
             return (jnp.argmax(logits, -1) == test_y).mean()
 
         def scan_step(carry, do_eval):
-            params, opt_state, pop, st, kloop, last_acc = carry
+            params, opt_state, pop, st, kloop, last_acc, ledger = carry
             kloop, ksel, ktrain, krecharge = jax.random.split(kloop, 4)
             idx, chosen, st = _device_select(ksel, sel_cfg, st, pop, cost,
                                              use_pallas, interpret)
@@ -635,9 +758,17 @@ def _fused_runner(model_cfg: ResNetConfig, sel_cfg: SelectorConfig,
                                                      t_total, cost)
             sel_mask = jnp.zeros((n,), bool).at[
                 jnp.where(chosen, idx, n)].set(True, mode="drop")
+            # budget gate on the fault-modified cost (retry surcharges
+            # count), BEFORE simulation: a refused round zeroes the cohort
+            # mask, so the whole round body below runs inert
+            round_j = cohort_energy_j(pop, sel_mask, cost_eff)
+            sel_mask, _admit, ledger = budget_gate(
+                sel_mask, round_j, ledger, energy_budget_j, st.round)
             pop, dev = simulate_round_device(
                 pop, sel_mask, t_eff, cost_eff, st.round, energy_model,
                 deadline_s, fail_mask=None if draw is None else draw.fail)
+            ledger = ledger._replace(
+                spent_j=ledger.spent_j + dev.energy_spent_j)
             n_slots = idx.shape[0]
             slot_succ = dev.succeeded[idx] & chosen
             if n_slots > agg_k:
@@ -713,8 +844,14 @@ def _fused_runner(model_cfg: ResNetConfig, sel_cfg: SelectorConfig,
                 "retries": retries,
                 "quarantined": jnp.sum(mask & ~finite).astype(jnp.int32),
                 "update_skipped": (~ok).astype(jnp.int32),
+                # cumulative f32 ledger value — emitting the chain itself
+                # (not per-round deltas summed host-side) keeps the
+                # history bitwise equal to the host loop's spent_after_j
+                "energy_spent_j": ledger.spent_j,
+                "budget_exhausted": ledger.exhausted_round,
             }
-            return (params, opt_state, pop, st, kloop, last_acc), out
+            return (params, opt_state, pop, st, kloop, last_acc,
+                    ledger), out
 
         return jax.lax.scan(scan_step, carry, do_eval)
 
@@ -758,7 +895,9 @@ def _fused_statics(cfg: FLConfig) -> tuple:
             cfg.compression, float(cfg.compression_sparsity),
             cfg.server_opt, float(cfg.server_lr),
             float(cfg.recharge_pct_per_hour), float(cfg.plugged_frac),
-            float(cfg.rejoin_pct), cfg.faults)
+            float(cfg.rejoin_pct), cfg.faults,
+            None if cfg.energy_budget_j is None
+            else float(cfg.energy_budget_j))
 
 
 def _reject_async_knobs(cfg: FLConfig, name: str) -> None:
@@ -767,6 +906,11 @@ def _reject_async_knobs(cfg: FLConfig, name: str) -> None:
             f"{name} is a synchronous engine; cfg.buffer_size / "
             f"cfg.max_concurrency opt into the async server — use "
             f"run_fl(cfg) and let the dispatcher route it")
+    if cfg.controller is not None:
+        raise ValueError(
+            f"{name} compiles its knobs as statics; the adaptive "
+            f"controller (cfg.controller) runs only in the host loop — "
+            f"use run_fl(cfg, engine='host')")
 
 
 def _history_from_traj(cfg: FLConfig, init_acc: float, traj) -> FLHistory:
@@ -810,6 +954,14 @@ def _history_from_traj(cfg: FLConfig, init_acc: float, traj) -> FLHistory:
     for name in ("retries", "quarantined", "update_skipped"):
         if name in traj:
             setattr(hist, name, [int(x) for x in np.asarray(traj[name])])
+    if "energy_spent_j" in traj:
+        # the per-round values ARE the cumulative f32 ledger chain (the
+        # f32->f64 float() round-trip is exact, so host parity is bitwise)
+        hist.energy_spent_j = [float(x) for x in
+                               np.asarray(traj["energy_spent_j"])]
+    if "budget_exhausted" in traj:
+        last = int(np.asarray(traj["budget_exhausted"])[-1])
+        hist.budget_exhausted_round = last if last > 0 else None
     return hist
 
 
@@ -823,7 +975,8 @@ def _print_fused_history(cfg: FLConfig, hist: FLHistory) -> None:
               f"fair={hist.fairness[i]:.3f} wall={hist.wall_hours[i]:.2f}h")
 
 
-_TRAIN_CARRY = ("params", "opt_state", "pop", "st", "kloop", "last_acc")
+_TRAIN_CARRY = ("params", "opt_state", "pop", "st", "kloop", "last_acc",
+                "ledger")
 
 
 def _fused_do_eval(cfg: FLConfig, a: int, b: int) -> jnp.ndarray:
@@ -839,7 +992,7 @@ def _fused_do_eval(cfg: FLConfig, a: int, b: int) -> jnp.ndarray:
 def _run_fused_elastic(cfg: FLConfig, run, carry0, run_args,
                        resume_templates, save_state) -> FLHistory:
     """Shared segment/checkpoint/resume driver for the two fused training
-    engines. ``carry0`` is the fresh 6-tuple carry; ``run_args`` the
+    engines. ``carry0`` is the fresh 7-tuple carry; ``run_args`` the
     engine's per-call data tail; ``resume_templates(state)`` maps loaded
     checkpoint state back onto an engine carry; ``save_state(carry)``
     maps a live carry to the (engine-portable) checkpoint state dict."""
@@ -859,7 +1012,8 @@ def _run_fused_elastic(cfg: FLConfig, run, carry0, run_args,
     else:
         start = 0
         carry = carry0
-        init_acc = float(jax.device_get(carry0[-1]))
+        init_acc = float(jax.device_get(
+            carry0[_TRAIN_CARRY.index("last_acc")]))
     for a, b in segment_bounds(start, cfg.rounds, ck.every if ck else None):
         carry, traj = run(_fused_do_eval(cfg, a, b), carry, *run_args)
         parts.append(jax.device_get(traj))
@@ -892,7 +1046,8 @@ def run_fl_scanned(cfg: FLConfig, verbose: bool = False) -> FLHistory:
                                       jax.default_backend() != "tpu")
         st = SelectorState.create(cfg.selector).canonical()
         acc0 = evaluate(params, test["x"], test["y"])
-        carry0 = (params, opt_state, pop, st, kloop, acc0)
+        carry0 = (params, opt_state, pop, st, kloop, acc0,
+                  BudgetLedger.create())
     hist = _run_fused_elastic(
         cfg, run, carry0,
         (data["x"], data["y"], test["x"], test["y"], t_total, cost),
@@ -935,6 +1090,7 @@ def _sharded_fused_runner(model_cfg: ResNetConfig, sel_cfg: SelectorConfig,
                           server_opt: str, server_lr: float,
                           recharge_pct_per_hour: float, plugged_frac: float,
                           rejoin_pct: float, faults: Optional[FaultConfig],
+                          energy_budget_j: Optional[float],
                           use_pallas: bool,
                           interpret: bool, mesh, n_real: int,
                           axis_name: str):
@@ -962,19 +1118,23 @@ def _sharded_fused_runner(model_cfg: ResNetConfig, sel_cfg: SelectorConfig,
         return jnp.concatenate(
             [a, jnp.full((pad_s,) + a.shape[1:], fill, a.dtype)])
 
-    def body(ksel, ktrain, st, params, pop, x_loc, y_loc, t_total, cost,
-             bits, u_rech, *fstreams):
+    def body(ksel, ktrain, st, params, pop, ledger, x_loc, y_loc, t_total,
+             cost, bits, u_rech, *fstreams):
         n_loc = cost.shape[0]
         shard_i = jax.lax.axis_index(axis_name)
         base = (shard_i * n_loc).astype(jnp.int32)
         streams = fstreams[0] if faulty else None
-        pop, st, idx, chosen, slot_succ, dev, retries, corrupt_sel = \
-            _shard_round_step(
-                ksel, st, pop, t_total, cost, bits, sel_cfg=sel_cfg,
-                energy_model=energy_model, deadline_s=deadline_s,
-                use_pallas=use_pallas, interpret=interpret,
-                axis_name=axis_name, n_real=n_real,
-                faults=faults if faulty else None, streams=streams)
+        # the ledger always rides along (accounting runs unmetered too);
+        # the gate inside _shard_round_step psums the predicted cohort
+        # joules, so admit/refuse is a replicated decision across shards
+        (pop, st, idx, chosen, slot_succ, dev, retries, corrupt_sel,
+         _admit, ledger) = _shard_round_step(
+            ksel, st, pop, t_total, cost, bits, sel_cfg=sel_cfg,
+            energy_model=energy_model, deadline_s=deadline_s,
+            use_pallas=use_pallas, interpret=interpret,
+            axis_name=axis_name, n_real=n_real,
+            faults=faults if faulty else None, streams=streams,
+            energy_budget_j=energy_budget_j, ledger=ledger)
         if n_slots > agg_k:
             if faulty:
                 # the straggler cap ranks on the fault-modified durations
@@ -1082,14 +1242,16 @@ def _sharded_fused_runner(model_cfg: ResNetConfig, sel_cfg: SelectorConfig,
             # masked per-slot losses; train_loss is reduced host-side over
             # the compacted slots (see _fused_runner / _history_from_traj)
             "slot_losses": jnp.where(mask, losses[:n_slots], 0.0),
+            "energy_spent_j": ledger.spent_j,
+            "budget_exhausted": ledger.exhausted_round,
         }
-        return pop, st, agg, stats
+        return pop, st, agg, stats, ledger
 
     smapped = shard_map(
         body, mesh=mesh,
-        in_specs=(rep, rep, rep, rep, spec, spec, spec, spec, spec, spec,
-                  spec) + ((spec,) if faulty else ()),
-        out_specs=(spec, rep, rep, rep), check_rep=False)
+        in_specs=(rep, rep, rep, rep, spec, rep, spec, spec, spec, spec,
+                  spec, spec) + ((spec,) if faulty else ()),
+        out_specs=(spec, rep, rep, rep, rep), check_rep=False)
 
     @jax.jit
     def evaluate(params, test_x, test_y):
@@ -1105,7 +1267,7 @@ def _sharded_fused_runner(model_cfg: ResNetConfig, sel_cfg: SelectorConfig,
         shard = NamedSharding(mesh, spec)
 
         def scan_step(carry, do_eval):
-            params, opt_state, pop, st, kloop, last_acc = carry
+            params, opt_state, pop, st, kloop, last_acc, ledger = carry
             kloop, ksel, ktrain, krecharge = jax.random.split(kloop, 4)
             # prefix-stable sharded streams: rank bits for selection, a
             # uniform stream for the recharge bernoulli (u < p)
@@ -1122,9 +1284,9 @@ def _sharded_fused_runner(model_cfg: ResNetConfig, sel_cfg: SelectorConfig,
                 fargs = (jax.lax.with_sharding_constraint(
                     jnp.stack(fault_streams(faults, st.round + 1, n_padded),
                               axis=-1), shard),)
-            pop, st, agg, stats = smapped(ksel, ktrain, st, params, pop,
-                                          data_x, data_y, t_total, cost,
-                                          bits, u_rech, *fargs)
+            pop, st, agg, stats, ledger = smapped(
+                ksel, ktrain, st, params, pop, ledger, data_x, data_y,
+                t_total, cost, bits, u_rech, *fargs)
             new_params, new_opt = server_update(params, agg, opt, opt_state)
             # last-resort aggregate gate, like the single-device engine
             ok = stats.pop("any_good") & tree_finite(agg)
@@ -1136,7 +1298,8 @@ def _sharded_fused_runner(model_cfg: ResNetConfig, sel_cfg: SelectorConfig,
                                     lambda _: last_acc, params)
             out = dict(stats, test_acc=last_acc,
                        update_skipped=(~ok).astype(jnp.int32))
-            return (params, opt_state, pop, st, kloop, last_acc), out
+            return (params, opt_state, pop, st, kloop, last_acc,
+                    ledger), out
 
         return jax.lax.scan(scan_step, carry, do_eval)
 
@@ -1182,7 +1345,8 @@ def run_fl_sharded(cfg: FLConfig, verbose: bool = False, mesh=None,
             jax.default_backend() != "tpu", mesh, n_real, axis_name)
         st = SelectorState.create(cfg.selector).canonical()
         acc0 = evaluate(params, test["x"], test["y"])
-        carry0 = (params, opt_state, pop, st, kloop, acc0)
+        carry0 = (params, opt_state, pop, st, kloop, acc0,
+                  BudgetLedger.create())
 
     # the checkpoint stores the population TRIMMED to the real clients (the
     # pad tail is provably inert: dead, never selected, never recharged),
@@ -1192,7 +1356,7 @@ def run_fl_sharded(cfg: FLConfig, verbose: bool = False, mesh=None,
         rpop = jax.device_put(
             pad_population(state["pop"], mesh.shape[axis_name]), sharding)
         return (state["params"], state["opt_state"], rpop, state["st"],
-                state["kloop"], state["last_acc"])
+                state["kloop"], state["last_acc"], state["ledger"])
 
     def _save_state(carry):
         s = dict(zip(_TRAIN_CARRY, carry))

@@ -31,7 +31,7 @@ import numpy as np
 from repro.checkpoint import (CarryCheckpointer, load_engine_checkpoint,
                               segment_bounds)
 from repro.core.clients import ClientPopulation, pad_population, round_times
-from repro.core.energy import EnergyModel
+from repro.core.energy import EnergyModel, pct_to_joules
 from repro.core.selection import (
     SelectorConfig,
     SelectorState,
@@ -56,6 +56,9 @@ class RoundOutcome:
     energy_spent_pct: float       # total battery % spent by participants
     retries: int = 0              # upload re-attempts across the cohort
     corrupt: Optional[np.ndarray] = None  # (K,) bool — delta is poisoned
+    energy_spent_j: float = 0.0   # joules debited by this round's cohort
+    admitted: bool = True         # False when the budget gate refused the round
+    spent_after_j: float = 0.0    # cumulative fleet joules after this round
 
 
 class DeviceRoundOutcome(NamedTuple):
@@ -68,6 +71,64 @@ class DeviceRoundOutcome(NamedTuple):
     round_duration: jnp.ndarray   # f32 scalar, wall seconds
     new_dropouts: jnp.ndarray     # i32 scalar
     energy_spent_pct: jnp.ndarray  # f32 scalar
+    energy_spent_j: jnp.ndarray   # f32 scalar, cohort joules this round
+
+
+class BudgetLedger(NamedTuple):
+    """Fleet-wide cumulative-energy ledger riding in the engine carry.
+
+    ``spent_j`` accumulates the joules every admitted cohort debits (the
+    same f32 chain on every engine, so host/scanned stay bitwise equal);
+    ``exhausted_round`` records the first 1-based round the budget gate
+    refused a cohort (0 = never). Checkpoint/resume parity follows from
+    the ledger living in the carry, exactly like the PR 7 RNG chain.
+    """
+
+    spent_j: jnp.ndarray          # f32 scalar, cumulative joules debited
+    exhausted_round: jnp.ndarray  # i32 scalar, first refused round (0=never)
+
+    @classmethod
+    def create(cls) -> "BudgetLedger":
+        return cls(spent_j=jnp.float32(0.0),
+                   exhausted_round=jnp.int32(0))
+
+
+def cohort_energy_j(pop: ClientPopulation, sel_mask: jnp.ndarray,
+                    cost_pct: jnp.ndarray,
+                    axis_name: Optional[str] = None) -> jnp.ndarray:
+    """Joules the masked cohort would debit at ``cost_pct`` battery-%.
+
+    This is the single expression shared by the budget gate's prediction
+    and :func:`simulate_round_device`'s debit — using one computation for
+    both is what makes "spent never exceeds budget" exact rather than
+    approximate."""
+    return _asum(jnp.where(sel_mask, pct_to_joules(pop.category, cost_pct),
+                           0.0), axis_name)
+
+
+def budget_gate(sel_mask: jnp.ndarray, round_j: jnp.ndarray,
+                ledger: BudgetLedger, energy_budget_j: Optional[float],
+                rnd, axis_name: Optional[str] = None,
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, BudgetLedger]:
+    """All-or-nothing cohort admission against the remaining budget.
+
+    Returns ``(sel_mask', admit, ledger')`` where ``sel_mask'`` is zeroed
+    when the predicted cohort debit ``round_j`` does not fit, and
+    ``ledger'`` stamps ``exhausted_round`` on the first refusal. A refused
+    round is inert (no battery movement, no stat updates) but the run
+    continues: a later, cheaper cohort may still fit — the paper's fleet
+    keeps training as long as any admissible cohort remains. When
+    ``energy_budget_j`` is None the gate is the identity.
+    """
+    if energy_budget_j is None:
+        return sel_mask, jnp.bool_(True), ledger
+    admit = ledger.spent_j + round_j <= jnp.float32(energy_budget_j)
+    refused = _aany(sel_mask, axis_name) & ~admit
+    exhausted = jnp.where((ledger.exhausted_round == 0) & refused,
+                          jnp.asarray(rnd, jnp.int32),
+                          ledger.exhausted_round)
+    return (sel_mask & admit, admit,
+            ledger._replace(exhausted_round=exhausted))
 
 
 def _round_cost(pop: ClientPopulation, energy_model: EnergyModel,
@@ -185,22 +246,31 @@ def simulate_round_device(pop: ClientPopulation, sel_mask: jnp.ndarray,
         round_duration=duration.astype(jnp.float32),
         new_dropouts=new_dropouts,
         energy_spent_pct=_asum(jnp.where(sel_mask, cost, 0.0), axis_name),
+        energy_spent_j=cohort_energy_j(pop, sel_mask, cost, axis_name),
     )
     return new_pop, outcome
 
 
 @partial(jax.jit, static_argnames=("energy_model", "model_bytes",
                                    "local_steps", "batch_size", "deadline_s",
-                                   "up_bytes", "faults"))
+                                   "up_bytes", "faults", "energy_budget_j"))
 def _simulate_round_jit(pop, sel_mask, rnd, energy_model, model_bytes,
                         local_steps, batch_size, deadline_s, up_bytes,
-                        faults):
+                        faults, energy_budget_j, ledger):
     t_total, cost = _round_cost(pop, energy_model, model_bytes, local_steps,
                                 batch_size, up_bytes)
     t_eff, cost_eff, draw = faults_for_round(faults, rnd, t_total, cost)
+    # the gate predicts the cohort debit on the fault-*modified* cost so
+    # retry surcharges are charged against the budget, then the admitted
+    # cohort's debit is the same expression over the same mask — spent can
+    # never exceed the budget, bitwise
+    round_j = cohort_energy_j(pop, sel_mask, cost_eff)
+    sel_mask, admit, ledger = budget_gate(sel_mask, round_j, ledger,
+                                          energy_budget_j, rnd)
     new_pop, dev = simulate_round_device(
         pop, sel_mask, t_eff, cost_eff, rnd, energy_model, deadline_s,
         fail_mask=None if draw is None else draw.fail)
+    ledger = ledger._replace(spent_j=ledger.spent_j + dev.energy_spent_j)
     if draw is None:
         retries = jnp.int32(0)
         corrupt = jnp.zeros((pop.n,), bool)
@@ -208,7 +278,7 @@ def _simulate_round_jit(pop, sel_mask, rnd, energy_model, model_bytes,
         retries = jnp.sum(jnp.where(sel_mask, draw.retries, 0)) \
             .astype(jnp.int32)
         corrupt = draw.corrupt
-    return new_pop, dev, retries, corrupt
+    return new_pop, dev, retries, corrupt, admit, ledger
 
 
 def simulate_round(pop: ClientPopulation, selected: np.ndarray,
@@ -216,23 +286,38 @@ def simulate_round(pop: ClientPopulation, selected: np.ndarray,
                    local_steps: int, batch_size: int, rnd: int,
                    deadline_s: Optional[float] = None,
                    up_bytes: float = None, *,
-                   faults: Optional[FaultConfig] = None):
+                   faults: Optional[FaultConfig] = None,
+                   energy_budget_j: Optional[float] = None,
+                   spent_j: float = 0.0):
     """Returns (new_pop, RoundOutcome). Host facade over the fused core.
 
     With ``faults`` the round's deterministic fault draws (keyed on
     ``(faults.seed, rnd, client)`` only) are folded in: stragglers/retries
     lengthen ``durations``, retries surcharge the battery debit, crashed
     uploads fail the round, and ``RoundOutcome.corrupt`` flags the
-    survivors whose delta the server must quarantine."""
+    survivors whose delta the server must quarantine.
+
+    With ``energy_budget_j`` the fleet budget gate runs before the round:
+    ``spent_j`` is the cumulative joules debited so far (feed back
+    ``outcome.spent_after_j`` — it round-trips the device f32 ledger
+    exactly, keeping the host loop bitwise-equal to the fused engines);
+    when the predicted cohort debit does not fit, the whole round is
+    refused (``outcome.admitted`` False, nothing simulated, no battery
+    movement). Energy accounting flows regardless of whether a budget is
+    set."""
     selected = np.asarray(selected)
     sel_mask = np.zeros((pop.n,), bool)
     sel_mask[selected] = True
-    new_pop, dev, retries, corrupt = _simulate_round_jit(
+    ledger = BudgetLedger(spent_j=jnp.float32(spent_j),
+                          exhausted_round=jnp.int32(0))
+    new_pop, dev, retries, corrupt, admit, ledger = _simulate_round_jit(
         pop, jnp.asarray(sel_mask), jnp.asarray(rnd, jnp.int32),
         energy_model, float(model_bytes), int(local_steps), int(batch_size),
         None if deadline_s is None else float(deadline_s),
         None if up_bytes is None else float(up_bytes),
-        faults)
+        faults,
+        None if energy_budget_j is None else float(energy_budget_j),
+        ledger)
     outcome = RoundOutcome(
         selected=selected,
         succeeded=np.asarray(dev.succeeded)[selected],
@@ -242,6 +327,9 @@ def simulate_round(pop: ClientPopulation, selected: np.ndarray,
         energy_spent_pct=float(dev.energy_spent_pct),
         retries=int(retries),
         corrupt=np.asarray(corrupt)[selected],
+        energy_spent_j=float(dev.energy_spent_j),
+        admitted=bool(admit),
+        spent_after_j=float(ledger.spent_j),
     )
     return new_pop, outcome
 
@@ -326,6 +414,7 @@ def _scanned_runner(sel_cfg: SelectorConfig, energy_model: EnergyModel,
             "round_duration": dev.round_duration,
             "new_dropouts": dev.new_dropouts,
             "energy_spent_pct": dev.energy_spent_pct,
+            "energy_spent_j": dev.energy_spent_j,
             "mean_battery": jnp.mean(pop.battery_pct),
             "total_dropped": jnp.sum(pop.dropped).astype(jnp.int32),
             "retries": retries,
@@ -482,7 +571,8 @@ def run_rounds_scanned(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
 def _shard_round_step(key, sel_state, pop, t_total, cost, bits, *,
                       sel_cfg, energy_model, deadline_s, use_pallas,
                       interpret, axis_name, n_real,
-                      faults=None, streams=None):
+                      faults=None, streams=None,
+                      energy_budget_j=None, ledger=None):
     """Shard-local round step (selection -> simulation) for shard_map.
 
     With ``faults`` + ``streams`` (the round's globally generated,
@@ -510,10 +600,21 @@ def _shard_round_step(key, sel_state, pop, t_total, cost, bits, *,
         fail_mask = draw.fail
     else:
         t_sim, cost_sim, draw, fail_mask = t_total, cost, None, None
+    if ledger is not None:
+        # predicted cohort debit on the fault-modified cost, globally
+        # reduced — admit/refuse is a replicated decision across shards
+        round_j = cohort_energy_j(pop, sel_mask, cost_sim, axis_name)
+        sel_mask, admit, ledger = budget_gate(sel_mask, round_j, ledger,
+                                              energy_budget_j,
+                                              sel_state.round, axis_name)
+    else:
+        admit = jnp.bool_(True)
     pop, dev = simulate_round_device(pop, sel_mask, t_sim, cost_sim,
                                      sel_state.round, energy_model,
                                      deadline_s, axis_name=axis_name,
                                      fail_mask=fail_mask)
+    if ledger is not None:
+        ledger = ledger._replace(spent_j=ledger.spent_j + dev.energy_spent_j)
     # per-slot success for the trajectory: one shard owns each slot
     succ_sel = _slot_gather(dev.succeeded, idx, chosen, base, axis_name) > 0
     if draw is None:
@@ -526,7 +627,8 @@ def _shard_round_step(key, sel_state, pop, t_total, cost, bits, *,
             axis_name).astype(jnp.int32)
         corrupt_sel = (_slot_gather_i32(draw.corrupt, idx, chosen, base,
                                         axis_name) > 0) & chosen
-    return pop, sel_state, idx, chosen, succ_sel, dev, retries, corrupt_sel
+    return (pop, sel_state, idx, chosen, succ_sel, dev, retries,
+            corrupt_sel, admit, ledger)
 
 
 @functools.lru_cache(maxsize=16)
@@ -549,13 +651,13 @@ def _sharded_scanned_runner(sel_cfg: SelectorConfig,
     faulty = faults is not None and faults.active
 
     def body(key_r, st, pop, t_total, cost, bits, streams=None):
-        pop, st, idx, chosen, succ_sel, dev, retries, corrupt_sel = \
-            _shard_round_step(
-                key_r, st, pop, t_total, cost, bits, sel_cfg=sel_cfg,
-                energy_model=energy_model, deadline_s=deadline_s,
-                use_pallas=use_pallas, interpret=interpret,
-                axis_name=axis_name, n_real=n_real,
-                faults=faults if faulty else None, streams=streams)
+        (pop, st, idx, chosen, succ_sel, dev, retries, corrupt_sel,
+         _admit, _ledger) = _shard_round_step(
+            key_r, st, pop, t_total, cost, bits, sel_cfg=sel_cfg,
+            energy_model=energy_model, deadline_s=deadline_s,
+            use_pallas=use_pallas, interpret=interpret,
+            axis_name=axis_name, n_real=n_real,
+            faults=faults if faulty else None, streams=streams)
         out = {
             "selected": idx,
             "chosen": chosen,
@@ -563,6 +665,7 @@ def _sharded_scanned_runner(sel_cfg: SelectorConfig,
             "round_duration": dev.round_duration,
             "new_dropouts": dev.new_dropouts,
             "energy_spent_pct": dev.energy_spent_pct,
+            "energy_spent_j": dev.energy_spent_j,
             "mean_battery": _asum(pop.battery_pct, axis_name) / n_real,
             "total_dropped": (_asum(pop.dropped, axis_name)
                               .astype(jnp.int32) - n_pad),
@@ -689,13 +792,17 @@ class AsyncEventState(NamedTuple):
     start_version: jnp.ndarray   # (N,) i32 server version when started
     server_clock: jnp.ndarray    # f32 scalar, absolute seconds
     server_version: jnp.ndarray  # i32 scalar, aggregations so far
+    spent_j: jnp.ndarray         # f32 scalar, cumulative fleet joules debited
+    exhausted_round: jnp.ndarray  # i32 scalar, first budget-refused agg (0=no)
 
     @classmethod
     def create(cls, n: int) -> "AsyncEventState":
         return cls(t_done=jnp.full((n,), jnp.inf, jnp.float32),
                    start_version=jnp.zeros((n,), jnp.int32),
                    server_clock=jnp.float32(0.0),
-                   server_version=jnp.int32(0))
+                   server_version=jnp.int32(0),
+                   spent_j=jnp.float32(0.0),
+                   exhausted_round=jnp.int32(0))
 
     @property
     def in_flight(self) -> jnp.ndarray:
@@ -725,9 +832,19 @@ def make_async_round_engine(sel_cfg: SelectorConfig,
                             deadline_s: Optional[float] = None,
                             up_bytes: Optional[float] = None,
                             use_pallas: bool = False,
-                            interpret: bool = False):
+                            interpret: bool = False,
+                            energy_budget_j: Optional[float] = None):
     """Traced FedBuff event engine, single-device (the sharded twin is
     :func:`make_sharded_async_engine`): returns ``(init_fill, step)``.
+
+    ``energy_budget_j`` arms the fleet budget gate on the *start* side:
+    a fill/refill batch is admitted all-or-nothing only when the already
+    spent joules (``astate.spent_j``, debited at completion) plus the
+    committed cost of every in-flight client plus the batch's predicted
+    cost still fit — the committed term is what guarantees the eventual
+    debits can never overshoot the budget even though async charges at
+    completion time. Accounting (``astate.spent_j``) accumulates whether
+    or not a budget is set.
 
     ``init_fill(key, pop, sel_state, astate)`` primes ``max_concurrency``
     concurrency slots (no battery is debited — debits happen at completion)
@@ -758,12 +875,32 @@ def make_async_round_engine(sel_cfg: SelectorConfig,
         return _device_select(key, cfg, sel_state, sel_pop, cost,
                               use_pallas, interpret)
 
+    def _admit_batch(astate, pop, cost, idx, chosen, rnd):
+        """All-or-nothing budget admission for a fill/refill batch: spent
+        + in-flight commitments + batch prediction must fit. Returns the
+        gated ``chosen`` and the astate with ``exhausted_round`` stamped
+        on the first refusal."""
+        if energy_budget_j is None:
+            return chosen, astate
+        cost_j = pct_to_joules(pop.category, cost)
+        committed = jnp.sum(jnp.where(astate.in_flight, cost_j, 0.0))
+        batch_j = jnp.sum(jnp.where(chosen, cost_j[idx], 0.0))
+        admit = (astate.spent_j + committed + batch_j
+                 <= jnp.float32(energy_budget_j))
+        refused = jnp.any(chosen) & ~admit
+        exhausted = jnp.where((astate.exhausted_round == 0) & refused,
+                              jnp.asarray(rnd, jnp.int32),
+                              astate.exhausted_round)
+        return chosen & admit, astate._replace(exhausted_round=exhausted)
+
     def init_fill(key, pop: ClientPopulation, sel_state: SelectorState,
                   astate: AsyncEventState):
         t_total, cost = _round_cost(pop, energy_model, model_bytes,
                                     local_steps, batch_size, up_bytes)
         idx, chosen, sel_state = _select(key, fill_cfg, sel_state, pop,
                                          cost, astate)
+        chosen, astate = _admit_batch(astate, pop, cost, idx, chosen,
+                                      astate.server_version + 1)
         astate = _start_clients(astate, idx, chosen, t_total)
         return sel_state, astate, idx, chosen
 
@@ -816,7 +953,8 @@ def make_async_round_engine(sel_cfg: SelectorConfig,
                                          - dev.round_duration, 0.0)),
             server_clock=astate.server_clock + dev.round_duration,
             server_version=astate.server_version
-            + any_comp.astype(jnp.int32))
+            + any_comp.astype(jnp.int32),
+            spent_j=astate.spent_j + dev.energy_spent_j)
 
         flush = {
             "completed": cidx,
@@ -827,12 +965,15 @@ def make_async_round_engine(sel_cfg: SelectorConfig,
             "round_duration": dev.round_duration,
             "new_dropouts": dev.new_dropouts,
             "energy_spent_pct": dev.energy_spent_pct,
+            "energy_spent_j": dev.energy_spent_j,
         }
 
         # ---- refill the freed slots ------------------------------------
         ridx, rchosen, new_sel_state = _select(key, refill_cfg, sel_state,
                                                pop, cost, astate)
         rchosen = rchosen & do_refill
+        rchosen, astate = _admit_batch(astate, pop, cost, ridx, rchosen,
+                                       astate.server_version + 1)
         sel_state = jax.tree.map(lambda new, old: jnp.where(do_refill, new,
                                                             old),
                                  new_sel_state, sel_state.canonical())
@@ -874,6 +1015,8 @@ def _async_scanned_runner(sel_cfg: SelectorConfig, energy_model: EnergyModel,
             "n_inflight": jnp.sum(astate.in_flight).astype(jnp.int32),
             "mean_battery": jnp.mean(pop.battery_pct),
             "total_dropped": jnp.sum(pop.dropped).astype(jnp.int32),
+            "budget_spent_j": astate.spent_j,
+            "budget_exhausted": astate.exhausted_round,
         }
         return (pop, st, astate), out
 
@@ -1169,8 +1312,32 @@ def _start_clients_shard(astate: AsyncEventState, idx, chosen, t_total,
     return astate._replace(t_done=t_done, start_version=start_v)
 
 
+def _shard_admit_batch(astate, pop, cost, idx, chosen, rnd,
+                       energy_budget_j, base, axis_name):
+    """Sharded twin of the scanned engine's ``_admit_batch``: spent +
+    in-flight commitments + batch prediction must fit, all-or-nothing.
+    The commitment psum and the one-owner-per-slot batch psum make the
+    admit decision replicated across shards."""
+    if energy_budget_j is None:
+        return chosen, astate
+    n_loc = cost.shape[0]
+    cost_j = pct_to_joules(pop.category, cost)
+    committed = _asum(jnp.where(astate.in_flight, cost_j, 0.0), axis_name)
+    own = chosen & (idx >= base) & (idx < base + n_loc)
+    loc = jnp.clip(idx - base, 0, n_loc - 1)
+    batch_j = _asum(jnp.where(own, cost_j[loc], 0.0), axis_name)
+    admit = (astate.spent_j + committed + batch_j
+             <= jnp.float32(energy_budget_j))
+    refused = jnp.any(chosen) & ~admit
+    exhausted = jnp.where((astate.exhausted_round == 0) & refused,
+                          jnp.asarray(rnd, jnp.int32),
+                          astate.exhausted_round)
+    return chosen & admit, astate._replace(exhausted_round=exhausted)
+
+
 def _shard_async_fill(key, sel_state, astate, pop, t_total, cost, bits, *,
-                      fill_cfg, axis_name, n_real, use_pallas, interpret):
+                      fill_cfg, axis_name, n_real, use_pallas, interpret,
+                      energy_budget_j=None):
     """Shard-local initial fill: prime ``max_concurrency`` slots (no debit
     — debits happen at completion), twin of the scanned ``init_fill``."""
     n_loc = cost.shape[0]
@@ -1180,6 +1347,9 @@ def _shard_async_fill(key, sel_state, astate, pop, t_total, cost, bits, *,
         key, sel_state, sel_pop, cost, bits, cfg=fill_cfg,
         axis_name=axis_name, n_real=n_real, use_pallas=use_pallas,
         interpret=interpret)
+    chosen, astate = _shard_admit_batch(astate, pop, cost, idx, chosen,
+                                        astate.server_version + 1,
+                                        energy_budget_j, base, axis_name)
     astate = _start_clients_shard(astate, idx, chosen, t_total, base)
     return sel_state, astate, idx, chosen
 
@@ -1188,7 +1358,7 @@ def _shard_async_step(key, sel_state, astate, pop, t_total, cost, bits,
                       do_refill, *, refill_cfg, buffer_size: int,
                       staleness_power: float, energy_model, deadline_s,
                       axis_name, n_real: int, n_pad: int, use_pallas,
-                      interpret):
+                      interpret, energy_budget_j=None):
     """Shard-local flush-then-refill event step (call under ``shard_map``).
 
     Mirrors the scanned engine's ``step`` operation-for-operation: the
@@ -1237,7 +1407,8 @@ def _shard_async_step(key, sel_state, astate, pop, t_total, cost, bits,
                          jnp.maximum(astate.t_done
                                      - dev.round_duration, 0.0)),
         server_clock=astate.server_clock + dev.round_duration,
-        server_version=astate.server_version + any_comp.astype(jnp.int32))
+        server_version=astate.server_version + any_comp.astype(jnp.int32),
+        spent_j=astate.spent_j + dev.energy_spent_j)
 
     flush = {
         "completed": cidx,
@@ -1248,6 +1419,7 @@ def _shard_async_step(key, sel_state, astate, pop, t_total, cost, bits,
         "round_duration": dev.round_duration,
         "new_dropouts": dev.new_dropouts,
         "energy_spent_pct": dev.energy_spent_pct,
+        "energy_spent_j": dev.energy_spent_j,
     }
 
     # ---- refill the freed slots ----------------------------------------
@@ -1257,6 +1429,9 @@ def _shard_async_step(key, sel_state, astate, pop, t_total, cost, bits,
         axis_name=axis_name, n_real=n_real, use_pallas=use_pallas,
         interpret=interpret)
     rchosen = rchosen & do_refill
+    rchosen, astate = _shard_admit_batch(astate, pop, cost, ridx, rchosen,
+                                         astate.server_version + 1,
+                                         energy_budget_j, base, axis_name)
     sel_state = jax.tree.map(lambda new, old: jnp.where(do_refill, new,
                                                         old),
                              new_sel_state, sel_state)
@@ -1268,6 +1443,8 @@ def _shard_async_step(key, sel_state, astate, pop, t_total, cost, bits,
         "mean_battery": _asum(pop.battery_pct, axis_name) / n_real,
         "total_dropped": (_asum(pop.dropped, axis_name)
                           .astype(jnp.int32) - n_pad),
+        "budget_spent_j": astate.spent_j,
+        "budget_exhausted": astate.exhausted_round,
     }
     return pop, sel_state, astate, flush, (ridx, rchosen), stats
 
@@ -1281,7 +1458,8 @@ def make_sharded_async_engine(sel_cfg: SelectorConfig,
                               deadline_s: Optional[float] = None,
                               use_pallas: bool = False,
                               interpret: bool = False,
-                              axis_name: Optional[str] = None):
+                              axis_name: Optional[str] = None,
+                              energy_budget_j: Optional[float] = None):
     """Sharded twin of :func:`make_async_round_engine` over a 1-D `clients`
     mesh: returns ``(init_fill, step)`` operating on a population (and
     :class:`AsyncEventState`) padded to the mesh size and sharded over
@@ -1307,11 +1485,13 @@ def make_sharded_async_engine(sel_cfg: SelectorConfig,
     n_pad = n_padded - n_real
     spec = P(axis_name)
     astate_spec = AsyncEventState(t_done=spec, start_version=spec,
-                                  server_clock=P(), server_version=P())
+                                  server_clock=P(), server_version=P(),
+                                  spent_j=P(), exhausted_round=P())
 
     fill_body = shard_map(
         partial(_shard_async_fill, fill_cfg=fill_cfg, axis_name=axis_name,
-                n_real=n_real, use_pallas=use_pallas, interpret=interpret),
+                n_real=n_real, use_pallas=use_pallas, interpret=interpret,
+                energy_budget_j=energy_budget_j),
         mesh=mesh,
         in_specs=(P(), P(), astate_spec, spec, spec, spec, spec),
         out_specs=(P(), astate_spec, P(), P()),
@@ -1321,7 +1501,8 @@ def make_sharded_async_engine(sel_cfg: SelectorConfig,
                 buffer_size=buffer_size, staleness_power=staleness_power,
                 energy_model=energy_model, deadline_s=deadline_s,
                 axis_name=axis_name, n_real=n_real, n_pad=n_pad,
-                use_pallas=use_pallas, interpret=interpret),
+                use_pallas=use_pallas, interpret=interpret,
+                energy_budget_j=energy_budget_j),
         mesh=mesh,
         in_specs=(P(), P(), astate_spec, spec, spec, spec, spec, P()),
         out_specs=(spec, P(), astate_spec, P(), P(), P()),
@@ -1521,7 +1702,9 @@ def run_async_sharded(key, sel_cfg: SelectorConfig, pop: ClientPopulation,
             _pad_astate(state["astate"], n_padded),
             AsyncEventState(t_done=shard, start_version=shard,
                             server_clock=NamedSharding(mesh, P()),
-                            server_version=NamedSharding(mesh, P())))
+                            server_version=NamedSharding(mesh, P()),
+                            spent_j=NamedSharding(mesh, P()),
+                            exhausted_round=NamedSharding(mesh, P())))
         idx0, chosen0 = data["fill_selected"], data["fill_chosen"]
         if data.get("traj"):
             parts.append(data["traj"])

@@ -3,6 +3,7 @@
 historical bug its rule encodes, plus CLI/baseline schema stability."""
 import ast
 import json
+import pathlib
 import subprocess
 import sys
 import textwrap
@@ -12,12 +13,14 @@ import pytest
 from repro.analysis.engine import (
     Baseline,
     Module,
+    ProjectIndex,
     analyze,
     run_rules,
     write_baseline,
 )
 from repro.analysis.rules import (
     ALL_RULES,
+    JX102_REQUIRED_KNOBS,
     ArgMutation,
     DonatedBufferReuse,
     HostSyncInTraced,
@@ -167,6 +170,48 @@ class TestOptionalKnobTruthiness:
         """
         fs = lint(src, OptionalKnobTruthiness())
         assert rule_ids(fs) == ["JX102"]
+
+    BUDGET_SRC = """
+        from dataclasses import dataclass
+        from typing import Optional
+
+        @dataclass
+        class FLConfig:
+            energy_budget_j: Optional[float] = None
+
+        def metered(cfg):
+            if cfg.energy_budget_j:   # 0.0 J = refuse everything, not unmetered
+                return True
+            return False
+    """
+
+    def test_fires_on_budget_truthiness(self):
+        fs = lint(self.BUDGET_SRC, OptionalKnobTruthiness())
+        assert rule_ids(fs) == ["JX102"]
+        assert "energy_budget_j" in fs[0].message
+
+    def test_silent_on_budget_is_not_none(self):
+        src = self.BUDGET_SRC.replace(
+            "if cfg.energy_budget_j:",
+            "if cfg.energy_budget_j is not None:")
+        assert lint(src, OptionalKnobTruthiness()) == []
+
+    def test_project_scan_indexes_required_knobs(self):
+        """Every knob in JX102_REQUIRED_KNOBS must appear in the Optional
+        registry built from the real src/repro tree — a refactor that
+        drops an Optional annotation would otherwise blind JX102 to the
+        whole truthiness class without failing anything."""
+        root = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+        mods = []
+        for p in sorted(root.rglob("*.py")):
+            src = p.read_text()
+            mods.append(Module(path=str(p), source=src,
+                               tree=ast.parse(src)))
+        idx = ProjectIndex(mods)
+        missing = JX102_REQUIRED_KNOBS - set(idx.optional_numeric_fields)
+        assert not missing, (
+            f"Optional-knob registry lost {sorted(missing)} — JX102 no "
+            f"longer guards their 0-vs-None semantics")
 
 
 # ------------------------------------------------------ JX103 host sync

@@ -1,0 +1,162 @@
+"""UCB knob controller: exhaustive-search oracle + exact-disable parity.
+
+On an enumerable population (n <= 64, 3 knob values) the oracle is
+literal: run every fixed arm to completion and demand the controller's
+(total joules, final accuracy) point is not epsilon-Pareto-dominated by
+any of them — an arm "dominates" only if it is BOTH clearly more
+accurate (``ACC_EPS``) and clearly cheaper (``J_EPS`` relative), so
+float-level jitter can't flip the verdict. The second oracle is
+exactness: a controller whose only arm inherits every knob must
+reproduce the plain fixed-knob run bitwise, proving the controller
+machinery (probe eval, reward accounting, checkpoint state) perturbs
+nothing it doesn't explicitly turn.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_resnet_speech import reduced
+from repro.core import SelectorConfig
+from repro.federated import FLConfig, run_fl, run_fl_scanned
+from repro.federated.controller import (Arm, ControllerConfig,
+                                        UCBController, arm_knobs)
+
+ARMS = (Arm(k=2), Arm(k=4), Arm(k=6))
+#: domination margins: accuracy is a tiny-run statistic, energy a sum of
+#: per-client joules — require a clear win on BOTH axes
+ACC_EPS = 0.02
+J_EPS = 0.05
+
+
+def _cfg(**kw):
+    base = dict(
+        selector=SelectorConfig(kind="eafl", k=4),
+        n_clients=24, rounds=6, local_steps=3, batch_size=8,
+        samples_per_client=24, eval_every=2, eval_samples=70,
+        model=reduced(), input_hw=16)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+# --------------------------------------------------------------- oracle
+
+def test_controller_not_dominated_by_exhaustive_grid():
+    ctrl_hist = run_fl(_cfg(controller=ControllerConfig(arms=ARMS)))
+    acc_c = ctrl_hist.test_acc[-1]
+    j_c = ctrl_hist.energy_spent_j[-1]
+    # pulls 1..3 are the untried arms in index order, then UCB takes over
+    assert ctrl_hist.controller_arm[:3] == [0, 1, 2]
+    assert len(ctrl_hist.controller_arm) == 6
+    report = []
+    for arm in ARMS:
+        fixed = run_fl(_cfg(selector=SelectorConfig(kind="eafl",
+                                                    k=arm.k)))
+        acc_a = fixed.test_acc[-1]
+        j_a = fixed.energy_spent_j[-1]
+        report.append((arm.describe(), acc_a, j_a))
+        dominated = (acc_a >= acc_c + ACC_EPS
+                     and j_a <= (1.0 - J_EPS) * j_c)
+        assert not dominated, (
+            f"controller (acc={acc_c:.4f}, J={j_c:.1f}) is dominated by "
+            f"fixed {arm.describe()} (acc={acc_a:.4f}, J={j_a:.1f}); "
+            f"grid: {report}")
+
+
+def test_disabled_controller_reproduces_fixed_run_exactly():
+    """One all-inherit arm: the controller turns no knob and its probe
+    eval draws no RNG, so the trajectory must be bitwise identical to
+    the run without a controller at all."""
+    plain = run_fl(_cfg())
+    ctrl = run_fl(_cfg(controller=ControllerConfig(arms=(Arm(),))))
+    assert ctrl.controller_arm == [0] * 6
+    for f in ("test_acc", "train_loss", "energy_spent_j", "mean_battery",
+              "fairness", "participation", "round_duration"):
+        a, b = getattr(plain, f), getattr(ctrl, f)
+        assert np.array_equal(np.asarray(a, dtype=np.float64),
+                              np.asarray(b, dtype=np.float64),
+                              equal_nan=True), f"{f} diverged: {a} vs {b}"
+
+
+# ------------------------------------------------------- bandit unit
+
+def test_untried_arms_pulled_first_in_index_order():
+    ctrl = UCBController(ControllerConfig(arms=ARMS))
+    order = []
+    for t in range(1, 4):
+        i = ctrl.choose(t)
+        order.append(i)
+        ctrl.update(i, acc_delta=0.01, energy_j=100.0)
+    assert order == [0, 1, 2]
+
+
+def test_choice_is_deterministic_with_tied_rewards():
+    ctrl = UCBController(ControllerConfig(arms=ARMS))
+    for i in range(3):
+        ctrl.update(i, acc_delta=0.01, energy_j=100.0)
+    # identical means and counts: normalisation degenerates to all-ones
+    # and argmax's lowest-index tie-break must pick arm 0, every time
+    assert all(ctrl.choose(t) == 0 for t in (4, 5, 6))
+
+
+def test_controller_abandons_arm_whose_reward_collapses():
+    ctrl = UCBController(ControllerConfig(arms=ARMS, ucb_c=0.0))
+    rewards = (0.001, 0.05, 0.002)
+    for i, r in enumerate(rewards):
+        ctrl.update(i, acc_delta=r, energy_j=1.0)
+    # with no exploration bonus the argmax is pure greed
+    assert ctrl.choose(4) == 1
+    # once the favourite's observed mean decays below the field, the
+    # next-best arm takes over — adaptation flows through the means
+    t = 4
+    while ctrl.choose(t) == 1:
+        ctrl.update(1, acc_delta=-0.05, energy_j=1.0)
+        t += 1
+        assert t < 20, "never abandoned the collapsing arm"
+    assert ctrl.choose(t) == 2
+
+
+def test_reward_floor_caps_refused_round_reward():
+    ctrl = UCBController(ControllerConfig(arms=ARMS, reward_floor_j=1.0))
+    # a refused round draws 0 J; the floor keeps the reward finite
+    r = ctrl.update(0, acc_delta=0.5, energy_j=0.0)
+    assert r == 0.5
+
+
+def test_state_dict_roundtrip_and_shape_guard():
+    ctrl = UCBController(ControllerConfig(arms=ARMS))
+    ctrl.update(1, acc_delta=0.02, energy_j=50.0)
+    state = ctrl.state_dict()
+    clone = UCBController(ControllerConfig(arms=ARMS))
+    clone.load_state(state)
+    assert np.array_equal(clone.counts, ctrl.counts)
+    assert np.array_equal(clone.reward_sums, ctrl.reward_sums)
+    two = UCBController(ControllerConfig(arms=ARMS[:2]))
+    with pytest.raises(ValueError, match="arms"):
+        two.load_state(state)
+
+
+def test_config_validation_and_knob_resolution():
+    with pytest.raises(ValueError, match="at least one arm"):
+        ControllerConfig(arms=())
+    with pytest.raises(ValueError, match="reward_floor_j"):
+        ControllerConfig(arms=(Arm(),), reward_floor_j=0.0)
+    assert arm_knobs(4, None) == 4
+    assert arm_knobs(4, 0) == 0  # 0 is a real setting, not 'inherit'
+    assert Arm().describe() == "inherit"
+    assert Arm(k=2, buffer_size=3).describe() == "k=2,buffer_size=3"
+
+
+# ------------------------------------------------ engine restrictions
+
+def test_fused_engines_reject_controller():
+    cfg = _cfg(controller=ControllerConfig(arms=(Arm(),)))
+    with pytest.raises(ValueError, match="controller"):
+        run_fl_scanned(cfg)
+
+
+def test_async_mode_rejects_controller():
+    cfg = _cfg(controller=ControllerConfig(arms=(Arm(),)),
+               buffer_size=3, max_concurrency=6, staleness_power=0.5)
+    with pytest.raises(ValueError, match="controller"):
+        run_fl(cfg)

@@ -1,0 +1,184 @@
+"""Fleet energy-budget ledger: never-exceeds + engine invariance.
+
+The cumulative-joules ledger rides every engine's carry, so the budget
+contract is a *trajectory* property: spent energy is monotone, never
+exceeds ``energy_budget_j`` for any seed, and is engine-invariant (host
+== scanned bitwise; sharded within the float tolerance of
+``test_sharded_parity.py``). Fault retry surcharges
+(``retry_cost_frac``) are charged against — and gated by — the budget.
+
+The invariant checks live in plain helpers; the deterministic
+parametrized tests below exercise them on a fixed grid everywhere, and
+the hypothesis fuzz (CI installs ``requirements-dev.txt``) drives the
+same helpers across random seeds. ``energy_budget_j`` is a compile-time
+static of the fused engines, so the fuzz draws budgets from a small
+discrete set to reuse the compile cache instead of recompiling per
+example.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_resnet_speech import reduced
+from repro.core import SelectorConfig
+from repro.federated import FLConfig, run_fl, run_fl_scanned
+from repro.federated.async_server import run_fl_async
+from repro.federated.faults import FaultConfig
+from repro.federated.server import run_fl_sharded
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # CI installs hypothesis via requirements-dev.txt
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        return lambda f: pytest.mark.skip(
+            reason="property tests need hypothesis "
+                   "(pip install -r requirements-dev.txt)")(f)
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class st:  # noqa: N801 - stand-in for hypothesis.strategies
+        @staticmethod
+        def sampled_from(_xs):
+            return None
+
+        @staticmethod
+        def integers(**_k):
+            return None
+
+
+#: budgets spanning refuse-at-round-1, mid-run exhaustion, and roomy —
+#: a DISCRETE set because energy_budget_j is a jit static of the fused
+#: engines (each distinct value is one compile-cache entry)
+BUDGETS = (300.0, 1500.0, 4000.0, 9000.0)
+
+
+def _cfg(**kw):
+    base = dict(
+        selector=SelectorConfig(kind="eafl", k=4),
+        n_clients=16, rounds=4, local_steps=2, batch_size=8,
+        samples_per_client=16, eval_every=2, eval_samples=40,
+        model=reduced(), input_hw=16)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _assert_ledger_invariants(hist, budget):
+    spent = hist.energy_spent_j
+    assert len(spent) == len(hist.round)
+    arr = np.asarray(spent, dtype=np.float64)
+    assert np.all(arr >= 0.0)
+    assert np.all(np.diff(arr) >= 0.0), f"spent not monotone: {spent}"
+    if budget is not None:
+        assert all(x <= budget for x in spent), \
+            f"budget {budget} exceeded: {spent}"
+    else:
+        assert hist.budget_exhausted_round is None
+        assert arr[-1] > 0.0
+
+
+def _assert_budget_engine_invariant(budget, seed):
+    """host == scanned bitwise on the full spend trajectory, and both
+    respect the budget for this seed."""
+    cfg = _cfg(energy_budget_j=budget, seed=seed)
+    h = run_fl(cfg)
+    s = run_fl_scanned(cfg)
+    _assert_ledger_invariants(h, budget)
+    _assert_ledger_invariants(s, budget)
+    assert h.energy_spent_j == s.energy_spent_j, \
+        (f"ledger diverged host vs scanned (budget={budget}, seed={seed}):"
+         f"\n{h.energy_spent_j}\n{s.energy_spent_j}")
+    assert h.budget_exhausted_round == s.budget_exhausted_round
+
+
+# ------------------------------------------------- deterministic grid
+
+@pytest.mark.parametrize("budget", [300.0, 4000.0, None],
+                         ids=["tight", "mid", "unmetered"])
+def test_budget_never_exceeded_and_engine_invariant(budget):
+    _assert_budget_engine_invariant(budget, seed=0)
+
+
+def test_tight_budget_refuses_first_round():
+    """All-or-nothing admission: a budget below the first cohort's cost
+    refuses round 1 outright (zero joules drawn) instead of part-charging
+    it, and stamps the first refusal."""
+    hist = run_fl_scanned(_cfg(energy_budget_j=300.0))
+    assert hist.budget_exhausted_round == 1
+    assert hist.energy_spent_j[0] == 0.0
+
+
+def test_sharded_ledger_matches_scanned_within_tolerance():
+    """Sharded twin: replicated ledger, psum-predicted round cost —
+    same tolerance contract as test_sharded_parity.py (1-shard mesh
+    in-process; the multi-device matrix runs via sharded_check)."""
+    cfg = _cfg(energy_budget_j=4000.0)
+    ref = run_fl_scanned(cfg)
+    sh = run_fl_sharded(cfg)
+    _assert_ledger_invariants(sh, cfg.energy_budget_j)
+    np.testing.assert_allclose(np.asarray(sh.energy_spent_j),
+                               np.asarray(ref.energy_spent_j), rtol=1e-6)
+    assert sh.budget_exhausted_round == ref.budget_exhausted_round
+
+
+def test_async_budget_never_exceeded():
+    cfg = _cfg(buffer_size=3, max_concurrency=6, staleness_power=0.5,
+               energy_budget_j=4000.0)
+    hist = run_fl_async(cfg)
+    _assert_ledger_invariants(hist, cfg.energy_budget_j)
+
+
+# ------------------------------------------------- retry surcharges
+
+def test_retry_surcharge_charged_and_gated():
+    """``cost_eff = cost * (1 + retries*retry_cost_frac)`` must reach the
+    ledger: the surcharged run draws more joules than the zero-surcharge
+    run under identical fault draws, and a budget between the two
+    single-round costs refuses the surcharged cohort while admitting the
+    clean one — proving the gate predicts on cost_eff, not base cost."""
+    faults = dict(seed=3, crash_prob=0.6, max_retries=3)
+    clean_cfg = _cfg(rounds=1, faults=FaultConfig(
+        retry_cost_frac=0.0, **faults))
+    heavy_cfg = _cfg(rounds=1, faults=FaultConfig(
+        retry_cost_frac=0.5, **faults))
+    clean = run_fl(clean_cfg)
+    heavy = run_fl(heavy_cfg)
+    assert clean.retries[0] > 0, "fault config drew no retries"
+    assert heavy.energy_spent_j[0] > clean.energy_spent_j[0]
+
+    budget = 0.5 * (clean.energy_spent_j[0] + heavy.energy_spent_j[0])
+    admitted = run_fl(dataclasses.replace(clean_cfg,
+                                          energy_budget_j=budget))
+    refused = run_fl(dataclasses.replace(heavy_cfg,
+                                         energy_budget_j=budget))
+    assert admitted.budget_exhausted_round is None
+    assert admitted.energy_spent_j == clean.energy_spent_j
+    assert refused.budget_exhausted_round == 1
+    assert refused.energy_spent_j[0] == 0.0
+    # and the fused engine reaches the identical refusal
+    refused_sc = run_fl_scanned(dataclasses.replace(
+        heavy_cfg, energy_budget_j=budget))
+    assert refused_sc.energy_spent_j == refused.energy_spent_j
+    assert refused_sc.budget_exhausted_round == 1
+
+
+# ------------------------------------------------- hypothesis fuzz
+
+@given(budget=st.sampled_from(BUDGETS), seed=st.integers(min_value=0,
+                                                         max_value=7))
+@settings(max_examples=6, deadline=None)
+def test_fuzz_budget_engine_invariant(budget, seed):
+    _assert_budget_engine_invariant(budget, seed)
+
+
+@given(seed=st.integers(min_value=0, max_value=7))
+@settings(max_examples=4, deadline=None)
+def test_fuzz_async_budget_never_exceeded(seed):
+    hist = run_fl_async(_cfg(buffer_size=3, max_concurrency=6,
+                             staleness_power=0.5, seed=seed,
+                             energy_budget_j=1500.0))
+    _assert_ledger_invariants(hist, 1500.0)

@@ -27,7 +27,8 @@ from repro.federated.simulation import run_async_scanned, run_rounds_scanned
 
 HIST_FIELDS = ("round", "wall_hours", "round_duration", "test_acc",
                "train_loss", "cum_dropouts", "fairness", "participation",
-               "mean_battery", "retries", "quarantined", "update_skipped")
+               "mean_battery", "retries", "quarantined", "update_skipped",
+               "energy_spent_j")
 
 
 # --------------------------------------------------------- segment plumbing
@@ -177,6 +178,33 @@ def test_training_resume_is_bitwise(tmp_path, runner):
     resumed = runner(dataclasses.replace(
         cfg, resume_from=checkpoint_path_for(path, 2)))
     _assert_hist_bitwise(ref, resumed)
+
+
+@pytest.mark.parametrize("runner", [run_fl, run_fl_scanned], ids=["host",
+                                                                  "scanned"])
+def test_budget_resume_is_bitwise(tmp_path, runner):
+    """A budget-constrained run killed at round 2 and resumed reproduces
+    the uninterrupted run bitwise — the cumulative-energy ledger rides the
+    engine carry like the RNG chain, so the resumed segment re-enters the
+    identical f32 spend chain and the gate refuses the identical round
+    (``budget_exhausted_round`` included)."""
+    probe = runner(_train_cfg())
+    # rounds 1-2 fit; round 3's cohort cannot — the gate fires AFTER the
+    # resume point, so parity requires the restored ledger, not luck
+    budget = probe.energy_spent_j[1] + 1.0
+    cfg = _train_cfg(energy_budget_j=budget)
+    path = os.path.join(tmp_path, "ck_{round}.msgpack")
+    ref = runner(cfg)
+    assert ref.budget_exhausted_round == 3
+    assert all(x <= budget for x in ref.energy_spent_j)
+    elastic = runner(dataclasses.replace(cfg, checkpoint_path=path,
+                                         checkpoint_every=2))
+    _assert_hist_bitwise(ref, elastic)
+    resumed = runner(dataclasses.replace(
+        cfg, resume_from=checkpoint_path_for(path, 2)))
+    _assert_hist_bitwise(ref, resumed)
+    assert resumed.energy_spent_j == ref.energy_spent_j
+    assert resumed.budget_exhausted_round == ref.budget_exhausted_round
 
 
 def test_training_async_resume_is_bitwise(tmp_path):
