@@ -27,7 +27,11 @@ K=100) through the host reference loop, the fused device-resident scan
 (``run_fl_scanned``) and — when more than one device is visible
 (``--devices N`` forges virtual CPU devices) — the sharded twin, stamping
 wall-clock rounds/s, speedups over host, and (simulated) time-to-accuracy
-per engine.
+per engine. Combined with ``--mode async`` (or any async knob) the bench
+covers the FedBuff family instead — host event loop vs
+``run_fl_async_scanned`` vs ``run_fl_async_sharded`` — and the two
+families merge under the ``"modes"`` key of one json
+(``BENCH_training.json`` carries both).
 
 Run standalone for the full-scale version:
   PYTHONPATH=src python -m benchmarks.fl_comparison --rounds 150 --clients 200
@@ -134,9 +138,20 @@ def summarize(results: Dict[str, FLHistory],
 
 def run_training_bench(clients: int, k: int, rounds: int, seed: int,
                        out: str,
-                       checkpoint_every: Optional[int] = None) -> None:
-    """Throughput bench for the synchronous training engines (host loop /
-    fused scan / sharded scan) on one eafl workload.
+                       checkpoint_every: Optional[int] = None,
+                       mode: str = "sync",
+                       buffer_size: Optional[int] = None,
+                       max_concurrency: Optional[int] = None,
+                       staleness_power: float = 0.5) -> None:
+    """Throughput bench for the training engines (host loop / fused scan /
+    sharded scan) on one eafl workload.
+
+    ``mode="async"`` benches the FedBuff family instead — the host event
+    loop vs ``run_fl_async_scanned`` vs ``run_fl_async_sharded`` — on a
+    buffered regime (default ``buffer_size=k//2, max_concurrency=k``).
+    One invocation benches one mode; the payloads merge under a
+    ``"modes"`` key in the output json, so running ``--mode sync`` then
+    ``--mode async`` against the same file stamps both families.
 
     Protocol: the fused engines get one warm run (their jitted R-round
     program is cached per config, so the timed run measures pure
@@ -174,12 +189,30 @@ def run_training_bench(clients: int, k: int, rounds: int, seed: int,
         init_battery_low=25.0, init_battery_high=95.0,
         sim_model_bytes=85e6, sim_local_steps=1600)
 
-    engines = {
-        "host": (lambda c: run_fl(c, engine="host"), False),
-        "scanned": (run_fl_scanned, True),
-    }
-    if jax.device_count() > 1:
-        engines["sharded"] = (run_fl_sharded, True)
+    async_knobs = {}
+    if mode == "async":
+        from repro.federated.async_server import (run_fl_async,
+                                                  run_fl_async_scanned,
+                                                  run_fl_async_sharded)
+        async_knobs = {
+            "buffer_size": buffer_size or max(1, k // 2),
+            "max_concurrency": max_concurrency or k,
+            "staleness_power": staleness_power,
+        }
+        cfg = dataclasses.replace(cfg, **async_knobs)
+        engines = {
+            "host": (run_fl_async, False),
+            "scanned": (run_fl_async_scanned, True),
+        }
+        if jax.device_count() > 1:
+            engines["sharded"] = (run_fl_async_sharded, True)
+    else:
+        engines = {
+            "host": (lambda c: run_fl(c, engine="host"), False),
+            "scanned": (run_fl_scanned, True),
+        }
+        if jax.device_count() > 1:
+            engines["sharded"] = (run_fl_sharded, True)
 
     results, hists = {}, {}
     for name, (fn, warm) in engines.items():
@@ -236,12 +269,24 @@ def run_training_bench(clients: int, k: int, rounds: int, seed: int,
         results[name]["sim_hours_to_target"] = time_to_accuracy(h, target)
         results[name]["speedup_vs_host"] = (results[name]["rounds_per_s"]
                                             / hhost["rounds_per_s"])
-    payload = {
+    ident = {
         "bench": "training_engines", "clients": clients, "k": k,
         "rounds": rounds, "seed": seed, "devices": jax.device_count(),
         "checkpoint_every": checkpoint_every,
-        "acc_target": target, "engines": results,
     }
+    entry = {"acc_target": target, "engines": results, **async_knobs}
+    payload = dict(ident)
+    if os.path.exists(out):
+        # merge with an existing bench of the same shape so sync + async
+        # invocations stamp one json; any identity mismatch starts over
+        try:
+            with open(out) as f:
+                prior = json.load(f)
+            if all(prior.get(k) == v for k, v in ident.items()):
+                payload = prior
+        except (OSError, ValueError):
+            pass
+    payload.setdefault("modes", {})[mode] = entry
     os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
     with open(out, "w") as f:
         json.dump(payload, f, indent=2)
@@ -298,9 +343,19 @@ def main():
     args = ap.parse_args()
 
     if args.bench_out is not None:
+        bench_mode = resolve_aggregation(args.mode, args.buffer_size,
+                                         args.max_concurrency)
+        if args.staleness_power is not None:
+            bench_mode = "async"
         run_training_bench(args.bench_clients, args.bench_k,
                            args.bench_rounds, args.seed, args.bench_out,
-                           checkpoint_every=args.checkpoint_every)
+                           checkpoint_every=args.checkpoint_every,
+                           mode=bench_mode,
+                           buffer_size=args.buffer_size,
+                           max_concurrency=args.max_concurrency,
+                           staleness_power=(
+                               0.5 if args.staleness_power is None
+                               else args.staleness_power))
         return
     if args.checkpoint_every is not None:
         ap.error("--checkpoint-every is a bench knob (use with "

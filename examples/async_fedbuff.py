@@ -10,7 +10,10 @@ Two demonstrations on the paper's battery-powered task:
      aggregates as soon as ``buffer_size`` updates arrive instead of
      waiting for the slowest selected client, so wall-clock per update
      drops and slow/low-energy clients still contribute (staleness-damped)
-     instead of being abandoned at a deadline.
+     instead of being abandoned at a deadline. The async leg goes through
+     the ``run_fl`` dispatcher, which auto-resolves the device-resident
+     FedBuff engine (``run_fl_async_scanned``, or the sharded twin on a
+     multi-device host) — the host event loop is only the parity oracle.
 
   PYTHONPATH=src python examples/async_fedbuff.py [--aggregations 20]
 """
@@ -84,6 +87,8 @@ def main():
 
     # run_fl's default mode="auto" resolves per config: no async knobs ->
     # the synchronous barrier; buffer_size/max_concurrency set -> FedBuff
+    # on the device-resident engine (engine="auto" upgrades async runs to
+    # the event scan with the in-carry snapshot ring)
     h_sync = run_fl(fl_config(args.kind, args.aggregations))
     h_async = run_fl(fl_config(args.kind, args.aggregations,
                                buffer_size=args.buffer_size,

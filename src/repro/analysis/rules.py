@@ -243,6 +243,7 @@ JX102_REQUIRED_KNOBS = frozenset({
     "max_concurrency",
     "checkpoint_every",
     "energy_budget_j",
+    "snapshot_ring_size",
 })
 
 
@@ -557,6 +558,18 @@ def _donate_positions(call: ast.Call) -> Optional[Set[int]]:
     return None
 
 
+def _partial_donate_positions(call: ast.Call) -> Optional[Set[int]]:
+    """Donated positions when ``call`` is the curried form
+    ``functools.partial(jax.jit, donate_argnums=...)`` — used both as a
+    decorator and applied directly (``step = partial(jax.jit, ...)(step)``,
+    the async engines' donation idiom)."""
+    if (dotted_name(call.func) in ("functools.partial", "partial")
+            and call.args):
+        return _donate_positions(ast.Call(func=call.args[0], args=[],
+                                          keywords=call.keywords))
+    return None
+
+
 class DonatedBufferReuse(Rule):
     id = "JX106"
     name = "donated-buffer-reuse"
@@ -578,13 +591,8 @@ class DonatedBufferReuse(Rule):
                 for dec in node.decorator_list:
                     if isinstance(dec, ast.Call):
                         pos = _donate_positions(dec)
-                        if pos is None and (dotted_name(dec.func)
-                                            in ("functools.partial",
-                                                "partial")
-                                            and dec.args):
-                            inner = ast.Call(func=dec.args[0],
-                                             args=[], keywords=dec.keywords)
-                            pos = _donate_positions(inner)
+                        if pos is None:
+                            pos = _partial_donate_positions(dec)
                         if pos:
                             donors.setdefault(node.name, set()).update(pos)
             elif isinstance(node, ast.Assign) and len(node.targets) == 1:
@@ -592,6 +600,9 @@ class DonatedBufferReuse(Rule):
                 if isinstance(t, ast.Name) and isinstance(node.value,
                                                           ast.Call):
                     pos = _donate_positions(node.value)
+                    if pos is None and isinstance(node.value.func, ast.Call):
+                        # step = functools.partial(jax.jit, ...)(step)
+                        pos = _partial_donate_positions(node.value.func)
                     if pos:
                         donors.setdefault(t.id, set()).update(pos)
         return donors

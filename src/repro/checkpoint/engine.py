@@ -4,13 +4,19 @@ scan carry plus its trajectory-so-far, and the matching resume side.
 A carry checkpoint has three parts:
 
 * ``state`` — a dict of named pytrees (params, optimizer state,
-  ``ClientPopulation``, ``SelectorState``, RNG keys, async event clocks).
-  Only the *leaves* are stored; on load they are substituted back into a
+  ``ClientPopulation``, ``SelectorState``, RNG keys, async event clocks,
+  the async engines' fixed-shape parameter snapshot ring). Only the
+  *leaves* are stored; on load they are substituted back into a
   caller-supplied template pytree, so registered dataclass/NamedTuple
   nodes round-trip without custom serializers. Leaf shape and dtype are
   checked against the template — a checkpoint from a different
   population size or model fails with :class:`CheckpointError` instead
-  of silently reshaping.
+  of silently reshaping. Every engine's carry is fixed-shape (the async
+  snapshot ring rides the carry as stacked params + version/refcount
+  lanes), so a single-pass restore with full templates always suffices;
+  the historical two-phase ring restore — base carry first, then one
+  dynamically-named ``ring_{version}`` component per live version, which
+  dodged the template check — is gone.
 * ``data`` — plain packable host data (trajectory arrays accumulated so
   far, history lists, wall-clock scalars). Returned verbatim.
 * ``meta`` — a flat dict identifying the run (seed, engine, selector,

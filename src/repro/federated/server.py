@@ -143,6 +143,14 @@ class FLConfig:
     buffer_size: Optional[int] = None
     max_concurrency: Optional[int] = None
     staleness_power: float = 0.5
+    # snapshot_ring_size: capacity of the per-version parameter snapshot
+    # ring the device-resident async engines carry in-trace (stacked
+    # params + version ids + refcounts). None -> max_concurrency, which
+    # is provably sufficient (live versions never exceed the concurrency
+    # cap); larger values only add headroom/memory. Must be >=
+    # max_concurrency. The host async loop keeps snapshots in a python
+    # dict and ignores this knob beyond validation.
+    snapshot_ring_size: Optional[int] = None
     # --- elastic fault tolerance ----------------------------------------
     # faults: deterministic seed-driven transient client faults
     # (repro.federated.faults) — crash-before-upload with retries,
@@ -360,9 +368,14 @@ def _train_meta(cfg: FLConfig, family: str) -> Dict[str, Any]:
     scanned/sharded twins (the sharded engine saves the population trimmed
     to ``n_clients``, so its snapshots are portable across device counts
     and across the two engines), ``"train-host"`` for the reference host
-    loop (its checkpoint also carries the python-side FLHistory), and
-    ``"train-async"`` for the event-driven async server (which adds the
-    snapshot-ring versions)."""
+    loop (its checkpoint also carries the python-side FLHistory),
+    ``"train-async"`` for the device-resident async twins (scanned and
+    sharded share one portable carry: the sharded engine trims the
+    population/event-state/slot-rank leaves to ``n_clients``), and
+    ``"train-async-host"`` for the reference async event loop (plain
+    carry plus the python-side FLHistory). The async families extend the
+    meta with the normalized FedBuff knobs
+    (:func:`repro.federated.async_server._async_train_meta`)."""
     return {
         "family": family,
         "n_clients": int(cfg.n_clients),
@@ -407,8 +420,14 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
     device-resident scan (:func:`run_fl_scanned`) and ``"sharded"`` its
     `clients`-mesh twin (:func:`run_fl_sharded`); all three produce the
     same trajectory within float tolerance (``tests/
-    test_training_engines.py``). The async mode has a single (host) event
-    loop, so forcing a device engine there is an error.
+    test_training_engines.py``). In async mode the same names pick the
+    FedBuff engine: ``"host"`` the reference event loop
+    (:func:`repro.federated.async_server.run_fl_async`), ``"scanned"``
+    the device-resident event scan with the in-carry snapshot ring
+    (:func:`run_fl_async_scanned`) and ``"sharded"`` its `clients`-mesh
+    twin (:func:`run_fl_async_sharded`); flush/refill/version
+    trajectories are index-for-index identical across the three
+    (``tests/test_async_training_engines.py``).
     """
     if mode in ENGINES:
         # run_fl is the training front door — selection-only engine names
@@ -428,7 +447,12 @@ def run_fl(cfg: FLConfig, verbose: bool = False,
             f"(resolved mode={mode!r}, engine={engine!r}); use "
             f"run_fl(cfg, mode='sync', engine='host')")
     if mode == "async":
-        from repro.federated.async_server import run_fl_async
+        from repro.federated.async_server import (
+            run_fl_async, run_fl_async_scanned, run_fl_async_sharded)
+        if engine == "scanned":
+            return run_fl_async_scanned(cfg, verbose=verbose)
+        if engine == "sharded":
+            return run_fl_async_sharded(cfg, verbose=verbose)
         return run_fl_async(cfg, verbose=verbose)
     if engine == "scanned":
         return run_fl_scanned(cfg, verbose=verbose)
@@ -967,8 +991,10 @@ def _history_from_traj(cfg: FLConfig, init_acc: float, traj) -> FLHistory:
 
 def _print_fused_history(cfg: FLConfig, hist: FLHistory) -> None:
     """Post-hoc twin of the host loop's every-10-rounds progress line (the
-    fused engines have nothing to print per round — that's the point)."""
-    for rnd in range(10, cfg.rounds + 1, 10):
+    fused engines have nothing to print per round — that's the point).
+    Iterates the recorded rounds, not ``cfg.rounds``: async histories are
+    truncated at quiescence."""
+    for rnd in range(10, len(hist.round) + 1, 10):
         i = rnd - 1
         print(f"[{cfg.selector.kind}] r={rnd} acc={hist.test_acc[i]:.3f} "
               f"loss={hist.train_loss[i]:.3f} drop={hist.cum_dropouts[i]} "
@@ -990,19 +1016,32 @@ def _fused_do_eval(cfg: FLConfig, a: int, b: int) -> jnp.ndarray:
 
 
 def _run_fused_elastic(cfg: FLConfig, run, carry0, run_args,
-                       resume_templates, save_state) -> FLHistory:
-    """Shared segment/checkpoint/resume driver for the two fused training
-    engines. ``carry0`` is the fresh 7-tuple carry; ``run_args`` the
-    engine's per-call data tail; ``resume_templates(state)`` maps loaded
-    checkpoint state back onto an engine carry; ``save_state(carry)``
-    maps a live carry to the (engine-portable) checkpoint state dict."""
-    meta = _train_meta(cfg, "train-sync")
+                       resume_templates, save_state, meta=None,
+                       history_fn=None, carry_names=_TRAIN_CARRY,
+                       capture=None) -> FLHistory:
+    """Shared segment/checkpoint/resume driver for the fused training
+    engines (sync scanned/sharded and their async twins). ``carry0`` is
+    the fresh carry tuple laid out as ``carry_names``; ``run_args`` the
+    engine's per-call data tail; ``resume_templates["restore"](state)``
+    maps loaded checkpoint state back onto an engine carry (with
+    ``resume_templates["pop_template"]`` as the unpadded population
+    template and optional ``resume_templates["overrides"]`` replacing
+    trimmed checkpoint-leaf templates, e.g. shard-trimmed event state);
+    ``save_state(carry)`` maps a live carry to the (engine-portable)
+    checkpoint state dict. ``meta``/``history_fn`` default to the
+    synchronous family; ``capture``, when a dict, receives the full
+    concatenated trajectory under ``"traj"`` (parity-test hook)."""
+    if meta is None:
+        meta = _train_meta(cfg, "train-sync")
+    if history_fn is None:
+        history_fn = _history_from_traj
     ck = _make_checkpointer(cfg.checkpoint_path, cfg.checkpoint_every,
                             cfg.rounds, meta)
     parts: List[Dict[str, Any]] = []
     if cfg.resume_from:
-        templates = dict(zip(_TRAIN_CARRY, carry0))
+        templates = dict(zip(carry_names, carry0))
         templates["pop"] = resume_templates["pop_template"]
+        templates.update(resume_templates.get("overrides", {}))
         with setup_transfers():  # checkpoint leaves move host->device
             start, state, saved, _ = load_engine_checkpoint(
                 cfg.resume_from, templates, expect_meta=meta)
@@ -1013,14 +1052,17 @@ def _run_fused_elastic(cfg: FLConfig, run, carry0, run_args,
         start = 0
         carry = carry0
         init_acc = float(jax.device_get(
-            carry0[_TRAIN_CARRY.index("last_acc")]))
+            carry0[carry_names.index("last_acc")]))
     for a, b in segment_bounds(start, cfg.rounds, ck.every if ck else None):
         carry, traj = run(_fused_do_eval(cfg, a, b), carry, *run_args)
         parts.append(jax.device_get(traj))
         if ck and ck.due(b):
             ck.save(b, save_state(carry),
                     {"traj": _concat_traj(parts), "init_acc": init_acc})
-    return _history_from_traj(cfg, init_acc, _concat_traj(parts))
+    traj = _concat_traj(parts)
+    if capture is not None:
+        capture["traj"] = traj
+    return history_fn(cfg, init_acc, traj)
 
 
 def run_fl_scanned(cfg: FLConfig, verbose: bool = False) -> FLHistory:

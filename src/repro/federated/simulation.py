@@ -1748,8 +1748,10 @@ ENGINES = SYNC_ENGINES + ASYNC_ENGINES
 
 #: Training engines behind the ``run_fl`` front door: the reference host
 #: Python round loop, the fused device-resident scan
-#: (``run_fl_scanned``), and its `clients`-mesh shard_map twin
-#: (``run_fl_sharded``).
+#: (``run_fl_scanned`` / ``run_fl_async_scanned``), and the
+#: `clients`-mesh shard_map twin (``run_fl_sharded`` /
+#: ``run_fl_async_sharded``). All three names exist in BOTH aggregation
+#: families.
 TRAIN_ENGINES = ("host", "scanned", "sharded")
 
 
@@ -1759,24 +1761,33 @@ def resolve_train_engine(n: int, device_count: Optional[int] = None, *,
     """Pick the *training* engine for ``run_fl``.
 
     Mirrors :func:`resolve_engine`'s placement logic for the end-to-end
-    training loop: an explicit ``engine`` name passes through (validated
-    against the aggregation family — the async server has a single host
-    event loop, so only ``"host"`` is legal there); ``"auto"`` keeps the
-    reference host loop (the trajectory every test and plot was calibrated
-    on), which callers upgrade to ``"scanned"`` / ``"sharded"`` explicitly
-    or via benchmarks. All three engines produce the same trajectory
-    within float tolerance (``tests/test_training_engines.py``), so the
-    pick is purely a performance decision.
+    training loop. An explicit ``engine`` name passes through — every
+    name in :data:`TRAIN_ENGINES` is legal in both aggregation families
+    (the async family folds FedBuff local SGD into the event scan via the
+    in-carry snapshot ring, ``run_fl_async_scanned`` /
+    ``run_fl_async_sharded``).
+
+    ``"auto"`` resolves per family: the sync family keeps the reference
+    host loop (the trajectory every test and plot was calibrated on),
+    which callers upgrade to the fused engines explicitly or via
+    benchmarks; the async family picks the device-resident engines
+    (``"sharded"`` on a multi-device host, else ``"scanned"``) — the host
+    event loop there is the slow reference implementation, kept as the
+    parity oracle and reachable via ``engine="host"``. Engines in a
+    family produce the same trajectory within float tolerance
+    (``tests/test_training_engines.py``,
+    ``tests/test_async_training_engines.py``), so the pick is purely a
+    performance decision.
     """
     if engine == "auto":
-        return "host"
+        if mode != "async":
+            return "host"
+        if device_count is None:
+            device_count = jax.device_count()
+        return "sharded" if device_count > 1 else "scanned"
     if engine not in TRAIN_ENGINES:
         raise ValueError(f"unknown training engine {engine!r}; expected "
                          f"'auto' or one of {TRAIN_ENGINES}")
-    if mode == "async" and engine != "host":
-        raise ValueError(
-            f"the async server has no {engine!r} training engine (single "
-            f"host event loop); drop engine= or use mode='sync'")
     return engine
 
 

@@ -40,7 +40,13 @@ the full kind matrix):
     host vs scanned bitwise, scanned resume bitwise, retries and
     quarantines actually exercised (non-vacuity guarded), and no
     injected NaN ever reaching ``test_acc``;
-  - ``run_fl_async`` resume parity (two-phase snapshot-ring restore).
+  - the async family: ``run_fl_async_scanned`` resume parity (the
+    checkpoint carries the whole event carry — in-carry snapshot ring,
+    event state, slot ranks — restored in a single pass), the host
+    event loop measured bitwise against the scanned reference plus its
+    own restart parity, ``run_fl_async_sharded`` resuming its own
+    snapshot bitwise, and the sharded twin resuming a snapshot written
+    by the scanned twin (shared ``train-async`` family).
 
 Exits non-zero on the first mismatch; prints ``elastic parity OK`` /
 ``elastic training parity OK`` when the matrix passes.
@@ -297,12 +303,9 @@ def _check_train_resume(label, runner, tmp, base_cfg, resume_at, every,
     return ref, ck
 
 
-def _training_matrix(mesh, tmp, rounds):
+def _training_matrix(mesh, tmp, rounds, only="all"):
     from repro.configs.paper_resnet_speech import reduced
     from repro.federated import FLConfig
-    from repro.federated.async_server import run_fl_async
-    from repro.federated.server import run_fl, run_fl_scanned, \
-        run_fl_sharded
 
     def cfg(kind, **kw):
         base = dict(
@@ -314,6 +317,16 @@ def _training_matrix(mesh, tmp, rounds):
         return FLConfig(**base)
 
     every, resume_at = 3, 3
+    if only != "async":
+        _sync_training_legs(mesh, tmp, cfg, resume_at, every)
+    if only != "sync":
+        _async_training_legs(mesh, tmp, cfg, resume_at, every)
+
+
+def _sync_training_legs(mesh, tmp, cfg, resume_at, every):
+    from repro.federated.server import run_fl, run_fl_scanned, \
+        run_fl_sharded
+
     scanned_refs = {}
     for kind in ALL_KINDS:
         ref, ck = _check_train_resume(f"train scanned {kind}",
@@ -371,11 +384,37 @@ def _training_matrix(mesh, tmp, rounds):
     _assert_hist_equal("train faults host-vs-scanned", ref, host)
     print("  train faults host-vs-scanned: OK")
 
-    # async server: event carry + snapshot ring restored over two phases
-    _check_train_resume("train async eafl", run_fl_async, tmp,
-                        cfg("eafl", buffer_size=3, max_concurrency=6,
-                            staleness_power=0.5),
-                        resume_at, every)
+
+def _async_training_legs(mesh, tmp, cfg, resume_at, every):
+    from repro.federated.async_server import (run_fl_async,
+                                              run_fl_async_scanned,
+                                              run_fl_async_sharded)
+
+    # async family: the host event loop is the parity oracle; the event
+    # scan and its sharded twin must resume bitwise from their own
+    # snapshots (whole event carry — in-carry snapshot ring, event state,
+    # slot ranks — restored in one pass) and agree with the oracle
+    # index-for-index
+    async_cfg = cfg("eafl", buffer_size=3, max_concurrency=6,
+                    staleness_power=0.5)
+    aref, ack = _check_train_resume("train async-scanned eafl",
+                                    run_fl_async_scanned, tmp, async_cfg,
+                                    resume_at, every)
+    # host loop measured against the SCANNED reference: host-vs-scanned
+    # bitwise parity and host restart parity in a single leg
+    _check_train_resume("train async host eafl", run_fl_async, tmp,
+                        async_cfg, resume_at, every, ref=aref)
+    _check_train_resume("train async-sharded eafl",
+                        lambda c: run_fl_async_sharded(c, mesh=mesh), tmp,
+                        async_cfg, resume_at, every)
+    # cross-engine portability within the shared "train-async" family:
+    # sharded twin resumes the scanned twin's round-r snapshot (trimmed
+    # event state / slot ranks re-padded to this mesh)
+    resumed = run_fl_async_sharded(
+        dataclasses.replace(async_cfg, resume_from=ack), mesh=mesh)
+    _assert_hist_equal("train cross-engine async scanned->sharded", aref,
+                       resumed, float_atol=5e-4)
+    print("  train cross-engine async scanned->sharded: OK")
 
 
 def main():
@@ -387,8 +426,15 @@ def main():
     ap.add_argument("--rounds", type=int, default=8)
     ap.add_argument("--train", action="store_true",
                     help="run the end-to-end TRAINING restart-parity "
-                         "matrix (run_fl / run_fl_scanned / run_fl_sharded "
-                         "/ run_fl_async) instead of the engine-level one")
+                         "matrix (host / scanned / sharded in both "
+                         "aggregation families) instead of the "
+                         "engine-level one")
+    ap.add_argument("--only", choices=("all", "sync", "async"),
+                    default="all",
+                    help="with --train: restrict the matrix to one "
+                         "aggregation family (the async-training CI job "
+                         "runs --only async; the elastic job runs the "
+                         "full matrix)")
     args = ap.parse_args()
 
     mesh = make_client_mesh(args.devices)
@@ -397,8 +443,10 @@ def main():
     tmp = tempfile.mkdtemp(prefix="elastic_check_")
     try:
         if args.train:
-            _training_matrix(mesh, tmp, max(args.rounds, 8))
-            print(f"elastic training parity OK ({s} shards)")
+            _training_matrix(mesh, tmp, max(args.rounds, 8),
+                             only=args.only)
+            print(f"elastic training parity OK ({s} shards, "
+                  f"{args.only})")
         else:
             _engine_matrix(mesh, tmp, args.n, max(args.rounds, 6))
             print(f"elastic parity OK ({s} shards)")

@@ -196,6 +196,31 @@ class TestOptionalKnobTruthiness:
             "if cfg.energy_budget_j is not None:")
         assert lint(src, OptionalKnobTruthiness()) == []
 
+    RING_SRC = """
+        from dataclasses import dataclass
+        from typing import Optional
+
+        @dataclass
+        class FLConfig:
+            snapshot_ring_size: Optional[int] = None
+
+        def ring_capacity(cfg, max_concurrency):
+            if cfg.snapshot_ring_size:   # 0 must be rejected, not defaulted
+                return cfg.snapshot_ring_size
+            return max_concurrency
+    """
+
+    def test_fires_on_ring_size_truthiness(self):
+        fs = lint(self.RING_SRC, OptionalKnobTruthiness())
+        assert rule_ids(fs) == ["JX102"]
+        assert "snapshot_ring_size" in fs[0].message
+
+    def test_silent_on_ring_size_is_not_none(self):
+        src = self.RING_SRC.replace(
+            "if cfg.snapshot_ring_size:",
+            "if cfg.snapshot_ring_size is not None:")
+        assert lint(src, OptionalKnobTruthiness()) == []
+
     def test_project_scan_indexes_required_knobs(self):
         """Every knob in JX102_REQUIRED_KNOBS must appear in the Optional
         registry built from the real src/repro tree — a refactor that
@@ -419,6 +444,39 @@ class TestDonatedBufferReuse:
                 new_params = server_step(params, grads)
                 return new_params, grads.sum()
         """
+        assert lint(src, DonatedBufferReuse()) == []
+
+    # The async engines donate the event-step carry via the applied-partial
+    # form (``step = functools.partial(jax.jit, donate_argnums=...)(step)``)
+    # — the donor collection must see through it, or a one-line refactor of
+    # the decorator form would silently blind the rule.
+    ASYNC_DONOR_SRC = """
+        import functools, jax
+
+        def engine_step(key, astate, ring):
+            return astate, ring
+
+        engine_step = functools.partial(
+            jax.jit, donate_argnums=(1, 2))(engine_step)
+
+        def event_loop(key, astate, ring):
+            new_astate, new_ring = engine_step(key, astate, ring)
+            stale = astate.t_done
+            return new_astate, new_ring, stale
+    """
+
+    def test_fires_on_partial_applied_donor(self):
+        fs = lint(self.ASYNC_DONOR_SRC, DonatedBufferReuse())
+        assert rule_ids(fs) == ["JX106"]
+        assert "astate" in fs[0].message
+
+    def test_silent_when_partial_applied_donor_rebound(self):
+        src = self.ASYNC_DONOR_SRC.replace(
+            "new_astate, new_ring = engine_step",
+            "astate, ring = engine_step").replace(
+            "return new_astate, new_ring, stale",
+            "return astate, ring, stale").replace(
+            "stale = astate.t_done\n", "stale = 0\n")
         assert lint(src, DonatedBufferReuse()) == []
 
 

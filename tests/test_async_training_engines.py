@@ -1,0 +1,187 @@
+"""Device-resident async training engines: host run_fl_async (the
+acceptance oracle) vs the fused run_fl_async_scanned and its sharded twin.
+
+The parity contract (docs/architecture.md "Async device-resident
+training"): flush/refill/version trajectories are index-for-index
+IDENTICAL — the canonical flush order (start version, then
+selection-slot rank) is engine-independent — and on this backend the
+whole history is bitwise: version-anchored train keys, ring-snapshot
+start params and zero-weight full-width aggregation reproduce the host
+loop's compacted training exactly. In the ``buffer_size ==
+max_concurrency == k, staleness_power=0`` limit with a stat-independent
+selector the async scanned run reproduces the synchronous
+``run_fl_scanned`` learning trajectory bitwise (stat-adaptive selectors
+legitimately diverge: the async refill reads utilities one flush later
+by design). Restart parity (kill at round r, resume) is bitwise with
+the energy-budget ledger active.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs.paper_resnet_speech import reduced
+from repro.core import SelectorConfig
+from repro.federated import FLConfig, run_fl, run_fl_scanned
+from repro.federated.async_server import (run_fl_async, run_fl_async_scanned,
+                                          run_fl_async_sharded)
+
+HIST_FIELDS = ("test_acc", "train_loss", "fairness", "participation",
+               "mean_battery", "cum_dropouts", "wall_hours",
+               "round_duration", "energy_spent_j", "quarantined",
+               "update_skipped")
+TRACE_FIELDS = ("completed", "comp_chosen", "succeeded", "staleness",
+                "agg_weight", "start_version", "selected", "chosen")
+
+
+def _cfg(kind="eafl", **kw):
+    base = dict(
+        selector=SelectorConfig(kind=kind, k=4),
+        n_clients=24, rounds=6, local_steps=3, batch_size=8,
+        samples_per_client=24, eval_every=3, eval_samples=70,
+        model=reduced(), input_hw=16,
+        buffer_size=3, max_concurrency=6, staleness_power=0.5)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _assert_hist_bitwise(host, fused):
+    nh = len(host.round)
+    assert len(fused.round) == nh
+    assert host.init_acc == fused.init_acc
+    assert host.budget_exhausted_round == fused.budget_exhausted_round
+    for field in HIST_FIELDS:
+        a = np.asarray(getattr(host, field), dtype=np.float64)
+        b = np.asarray(getattr(fused, field), dtype=np.float64)
+        both_nan = np.isnan(a) & np.isnan(b)
+        assert a.shape == b.shape and np.array_equal(a[~both_nan],
+                                                     b[~both_nan]), \
+            f"{field} diverged: {a} vs {b}"
+
+
+def _assert_trace_matches(trace, traj, n_rounds):
+    """Host per-round trace vs fused trajectory, index-for-index."""
+    for r in range(n_rounds):
+        for k in TRACE_FIELDS:
+            a, b = np.asarray(trace[r][k]), np.asarray(traj[k][r])
+            assert np.array_equal(a, b), (r, k, a, b)
+        assert int(traj["server_version"][r]) == trace[r]["server_version"]
+        assert int(traj["n_inflight"][r]) == trace[r]["n_inflight"]
+
+
+@pytest.mark.parametrize("kind", ["eafl", "oort", "random", "eafl-epj"])
+def test_async_fused_matches_host_all_kinds(kind):
+    """Buffered regime (B < C): staleness is live, flushes interleave
+    versions. The acceptance bar — index-for-index event trajectories
+    AND a bitwise history."""
+    cfg = _cfg(kind)
+    trace, cap = [], {}
+    host = run_fl_async(cfg, _trace=trace)
+    fused = run_fl_async_scanned(cfg, _capture=cap)
+    _assert_trace_matches(trace, cap["traj"], len(host.round))
+    _assert_hist_bitwise(host, fused)
+
+
+def test_async_fused_matches_host_deadline_abandon():
+    """Deadline regime: stragglers are abandoned at deadline_s (they pay
+    energy, never flush as successes)."""
+    # sim knobs give physical (hundreds-of-seconds) arrival offsets so a
+    # 600 s reporting deadline actually abandons stragglers
+    cfg = _cfg("eafl", deadline_s=600.0, sim_model_bytes=85e6,
+               sim_local_steps=1600)
+    trace, cap = [], {}
+    host = run_fl_async(cfg, _trace=trace)
+    fused = run_fl_async_scanned(cfg, _capture=cap)
+    succ = np.asarray(cap["traj"]["succeeded"])
+    chosen = np.asarray(cap["traj"]["comp_chosen"])
+    assert not succ[chosen].all(), \
+        "deadline did not bite; regime not exercised"
+    _assert_trace_matches(trace, cap["traj"], len(host.round))
+    _assert_hist_bitwise(host, fused)
+
+
+def test_async_fused_matches_host_budget_and_recharge():
+    """Binding fleet budget + recharge model: the in-trace admission gate
+    must truncate exactly where the host loop's does. recharge > 0 takes
+    the host gain arithmetic through python f64, so the battery-derived
+    stats are compared to tolerance instead of bitwise."""
+    cfg = _cfg("eafl", energy_budget_j=2500.0, recharge_pct_per_hour=5.0,
+               plugged_frac=0.4)
+    trace, cap = [], {}
+    host = run_fl_async(cfg, _trace=trace)
+    fused = run_fl_async_scanned(cfg, _capture=cap)
+    assert host.budget_exhausted_round is not None
+    assert fused.budget_exhausted_round == host.budget_exhausted_round
+    _assert_trace_matches(trace, cap["traj"], len(host.round))
+    assert len(fused.round) == len(host.round)
+    for field in HIST_FIELDS:
+        a = np.asarray(getattr(host, field), dtype=np.float64)
+        b = np.asarray(getattr(fused, field), dtype=np.float64)
+        assert np.allclose(a, b, rtol=2e-5, atol=1e-6, equal_nan=True), \
+            f"{field} diverged: {a} vs {b}"
+
+
+def test_async_scanned_reproduces_sync_limit_bitwise():
+    """B == C == k, staleness_power = 0, stat-independent selector: the
+    async scanned engine IS the sync engine. Learning trajectory
+    (test_acc / train_loss), participation, dropouts and per-round
+    durations are bitwise equal to run_fl_scanned; the wall clock runs
+    through the engine's f32 server-clock chain instead of the sync
+    history's f64 cumsum, so it matches to float tolerance."""
+    base = dict(selector=SelectorConfig(kind="random", k=4),
+                n_clients=24, rounds=6, local_steps=3, batch_size=8,
+                samples_per_client=24, eval_every=3, eval_samples=70,
+                model=reduced(), input_hw=16)
+    sync = run_fl_scanned(FLConfig(**base))
+    asyn = run_fl_async_scanned(FLConfig(
+        **base, buffer_size=4, max_concurrency=4, staleness_power=0.0))
+    assert sync.init_acc == asyn.init_acc
+    for field in ("test_acc", "train_loss", "participation",
+                  "cum_dropouts", "round_duration"):
+        a = np.asarray(getattr(sync, field), dtype=np.float64)
+        b = np.asarray(getattr(asyn, field), dtype=np.float64)[:len(
+            sync.round)]
+        both_nan = np.isnan(a) & np.isnan(b)
+        assert np.array_equal(a[~both_nan], b[~both_nan]), \
+            f"{field} diverged: {a} vs {b}"
+    np.testing.assert_allclose(np.asarray(sync.wall_hours),
+                               np.asarray(asyn.wall_hours), rtol=1e-6)
+
+
+def test_async_scanned_restart_parity_with_budget(tmp_path):
+    """Kill at round 3, resume from the snapshot: bitwise identical to
+    the uninterrupted run, with the energy-budget ledger riding the
+    carry (spent joules and the exhaustion round must survive the
+    restart exactly)."""
+    ckpt = os.path.join(tmp_path, "async-r{round}.ckpt")
+    cfg = _cfg("eafl", energy_budget_j=2500.0,
+               checkpoint_path=ckpt, checkpoint_every=3)
+    full = run_fl_async_scanned(cfg)
+    resumed = run_fl_async_scanned(dataclasses.replace(
+        cfg, resume_from=ckpt.replace("{round}", "3")))
+    assert full.budget_exhausted_round is not None
+    _assert_hist_bitwise(full, resumed)
+
+
+def test_async_sharded_one_shard_is_bitwise():
+    """The sharded twin on a single shard must be the scanned engine
+    exactly — same canonical flush order, same key assignment, and the
+    one-shard psum/tensordot reduces in the same order."""
+    cfg = _cfg("eafl")
+    scanned = run_fl_async_scanned(cfg)
+    sharded = run_fl_async_sharded(cfg, n_shards=1)
+    _assert_hist_bitwise(scanned, sharded)
+
+
+def test_run_fl_auto_routes_async_to_scanned():
+    """run_fl(mode auto) with an async knob set resolves the scanned
+    engine on a single-device host and returns its trajectory."""
+    cfg = _cfg("eafl")
+    via_front_door = run_fl(cfg)
+    _assert_hist_bitwise(run_fl_async_scanned(cfg), via_front_door)
+
+
+def test_async_geometry_validation():
+    with pytest.raises(ValueError, match="snapshot_ring_size"):
+        run_fl_async_scanned(_cfg("eafl", snapshot_ring_size=2))

@@ -126,10 +126,18 @@ def test_sharded_ledger_matches_scanned_within_tolerance():
 
 
 def test_async_budget_never_exceeded():
+    """Host event loop and the device-resident event scan share one f32
+    spend chain — the ledger (and its refusal round) must agree bitwise,
+    and neither may overshoot the cap."""
+    from repro.federated.async_server import run_fl_async_scanned
     cfg = _cfg(buffer_size=3, max_concurrency=6, staleness_power=0.5,
                energy_budget_j=4000.0)
     hist = run_fl_async(cfg)
     _assert_ledger_invariants(hist, cfg.energy_budget_j)
+    fused = run_fl_async_scanned(cfg)
+    _assert_ledger_invariants(fused, cfg.energy_budget_j)
+    assert fused.energy_spent_j == hist.energy_spent_j
+    assert fused.budget_exhausted_round == hist.budget_exhausted_round
 
 
 # ------------------------------------------------- retry surcharges

@@ -207,16 +207,23 @@ def test_budget_resume_is_bitwise(tmp_path, runner):
     assert resumed.budget_exhausted_round == ref.budget_exhausted_round
 
 
-def test_training_async_resume_is_bitwise(tmp_path):
-    """The async server's carry includes the event state and the
-    refcounted snapshot ring (two-phase restore)."""
+@pytest.mark.parametrize("runner_name", ["host", "scanned"])
+def test_training_async_resume_is_bitwise(tmp_path, runner_name):
+    """Async restart parity: the checkpoint carries the whole event carry
+    — event state, refcounted in-carry snapshot ring, slot ranks —
+    restored in a single pass, for the host event loop and the fused
+    event scan alike (the sharded twin and the budget-active restart:
+    test_async_training_engines.py / elastic_check)."""
+    from repro.federated.async_server import run_fl_async_scanned
+    runner = {"host": run_fl_async, "scanned": run_fl_async_scanned}[
+        runner_name]
     cfg = _train_cfg(buffer_size=3, max_concurrency=6, staleness_power=0.5)
     path = os.path.join(tmp_path, "ck_{round}.msgpack")
-    ref = run_fl_async(cfg)
-    elastic = run_fl_async(dataclasses.replace(
+    ref = runner(cfg)
+    elastic = runner(dataclasses.replace(
         cfg, checkpoint_path=path, checkpoint_every=2))
     _assert_hist_bitwise(ref, elastic)
-    resumed = run_fl_async(dataclasses.replace(
+    resumed = runner(dataclasses.replace(
         cfg, resume_from=checkpoint_path_for(path, 2)))
     _assert_hist_bitwise(ref, resumed)
 

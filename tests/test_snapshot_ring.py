@@ -1,0 +1,167 @@
+"""Snapshot-ring refcounting fuzz: the host dict ring (_SnapshotRing,
+the executable specification) and the in-carry array ring
+(SnapshotRingState + _ring_retain/_ring_release) are driven through the
+same random FedBuff retain/release/flush traffic and cross-checked.
+
+Invariants under ANY traffic the engine can generate (flush the
+earliest min(B, in_flight) arrivals, bump the version iff something
+flushed, refill at most the freed slots at the current version):
+
+* no slot leaks — a version with zero in-flight holders is freed;
+* no live version is ever freed — refcounts never go negative;
+* ``live_versions <= max_concurrency`` always (the capacity argument
+  that makes ``snapshot_ring_size = max_concurrency`` sufficient);
+* both rings agree on the live-version set, the per-version refcounts
+  and the per-version parameter payloads;
+* the array ring's success counters match a host-side recount.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.federated.async_server import (SnapshotRingState, _SnapshotRing,
+                                          _I32_MAX, _ring_create,
+                                          _ring_release, _ring_retain)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # CI installs hypothesis via requirements-dev.txt
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        return lambda f: pytest.mark.skip(
+            reason="property tests need hypothesis "
+                   "(pip install -r requirements-dev.txt)")(f)
+
+    class settings:  # noqa: D401 - stub decorator
+        def __init__(self, *a, **k):
+            pass
+
+        def __call__(self, f):
+            return f
+
+    class st:  # minimal stub so module-level strategies still parse
+        @staticmethod
+        def integers(**k):
+            return None
+
+        @staticmethod
+        def lists(*a, **k):
+            return None
+
+        @staticmethod
+        def randoms(**k):
+            return None
+
+
+def _params_for(version: int):
+    """Tiny distinguishable payload: the ring must hand back the params
+    of exactly the requested version."""
+    return {"w": jnp.full((2,), float(version), jnp.float32)}
+
+
+def _ring_live(ring: SnapshotRingState):
+    """(version -> (refs, succ, payload_scalar)) for the array ring."""
+    v = np.asarray(ring.version)
+    refs = np.asarray(ring.refs)
+    succ = np.asarray(ring.succ)
+    w = np.asarray(ring.params["w"])
+    return {int(v[s]): (int(refs[s]), int(succ[s]), float(w[s, 0]))
+            for s in range(v.shape[0]) if v[s] >= 0}
+
+
+def _drive(seq, buffer_size, max_concurrency, rng):
+    key = jnp.zeros((2,), jnp.uint32)
+    array_ring = _ring_create(_params_for(0), max_concurrency)
+    dict_ring = _SnapshotRing()
+    in_flight = []           # one version entry per in-flight client
+    succ_count = {}          # version -> successful completions so far
+    version = 0
+
+    # initial fill mirrors init_fill: up to C clients at version 0
+    n0 = seq[0] % (max_concurrency + 1)
+    if n0 > 0:
+        array_ring = _ring_retain(array_ring, jnp.int32(version),
+                                  _params_for(version), jnp.int32(n0), key)
+        dict_ring.retain(version, _params_for(version), n0)
+        in_flight += [version] * n0
+
+    for step in seq[1:]:
+        # ---- flush the earliest min(B, n_if) arrivals ------------------
+        n_flush = min(buffer_size, len(in_flight))
+        rng.shuffle(in_flight)  # arrival order is traffic-dependent
+        flushed, in_flight = in_flight[:n_flush], in_flight[n_flush:]
+        v_eff = np.full((buffer_size,), _I32_MAX, np.int64)
+        chosen = np.zeros((buffer_size,), bool)
+        succ = np.zeros((buffer_size,), bool)
+        for i, v in enumerate(flushed):
+            v_eff[i], chosen[i] = v, True
+            succ[i] = bool(step & (1 << i))
+            if succ[i]:
+                succ_count[v] = succ_count.get(v, 0) + 1
+        array_ring = _ring_release(array_ring, jnp.asarray(v_eff, jnp.int32),
+                                   jnp.asarray(chosen), jnp.asarray(succ))
+        for v in flushed:
+            dict_ring.release(v)
+        if n_flush > 0:
+            version += 1
+            succ_count.setdefault(version, 0)
+        # ---- refill at most the freed capacity at the current version --
+        n_start = step % (max_concurrency - len(in_flight) + 1)
+        array_ring = _ring_retain(array_ring, jnp.int32(version),
+                                  _params_for(version), jnp.int32(n_start),
+                                  key)
+        if n_start > 0:
+            dict_ring.retain(version, _params_for(version), n_start)
+            in_flight += [version] * n_start
+
+        # ---- cross-check invariants ------------------------------------
+        live = _ring_live(array_ring)
+        assert len(live) <= max_concurrency, "ring overflow"
+        assert set(live) == set(dict_ring._params), \
+            f"live sets diverged: {sorted(live)} vs " \
+            f"{sorted(dict_ring._params)}"
+        expect_refs = {}
+        for v in in_flight:
+            expect_refs[v] = expect_refs.get(v, 0) + 1
+        assert set(live) == set(expect_refs), "leak or premature free"
+        for v, (refs, s, w) in live.items():
+            assert refs == expect_refs[v] == dict_ring._refs[v], \
+                f"refcount diverged at version {v}"
+            assert refs > 0, f"freed version {v} still listed live"
+            assert w == float(v), f"payload of version {v} corrupted"
+            assert s == succ_count.get(v, 0), \
+                f"success counter diverged at version {v}"
+    return version
+
+
+@settings(max_examples=60, deadline=None)
+@given(seq=st.lists(st.integers(min_value=0, max_value=2 ** 16 - 1),
+                    min_size=2, max_size=25),
+       geometry=st.integers(min_value=0, max_value=8),
+       rnd=st.randoms(use_true_random=False))
+def test_ring_fuzz_no_leaks_no_premature_free(seq, geometry, rnd):
+    buffer_size = 1 + geometry % 3
+    max_concurrency = buffer_size + geometry // 3
+    _drive(seq, buffer_size, max_concurrency, rnd)
+
+
+def test_ring_retain_zero_count_is_noop():
+    ring = _ring_create(_params_for(0), 4)
+    key = jnp.zeros((2,), jnp.uint32)
+    ring2 = _ring_retain(ring, jnp.int32(3), _params_for(3), jnp.int32(0),
+                         key)
+    assert _ring_live(ring2) == {}
+
+
+def test_ring_release_of_masked_rows_is_noop():
+    ring = _ring_create(_params_for(0), 4)
+    key = jnp.zeros((2,), jnp.uint32)
+    ring = _ring_retain(ring, jnp.int32(0), _params_for(0), jnp.int32(2),
+                        key)
+    masked = jnp.full((3,), _I32_MAX, jnp.int32)
+    ring2 = _ring_release(ring, masked, jnp.zeros((3,), bool),
+                          jnp.zeros((3,), bool))
+    assert _ring_live(ring2) == {0: (2, 0, 0.0)}

@@ -94,14 +94,18 @@ def test_resolve_train_engine():
     assert resolve_train_engine(200) == "host"  # auto keeps the reference
     for e in TRAIN_ENGINES:
         assert resolve_train_engine(200, engine=e) == e
+        # every engine name is legal in the async family too (PR 10)
+        assert resolve_train_engine(200, mode="async", engine=e) == e
     with pytest.raises(ValueError, match="unknown training engine"):
         resolve_train_engine(200, engine="turbo")
-    with pytest.raises(ValueError, match="async"):
-        resolve_train_engine(200, mode="async", engine="scanned")
+    # async "auto" upgrades to the device-resident engines
+    assert resolve_train_engine(200, 1, mode="async") == "scanned"
+    assert resolve_train_engine(200, 8, mode="async") == "sharded"
 
 
 def test_fused_rejects_async_knobs():
+    # the direct sync entry points still reject the async-only knobs;
+    # run_fl(engine="scanned") with async knobs now legitimately routes
+    # to run_fl_async_scanned instead of raising
     with pytest.raises(ValueError, match="synchronous engine"):
         run_fl_scanned(_cfg("eafl", buffer_size=3))
-    with pytest.raises(ValueError, match="async"):
-        run_fl(_cfg("eafl", max_concurrency=8), engine="scanned")
